@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timing, CSV emit, calibrated paper waveform."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+import repro.core as core
+
+_ART_ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+# prefer the optimized sweep when present (EXPERIMENTS.md §Perf)
+ART_DIR = (os.path.join(_ART_ROOT, "dryrun_v2")
+           if os.path.isdir(os.path.join(_ART_ROOT, "dryrun_v2"))
+           else os.path.join(_ART_ROOT, "dryrun"))
+
+
+def us_per_call(fn: Callable, *args, n: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(name: str, us: float, derived: Dict) -> None:
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us:.1f},{kv}")
+
+
+def paper_waveform(steps: int = 40, dt: float = 0.001,
+                   n_chips: int = 512, seed: int = 0):
+    """The Fig.-1 calibrated waveform: ~2 s iterations, ~19% comm valleys,
+    per-chip square wave between near-TDP and comm power with EDP spikes
+    and light jitter — the reference input for Figs. 5/6/7 reproductions."""
+    tl = core.synthetic_timeline(period_s=2.0, comm_frac=0.19)
+    cfg = core.WaveformConfig(dt=dt, steps=steps, jitter_s=0.002)
+    chip = core.chip_waveform(tl, cfg)
+    dc = core.aggregate(chip, n_chips, cfg, seed=seed)
+    return chip, dc, cfg
+
+
+def load_cells(mesh: str = "single") -> Dict[str, Dict]:
+    import glob
+    import json
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if "error" not in d:
+            out[f"{d['arch']}__{d['shape']}"] = d
+    return out

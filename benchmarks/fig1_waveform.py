@@ -1,0 +1,40 @@
+"""Fig. 1 — power waveform of an at-scale training job.
+
+Synthesizes the utility-point waveform for every assigned arch's train_4k
+cell from its dry-run artifact (exact FLOPs/bytes/collectives -> phase
+timeline -> watts), plus the calibrated reference waveform used by the
+Fig. 5/6/7 reproductions. Derived: swing amplitude, swing fraction, period.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import emit, load_cells, paper_waveform, us_per_call
+
+
+def main() -> None:
+    chip, dc, cfg = paper_waveform()
+    us = us_per_call(lambda: paper_waveform()[1], n=3)
+    s = core.swing_stats(dc)
+    emit("fig1/calibrated_waveform", us, {
+        "mean_mw": round(s["mean_w"] / 1e6, 3),
+        "swing_mw": round(s["swing_w"] / 1e6, 3),
+        "swing_frac": round(s["swing_frac"], 3),
+        "chips": 512})
+
+    cells = load_cells("single")
+    for key, cell in sorted(cells.items()):
+        if cell["shape"] != "train_4k":
+            continue
+        res = core.simulate_cell(cell, steps=12, dt=0.002)
+        tl = core.from_dryrun_cell(cell)
+        emit(f"fig1/{cell['arch']}", 0.0, {
+            "period_s": round(tl.period_s, 3),
+            "mean_mw": round(res.swing["mean_w"] / 1e6, 4),
+            "swing_mw": round(res.swing["swing_w"] / 1e6, 4),
+            "swing_frac": round(res.swing["swing_frac"], 3)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Fig. 2 — server power breakdown (accelerators >50% of server power)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.hardware import DEFAULT_HW
+
+
+def main() -> None:
+    hw = DEFAULT_HW
+    chip = hw.chip.tdp_w
+    host = hw.server.overhead_per_chip_w()
+    total = chip + host
+    emit("fig2/server_breakdown", 0.0, {
+        "chip_w": chip,
+        "host_overhead_per_chip_w": round(host, 1),
+        "chip_share": round(hw.chip_share(), 3),
+        "claim_gt_50pct": hw.chip_share() > 0.5})
+    # dynamic vs static split: only the chip share swings with the job
+    swing_visible = (chip - hw.chip.comm_w) / total
+    emit("fig2/swing_share_of_server", 0.0, {
+        "swing_fraction_of_provisioned": round(swing_visible, 3)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks (Sec. IV-A ballast / IV-E backstop hot paths).
+
+CPU wall times are for harness completeness only — TPU throughput is
+derived from the FLOP/byte model printed alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, us_per_call
+from repro.kernels.ballast.ops import ballast_burn, ballast_flops
+from repro.kernels.ballast.ref import ballast_ref
+from repro.kernels.goertzel.ref import goertzel_ref
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # ballast: arithmetic intensity at m=1024,k=n=256, 64 iters
+    m, k, n, it = 1024, 256, 256, 64
+    fl = ballast_flops(m, k, n, it)
+    hbm_bytes = (m * k + k * n + m * n) * 4  # one round-trip of the tiles
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = (jnp.eye(k) * 0.999).astype(jnp.float32)
+    f = jax.jit(lambda a, b: ballast_ref(a, b, it))
+    f(a, b).block_until_ready()
+    us = us_per_call(lambda: f(a, b).block_until_ready(), n=5)
+    emit("kernels/ballast_ref", us, {
+        "gflops_per_call": round(fl / 1e9, 2),
+        "arith_intensity_flops_per_byte": round(fl / hbm_bytes, 1),
+        "tpu_mxu_bound_us": round(fl / 197e12 * 1e6, 2)})
+
+    # goertzel: 8 windows x 1024 samples x 4 bins
+    wnd = jax.random.normal(key, (8, 1024))
+    coef = 2.0 * jnp.cos(2 * jnp.pi * jnp.array([0.5, 1.0, 2.0, 9.0]) * 0.001)
+    g = jax.jit(goertzel_ref)
+    g(wnd, coef).block_until_ready()
+    us = us_per_call(lambda: g(wnd, coef).block_until_ready(), n=5)
+    ops = 8 * 1024 * 4 * 4  # 4 madds per sample per bin
+    emit("kernels/goertzel_ref", us, {
+        "ops_per_call": ops,
+        "bins": 4, "window": 1024,
+        "vs_full_fft_ops_ratio": round(ops / (8 * 1024 * np.log2(1024) * 5), 3)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / (chips * 197e12)            [s/step]
+  memory term     = HLO_bytes / (chips * 819e9)             [s/step]
+  collective term = per-chip collective bytes / 50e9        [s/step]
+(FLOPs/bytes are the jaxpr-exact global counts — launch/hlo_analysis.py —
+divided per chip; collective bytes come from the partitioned HLO with
+while-loop trip multipliers, already per chip.)
+
+Also: MODEL_FLOPS (6*N*D train / 2*N_active*tokens inference), the
+useful-compute ratio MODEL_FLOPS/HLO_FLOPS, the dominant term, a roofline
+fraction (useful compute time / dominant term = the score), and a
+suggestion for the dominant bottleneck. Emits CSV + artifacts/roofline.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from benchmarks.common import emit, load_cells
+from repro.configs import get_config
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+SUGGEST = {
+    "compute": ("cut non-useful FLOPs: triangular-chunk attention schedule, "
+                "remat policy 'dots' instead of 'full'"),
+    "memory": ("raise arithmetic intensity: larger microbatch per pass, fuse "
+               "loss chunks, widen attention KV chunks"),
+    "collective": ("reshard: sequence-parallel activations to turn TP "
+                   "all-reduces into reduce-scatter+all-gather; overlap "
+                   "grad reduce with ballast/compute; int8 grad compression"),
+}
+
+
+def model_flops(cell: Dict) -> float:
+    cfg = get_config(cell["arch"])
+    n_act = cell["active_params"]
+    if cell["kind"] == "train":
+        tokens = 4096 * 256
+        return 6.0 * n_act * tokens
+    if cell["kind"] == "prefill":
+        tokens = 32768 * 32
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    bsz = {"decode_32k": 128, "long_500k": 1}[cell["shape"]]
+    return 2.0 * n_act * bsz
+
+
+def analyze(cell: Dict) -> Dict:
+    chips = cell["n_chips"]
+    t_comp = cell["exact"]["flops"] / chips / PEAK
+    t_mem = cell["exact"]["bytes"] / chips / HBM
+    coll = sum(cell.get("collectives", {}).values())
+    t_coll = coll / LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cell)
+    useful_t = mf / chips / PEAK
+    frac = useful_t / max(terms[dom], 1e-30)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "kind": cell["kind"], "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / cell["exact"]["flops"],
+        "roofline_fraction": frac,
+        "hbm_state_gb": cell["memory"]["state_bytes_per_device"] / 1e9,
+        "suggestion": SUGGEST[dom],
+    }
+
+
+def main() -> None:
+    rows = []
+    for mesh in ("single", "multi"):
+        for key, cell in sorted(load_cells(mesh).items()):
+            r = analyze(cell)
+            rows.append(r)
+            if mesh == "single":  # the roofline table is single-pod only
+                emit(f"roofline/{key}", 0.0, {
+                    "comp_s": f"{r['t_compute_s']:.4f}",
+                    "mem_s": f"{r['t_memory_s']:.4f}",
+                    "coll_s": f"{r['t_collective_s']:.4f}",
+                    "dom": r["dominant"],
+                    "useful": f"{r['useful_ratio']:.3f}",
+                    "roofline_frac": f"{r['roofline_fraction']:.3f}"})
+    out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    emit("roofline/written", 0.0, {"cells": len(rows), "path": out})
+
+
+if __name__ == "__main__":
+    main()

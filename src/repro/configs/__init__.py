@@ -1,0 +1,50 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (AttentionConfig, LayerSpec, MLAConfig,
+                                MambaConfig, ModelConfig, MoEConfig,
+                                RWKVConfig, ShapeConfig, TrainConfig,
+                                VisionStubConfig, LM_SHAPES, reduced,
+                                shapes_for)
+
+_MODULES: Dict[str, str] = {
+    "granite-3-8b": "granite_3_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "minitron-4b": "minitron_4b",
+    "musicgen-medium": "musicgen_medium",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "dbrx-132b": "dbrx_132b",
+    "jamba-v0.1-52b": "jamba_v0_1",
+    "rwkv6-3b": "rwkv6_3b",
+    "llama-3.2-vision-11b": "llama3_2_vision_11b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    cfg: ModelConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+__all__ = [
+    "ARCH_IDS", "get_config", "get_shape", "reduced", "shapes_for",
+    "ModelConfig", "ShapeConfig", "TrainConfig", "LayerSpec",
+    "AttentionConfig", "MLAConfig", "MoEConfig", "MambaConfig", "RWKVConfig",
+    "VisionStubConfig", "LM_SHAPES",
+]

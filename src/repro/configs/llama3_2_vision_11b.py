@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b — cross-attention image layers. [hf:meta-llama/...-Vision]
+
+Vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (n_tokens x 7680). Repeating unit of 5 layers:
+1 gated cross-attention + 4 self-attention, x8 = 40 layers / 8 xattn.
+"""
+from repro.configs.base import (AttentionConfig, LayerSpec, ModelConfig,
+                                VisionStubConfig)
+
+_UNIT = (LayerSpec("xattn", "dense"),) + (LayerSpec("attn", "dense"),) * 4
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    d_model=4096,
+    vocab_size=128256,
+    d_ff=14336,
+    mlp_kind="swiglu",
+    unit=_UNIT,
+    n_repeats=8,
+    attention=AttentionConfig(n_heads=32, n_kv_heads=8, head_dim=128,
+                              rope_theta=500_000.0),
+    vision=VisionStubConfig(n_tokens=1601, dim=7680),
+    param_dtype="float32",
+    loss_chunk=512,
+)

@@ -1,0 +1,22 @@
+"""musicgen-medium — decoder-only over EnCodec tokens. [arXiv:2306.05284]
+
+Per the assignment, only the transformer BACKBONE is modeled; the EnCodec
+modality frontend is a STUB: ``input_specs()`` provides precomputed frame
+embeddings (input_mode="embeddings"), and the head predicts one codebook of
+2048 entries (the 4-codebook delay pattern lives in the stubbed frontend).
+"""
+from repro.configs.base import AttentionConfig, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    d_model=1536,
+    vocab_size=2048,
+    d_ff=6144,
+    mlp_kind="gelu",
+    unit=(LayerSpec("attn", "dense"),),
+    n_repeats=48,
+    attention=AttentionConfig(n_heads=24, n_kv_heads=24, head_dim=64),
+    input_mode="embeddings",
+    param_dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""nemotron-4-340b — dense GQA, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.configs.base import AttentionConfig, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    d_model=18432,
+    vocab_size=256000,
+    d_ff=73728,
+    mlp_kind="sq_relu",
+    unit=(LayerSpec("attn", "dense"),),
+    n_repeats=96,
+    attention=AttentionConfig(n_heads=96, n_kv_heads=8, head_dim=192),
+    param_dtype="bfloat16",  # 340B: bf16 params + bf16 moments to fit v5e HBM
+    loss_chunk=256,
+)

@@ -1,0 +1,16 @@
+"""qwen1.5-110b — dense GQA with QKV bias. [hf:Qwen/Qwen1.5-0.5B]"""
+from repro.configs.base import AttentionConfig, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    d_model=8192,
+    vocab_size=152064,
+    d_ff=49152,
+    mlp_kind="swiglu",
+    unit=(LayerSpec("attn", "dense"),),
+    n_repeats=80,
+    attention=AttentionConfig(n_heads=64, n_kv_heads=8, head_dim=128, qkv_bias=True),
+    param_dtype="bfloat16",
+    loss_chunk=512,
+)

@@ -1,0 +1,117 @@
+"""Phase-timeline extraction: compiled-step costs -> per-iteration phases.
+
+This is the bridge between the ML framework and the power domain. The same
+dry-run artifact that feeds the roofline table (exact FLOPs / bytes /
+collective bytes per chip per step, launch/dryrun.py) determines how long
+each chip spends compute-bound vs. communication-bound per iteration — which
+is precisely the power square wave of the paper's Fig. 1.
+
+A timeline is a list of Phase(name, duration_s, util) where util is the
+power *mode* of the chip during that phase; waveform.py maps modes to watts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.hardware import DEFAULT_HW, Hardware
+
+# power modes
+COMPUTE, MEMORY, COMM, IDLE, CKPT = "compute", "memory", "comm", "idle", "ckpt"
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    name: str
+    duration_s: float
+    mode: str  # compute | memory | comm | idle | ckpt
+
+
+@dataclasses.dataclass(frozen=True)
+class IterationTimeline:
+    phases: Sequence[Phase]
+
+    @property
+    def period_s(self) -> float:
+        return sum(p.duration_s for p in self.phases)
+
+    def scaled(self, factor: float) -> "IterationTimeline":
+        return IterationTimeline(tuple(
+            dataclasses.replace(p, duration_s=p.duration_s * factor)
+            for p in self.phases))
+
+
+def from_dryrun_cell(cell: Dict, hw: Hardware = DEFAULT_HW, *,
+                     overlap: float = 0.0,
+                     mfu: float = 0.5) -> IterationTimeline:
+    """Build a per-iteration timeline from a dry-run artifact dict.
+
+    overlap: fraction of collective time hidden under compute (the paper's
+             "techniques for overlapping communication and computation ...
+             most workloads retain a significant synchronization step").
+    mfu:     achieved fraction of peak FLOPs during compute phases.
+    """
+    chips = cell["n_chips"]
+    flops_per_chip = cell["exact"]["flops"] / chips
+    bytes_per_chip = cell["exact"]["bytes"] / chips
+    coll = cell.get("collectives", {})
+    coll_bytes = sum(coll.values())  # already per-chip
+
+    t_flops = flops_per_chip / (hw.chip.peak_flops_bf16 * mfu)
+    t_mem = bytes_per_chip / hw.chip.hbm_bw
+    t_comm = coll_bytes / (hw.chip.ici_bw_per_link * hw.chip.ici_links)
+
+    compute_mode = COMPUTE if t_flops >= t_mem else MEMORY
+    t_compute = max(t_flops, t_mem)
+    t_exposed = t_comm * (1.0 - overlap)
+
+    # MoE all-to-all manifests as a mid-iteration comm notch; attention/FSDP
+    # gathers overlap with compute. Split exposed comm: the gradient
+    # all-reduce/reduce-scatter tail + a dispatch notch when present.
+    a2a = coll.get("all-to-all", 0.0) * (1.0 - overlap)
+    t_a2a = a2a / (hw.chip.ici_bw_per_link * hw.chip.ici_links)
+    t_tail = max(t_exposed - t_a2a, 0.0)
+
+    phases: List[Phase] = []
+    if t_a2a > 0:
+        phases.append(Phase("fwd", t_compute * 0.33, compute_mode))
+        phases.append(Phase("moe-a2a", t_a2a, COMM))
+        phases.append(Phase("bwd", t_compute * 0.67, compute_mode))
+    else:
+        phases.append(Phase("fwd+bwd", t_compute, compute_mode))
+    phases.append(Phase("grad-sync", max(t_tail, 1e-4), COMM))
+    return IterationTimeline(tuple(phases))
+
+
+def checkpoint_phase(cell: Dict, hw: Hardware = DEFAULT_HW,
+                     storage_bw_per_chip: float = 1e9) -> Phase:
+    """Periodic checkpoint write: chips near-idle while state drains."""
+    state_bytes = cell.get("memory", {}).get("state_bytes_per_device", 8e9)
+    return Phase("checkpoint", state_bytes / storage_bw_per_chip, CKPT)
+
+
+def load_cell(path_or_dir: str, arch: str = "", shape: str = "",
+              mesh: str = "single") -> Dict:
+    p = path_or_dir
+    if os.path.isdir(path_or_dir):
+        p = os.path.join(path_or_dir, f"{arch}__{shape}__{mesh}.json")
+    with open(p) as f:
+        return json.load(f)
+
+
+def synthetic_timeline(period_s: float = 1.0, comm_frac: float = 0.25,
+                       moe_notch: bool = False) -> IterationTimeline:
+    """Fig.1-like timeline without a dry-run artifact (tests/benches)."""
+    tc = period_s * (1 - comm_frac)
+    phases = []
+    if moe_notch:
+        phases += [Phase("fwd", tc * 0.33, COMPUTE),
+                   Phase("moe-a2a", period_s * comm_frac * 0.3, COMM),
+                   Phase("bwd", tc * 0.67, COMPUTE),
+                   Phase("grad-sync", period_s * comm_frac * 0.7, COMM)]
+    else:
+        phases += [Phase("fwd+bwd", tc, COMPUTE),
+                   Phase("grad-sync", period_s * comm_frac, COMM)]
+    return IterationTimeline(tuple(phases))

@@ -1,0 +1,6 @@
+from repro.core.smoothing.base import Mitigation, Stack, energy_overhead
+from repro.core.smoothing.gpu_floor import GpuPowerSmoothing
+from repro.core.smoothing.battery import RackBattery
+from repro.core.smoothing.firefly import Firefly
+from repro.core.smoothing.combined import CombinedMitigation, design_mitigation
+from repro.core.smoothing.backstop import TelemetryBackstop

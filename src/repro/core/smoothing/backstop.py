@@ -1,0 +1,81 @@
+"""Fast telemetry-based backstop (paper Sec. IV-E).
+
+Streams the datacenter waveform through per-bin spectral monitors
+(Goertzel resonators over a sliding window — the Pallas hot path lives in
+kernels/goertzel) and escalates through tiered responses when a critical
+bin's amplitude stays above threshold:
+
+  level 0  observe
+  level 1  soft throttle   (scale the AC component of the load by alpha1)
+  level 2  power shed      (cap total power at shed_cap)
+  level 3  disconnect      (drop to idle floor; coordinated breaker action)
+
+De-escalation happens after the bin amplitude stays below threshold for
+``cooldown_s``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels.goertzel.ref import sliding_bin_power_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryBackstop:
+    critical_hz: Sequence[float] = (0.5, 1.0, 2.0, 9.0)
+    window_s: float = 8.0
+    amp_threshold_w: float = 1e6            # per-bin amplitude trigger
+    sustain_s: float = 2.0                  # must persist before escalation
+    cooldown_s: float = 4.0
+    alpha1: float = 0.5                     # level-1 AC attenuation
+    shed_frac: float = 0.7                  # level-2 cap (fraction of mean)
+    idle_frac: float = 0.2                  # level-3 floor
+
+    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+        n = len(w)
+        win = max(int(self.window_s / dt), 8)
+        amps = sliding_bin_power_ref(
+            np.asarray(w, np.float64), dt, np.asarray(self.critical_hz), win)
+        worst = amps.max(axis=1)  # [n]
+
+        sustain_n = max(int(self.sustain_s / dt), 1)
+        cool_n = max(int(self.cooldown_s / dt), 1)
+        level = 0
+        above = below = 0
+        levels = np.zeros(n, np.int8)
+        detect_idx = -1
+        for i in range(n):
+            if worst[i] > self.amp_threshold_w:
+                above += 1
+                below = 0
+                if above >= sustain_n and level < 3:
+                    level += 1
+                    above = 0
+                    if detect_idx < 0:
+                        detect_idx = i
+            else:
+                below += 1
+                above = 0
+                if below >= cool_n and level > 0:
+                    level -= 1
+                    below = 0
+            levels[i] = level
+
+        mean = float(w.mean())
+        out = w.copy()
+        l1 = levels == 1
+        out[l1] = mean + self.alpha1 * (w[l1] - mean)
+        l2 = levels == 2
+        out[l2] = np.minimum(w[l2], self.shed_frac * mean)
+        l3 = levels == 3
+        out[l3] = self.idle_frac * mean
+        aux = {
+            "max_level": int(levels.max()),
+            "detect_latency_s": float(detect_idx * dt) if detect_idx >= 0 else -1.0,
+            "levels": levels,
+            "worst_bin_amp": worst,
+        }
+        return out, aux

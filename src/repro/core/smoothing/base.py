@@ -1,0 +1,34 @@
+"""Mitigation interface: a transform on sampled power waveforms.
+
+``apply(w, dt)`` consumes the power the load *wants* to draw and returns
+the power the upstream level *sees*, plus an aux dict (state traces,
+overheads). Mitigations compose with ``Stack`` in load->utility order.
+"""
+from __future__ import annotations
+
+from typing import Dict, Protocol, Sequence, Tuple
+
+import numpy as np
+
+
+class Mitigation(Protocol):
+    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+        ...
+
+
+class Stack:
+    def __init__(self, stages: Sequence[Mitigation]):
+        self.stages = list(stages)
+
+    def apply(self, w: np.ndarray, dt: float):
+        aux_all: Dict = {}
+        for i, s in enumerate(self.stages):
+            w, aux = s.apply(w, dt)
+            aux_all[f"{i}:{type(s).__name__}"] = aux
+        return w, aux_all
+
+
+def energy_overhead(w_in: np.ndarray, w_out: np.ndarray) -> float:
+    """(E_out - E_in) / E_in — the paper's 'wasted energy' metric."""
+    e_in = float(np.sum(w_in))
+    return (float(np.sum(w_out)) - e_in) / max(e_in, 1e-12)

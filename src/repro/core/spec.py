@@ -1,0 +1,115 @@
+"""Utility specifications (paper Sec. III) and compliance validation.
+
+Time-domain: ramp-up / ramp-down rate limits (W/s) and a dynamic power
+range (max deviation within a sliding window) — Fig. 4. Frequency-domain:
+a critical band and a cap on the fraction of AC spectral energy inside it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.spectrum import band_amplitude_w, band_energy_fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeDomainSpec:
+    ramp_up_w_per_s: float
+    ramp_down_w_per_s: float
+    dynamic_range_w: float          # allowed peak-to-trough in window
+    window_s: float = 1.0
+    # ramp measurement granularity: utilities meter over >= this interval,
+    # so single-sample dP/dt is averaged over ramp_window_s first
+    ramp_window_s: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class FrequencyDomainSpec:
+    band_hz: Tuple[float, float] = (0.1, 20.0)
+    max_energy_fraction: float = 0.2
+    max_bin_amplitude_w: Optional[float] = None
+    # the fraction cap only applies when the AC component is material:
+    # a flat load with microscopic residual wobble is compliant even if
+    # 100% of that wobble sits in-band
+    min_ac_rms_frac: float = 0.005
+
+
+@dataclasses.dataclass(frozen=True)
+class UtilitySpec:
+    name: str
+    time: TimeDomainSpec
+    freq: FrequencyDomainSpec
+
+    def validate(self, w: np.ndarray, dt: float) -> "SpecReport":
+        v: List[str] = []
+        m: Dict[str, float] = {}
+        # ---- ramps (averaged over the metering window)
+        k = max(int(self.time.ramp_window_s / dt), 1)
+        if len(w) > k:
+            box = np.convolve(w, np.ones(k) / k, mode="valid")
+            dp = np.diff(box) / dt
+            m["max_ramp_up_w_per_s"] = float(dp.max(initial=0.0))
+            m["max_ramp_down_w_per_s"] = float(-dp.min(initial=0.0))
+            if m["max_ramp_up_w_per_s"] > self.time.ramp_up_w_per_s:
+                v.append("ramp_up")
+            if m["max_ramp_down_w_per_s"] > self.time.ramp_down_w_per_s:
+                v.append("ramp_down")
+        # ---- dynamic range in sliding window
+        n = max(int(self.time.window_s / dt), 2)
+        if len(w) >= n:
+            # stride for O(len) estimate
+            stride = max(n // 8, 1)
+            rng = 0.0
+            for i in range(0, len(w) - n, stride):
+                seg = w[i:i + n]
+                rng = max(rng, float(seg.max() - seg.min()))
+            m["dynamic_range_w"] = rng
+            if rng > self.time.dynamic_range_w:
+                v.append("dynamic_range")
+        # ---- frequency domain
+        f_lo, f_hi = self.freq.band_hz
+        frac = band_energy_fraction(w, dt, f_lo, f_hi)
+        m["band_energy_fraction"] = frac
+        ac_rms = float(np.std(w))
+        m["ac_rms_frac"] = ac_rms / max(float(np.mean(w)), 1e-9)
+        material = m["ac_rms_frac"] >= self.freq.min_ac_rms_frac
+        if material and frac > self.freq.max_energy_fraction:
+            v.append("band_energy")
+        if self.freq.max_bin_amplitude_w is not None:
+            amp = band_amplitude_w(w, dt, f_lo, f_hi)
+            m["band_bin_amplitude_w"] = amp
+            if amp > self.freq.max_bin_amplitude_w:
+                v.append("band_amplitude")
+        return SpecReport(ok=not v, violations=tuple(v), metrics=m)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecReport:
+    ok: bool
+    violations: Tuple[str, ...]
+    metrics: Dict[str, float]
+
+
+def example_specs(job_mw: float) -> Dict[str, UtilitySpec]:
+    """Representative specs at job scale (paper: '10 MW dynamic range on a
+    100 MW job' is the tight case GPU smoothing alone cannot meet)."""
+    P = job_mw * 1e6
+    return {
+        "lenient": UtilitySpec(
+            "lenient",
+            TimeDomainSpec(ramp_up_w_per_s=0.10 * P, ramp_down_w_per_s=0.10 * P,
+                           dynamic_range_w=0.40 * P),
+            FrequencyDomainSpec((0.1, 20.0), 0.5)),
+        "moderate": UtilitySpec(
+            "moderate",
+            TimeDomainSpec(ramp_up_w_per_s=0.05 * P, ramp_down_w_per_s=0.05 * P,
+                           dynamic_range_w=0.20 * P),
+            FrequencyDomainSpec((0.1, 20.0), 0.2)),
+        "tight": UtilitySpec(
+            "tight",
+            TimeDomainSpec(ramp_up_w_per_s=0.02 * P, ramp_down_w_per_s=0.02 * P,
+                           dynamic_range_w=0.10 * P),
+            FrequencyDomainSpec((0.1, 20.0), 0.1)),
+    }

@@ -1,0 +1,60 @@
+"""Frequency-domain analysis of power waveforms (paper Fig. 3, Sec. III).
+
+All routines are plain numpy (analysis-side); the *streaming* per-bin
+monitor used by the backstop lives in kernels/goertzel (Pallas) with its
+jnp oracle in kernels/goertzel/ref.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def spectrum(x: np.ndarray, dt: float) -> Tuple[np.ndarray, np.ndarray]:
+    """One-sided amplitude spectrum of the AC component."""
+    x = np.asarray(x, np.float64)
+    xac = x - x.mean()
+    n = len(xac)
+    mag = np.abs(np.fft.rfft(xac * np.hanning(n))) * 2.0 / n
+    freqs = np.fft.rfftfreq(n, dt)
+    return freqs, mag
+
+
+def band_energy_fraction(x: np.ndarray, dt: float,
+                         f_lo: float, f_hi: float) -> float:
+    """Fraction of total AC spectral energy inside [f_lo, f_hi]."""
+    freqs, mag = spectrum(x, dt)
+    e = mag ** 2
+    tot = e[1:].sum()
+    if tot <= 0:
+        return 0.0
+    sel = (freqs >= f_lo) & (freqs <= f_hi)
+    sel[0] = False  # DC is not part of the AC energy budget
+    return float(e[sel].sum() / tot)
+
+
+def dominant_frequency(x: np.ndarray, dt: float) -> float:
+    freqs, mag = spectrum(x, dt)
+    if len(mag) < 2:
+        return 0.0
+    return float(freqs[1:][np.argmax(mag[1:])])
+
+
+def band_amplitude_w(x: np.ndarray, dt: float, f_lo: float, f_hi: float) -> float:
+    """Peak single-bin amplitude (watts) inside the critical band."""
+    freqs, mag = spectrum(x, dt)
+    sel = (freqs >= f_lo) & (freqs <= f_hi)
+    return float(mag[sel].max()) if sel.any() else 0.0
+
+
+def critical_band_report(x: np.ndarray, dt: float) -> Dict[str, float]:
+    """The paper's bands: <1 Hz (inter-area), 1-2.5 Hz (plant coupling),
+    7-100 Hz (shaft torsional)."""
+    return {
+        "sub_1hz": band_energy_fraction(x, dt, 0.05, 1.0),
+        "plant_1_2p5hz": band_energy_fraction(x, dt, 1.0, 2.5),
+        "torsional_7_100hz": band_energy_fraction(x, dt, 7.0, 100.0),
+        "paper_band_0p2_3hz": band_energy_fraction(x, dt, 0.2, 3.0),
+        "dominant_hz": dominant_frequency(x, dt),
+    }

@@ -1,0 +1,91 @@
+"""StratoSim analogue: end-to-end datacenter power simulation.
+
+Pipeline (mirrors how the paper evaluates every mitigation 'on the real
+waveform from Figure 1' before deployment):
+
+  dry-run artifact -> phase timeline -> chip waveform -> device-level
+  mitigation (GPU floor / Firefly) -> rack aggregation (+ rack battery)
+  -> datacenter waveform (+ jitter, distribution loss) -> utility spec
+  validation + frequency report (+ optional backstop).
+
+``simulate`` is the single entry point used by benchmarks, tests and the
+power_stabilization_demo example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.hardware import DEFAULT_HW, Hardware
+from repro.core.phases import IterationTimeline, from_dryrun_cell, synthetic_timeline
+from repro.core.smoothing.base import Mitigation, energy_overhead
+from repro.core.spec import SpecReport, UtilitySpec
+from repro.core.spectrum import critical_band_report
+from repro.core.waveform import WaveformConfig, aggregate, chip_waveform, swing_stats
+
+
+@dataclasses.dataclass
+class SimResult:
+    t: np.ndarray
+    dc_raw: np.ndarray              # utility-point waveform, no mitigation
+    dc_mitigated: np.ndarray
+    chip_raw: np.ndarray
+    chip_mitigated: Optional[np.ndarray]
+    energy_overhead: float
+    swing: Dict[str, float]
+    swing_mitigated: Dict[str, float]
+    bands: Dict[str, float]
+    bands_mitigated: Dict[str, float]
+    spec_report: Optional[SpecReport]
+    aux: Dict
+
+
+def simulate(timeline: IterationTimeline, n_chips: int,
+             wave_cfg: Optional[WaveformConfig] = None,
+             *, device_mitigation: Optional[Mitigation] = None,
+             rack_mitigation: Optional[Mitigation] = None,
+             spec: Optional[UtilitySpec] = None,
+             hw: Hardware = DEFAULT_HW, seed: int = 0) -> SimResult:
+    cfg = wave_cfg or WaveformConfig()
+    aux: Dict = {}
+
+    chip = chip_waveform(timeline, cfg, hw)
+    dc_raw = aggregate(chip, n_chips, cfg, hw, seed=seed)
+
+    chip_m = None
+    if device_mitigation is not None:
+        chip_m, aux_d = device_mitigation.apply(chip, cfg.dt)
+        aux["device"] = aux_d
+        dc = aggregate(chip_m, n_chips, cfg, hw, seed=seed)
+    else:
+        dc = dc_raw
+
+    if rack_mitigation is not None:
+        dc, aux_r = rack_mitigation.apply(dc, cfg.dt)
+        aux["rack"] = aux_r
+
+    report = spec.validate(dc, cfg.dt) if spec is not None else None
+    t = np.arange(len(dc)) * cfg.dt
+    return SimResult(
+        t=t, dc_raw=dc_raw, dc_mitigated=dc,
+        chip_raw=chip, chip_mitigated=chip_m,
+        energy_overhead=energy_overhead(dc_raw, dc),
+        swing=swing_stats(dc_raw), swing_mitigated=swing_stats(dc),
+        bands=critical_band_report(dc_raw, cfg.dt),
+        bands_mitigated=critical_band_report(dc, cfg.dt),
+        spec_report=report, aux=aux)
+
+
+def simulate_cell(cell: Dict, *, steps: int = 30, dt: float = 0.001,
+                  overlap: float = 0.0, mfu: float = 0.5,
+                  device_mitigation=None, rack_mitigation=None,
+                  spec=None, hw: Hardware = DEFAULT_HW,
+                  jitter_s: float = 0.002) -> SimResult:
+    """Simulate straight from a launch/dryrun.py artifact dict."""
+    tl = from_dryrun_cell(cell, hw, overlap=overlap, mfu=mfu)
+    cfg = WaveformConfig(dt=dt, steps=steps, jitter_s=jitter_s)
+    return simulate(tl, cell["n_chips"], cfg,
+                    device_mitigation=device_mitigation,
+                    rack_mitigation=rack_mitigation, spec=spec, hw=hw)

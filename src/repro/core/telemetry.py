@@ -1,0 +1,39 @@
+"""In-band power/activity telemetry emulation (paper Sec. IV-A Monitoring).
+
+Datacenter GPUs expose instantaneous/averaged power at 1-100 ms minimum
+latency depending on counter reliability; the controllers consume this
+class so the latency/period trade-off is first-class in every simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySource:
+    period_s: float = 0.001     # sampling period (1 ms fast counters)
+    latency_s: float = 0.002    # read-out latency
+    noise_w: float = 0.0
+    quantization_w: float = 1.0
+    averaged: bool = False      # True = boxcar average over period
+
+    def measure(self, w: np.ndarray, dt: float, seed: int = 0) -> np.ndarray:
+        """Sampled+delayed view of true power w (same length, ZOH)."""
+        n = len(w)
+        k = max(int(round(self.period_s / dt)), 1)
+        lag = int(round(self.latency_s / dt))
+        if self.averaged and k > 1:
+            kernel = np.ones(k) / k
+            base = np.convolve(w, kernel, mode="full")[:n]
+        else:
+            base = w
+        idx = (np.arange(n) // k) * k          # zero-order hold at samples
+        m = base[np.clip(idx - lag, 0, n - 1)]
+        if self.noise_w > 0:
+            rng = np.random.default_rng(seed)
+            m = m + rng.normal(0.0, self.noise_w, size=n)
+        if self.quantization_w > 0:
+            m = np.round(m / self.quantization_w) * self.quantization_w
+        return m

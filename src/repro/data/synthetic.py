@@ -1,0 +1,53 @@
+"""Deterministic, seekable synthetic LM data pipeline.
+
+Batches are a pure function of (seed, step) — Philox counter-based — so a
+job restarted from a checkpoint at step k reproduces the exact token stream
+(bitwise restart guarantee, tested in tests/test_ckpt.py). Shard-aware:
+``host_slice`` restricts generation to this host's rows of the global batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    host_slice: Optional[Tuple[int, int]] = None  # (start_row, rows)
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.Generator(np.random.Philox(key=self.seed, counter=step))
+
+    def __call__(self, step: int):
+        rng = self._rng(step)
+        b0, rows = self.host_slice or (0, self.batch)
+        # generate the full global batch deterministically, slice this host
+        toks = rng.integers(0, self.cfg.vocab_size,
+                            size=(self.batch, self.seq + 1), dtype=np.int32)
+        # structure: make it learnable (periodic patterns + noise)
+        period = 1 + (np.arange(self.batch) % 7)
+        base = (np.arange(self.seq + 1)[None, :] // period[:, None]) % self.cfg.vocab_size
+        mask = rng.random((self.batch, self.seq + 1)) < 0.85
+        toks = np.where(mask, base.astype(np.int32), toks)
+        toks = toks[b0:b0 + rows]
+        out = {"labels": toks[:, 1:].copy()}
+        if self.cfg.input_mode == "tokens":
+            out["tokens"] = toks[:, :-1].copy()
+        else:
+            emb_rng = self._rng(step + 1_000_000_007)
+            out["inputs"] = emb_rng.standard_normal(
+                (rows, self.seq, self.cfg.d_model), dtype=np.float32)
+        if self.cfg.vision is not None:
+            v_rng = self._rng(step + 2_000_000_011)
+            out["vision_embeds"] = v_rng.standard_normal(
+                (rows, self.cfg.vision.n_tokens, self.cfg.vision.dim),
+                dtype=np.float32)
+        return out

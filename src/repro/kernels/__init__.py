@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots:
+
+  ballast/   — Firefly's secondary workload: a VMEM-resident GEMM burner
+               with a tunable FLOP/byte intensity knob (TPU adaptation: the
+               burner must load the MXU *without* stealing HBM bandwidth
+               from the primary workload, so tiles are pinned in VMEM).
+  goertzel/  — the telemetry backstop's streaming FFT-bin monitor
+               (per-window Goertzel resonators over critical frequencies).
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode against the oracle.
+"""

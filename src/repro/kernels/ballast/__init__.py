@@ -1,0 +1,1 @@
+from repro.kernels.ballast.ops import ballast_burn, ballast_flops

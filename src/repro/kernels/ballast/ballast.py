@@ -1,0 +1,56 @@
+"""Ballast GEMM burner kernel (Firefly's secondary workload, TPU-native).
+
+Each grid cell pins an (bm x bk) activation tile and a (bk x bn) weight
+tile in VMEM and iterates C <- (C @ B) * decay on the MXU ``n_iter`` times.
+Arithmetic intensity = n_iter * 2*bm*bk*bn FLOPs against one HBM round-trip
+of the tiles — the knob that lets the burner hit a target power *without*
+competing for the HBM bandwidth the primary workload's comm phase still
+uses (checkpoint DMA, ICI spills). This is the deliberate TPU adaptation of
+the paper's MPS GEMM ballast (DESIGN.md §5.1).
+
+dims: multiples of 128 to keep the MXU systolic array fully fed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ballast_kernel(a_ref, b_ref, o_ref, *, n_iter: int, decay: float):
+    c = a_ref[...]
+    b = b_ref[...]
+
+    def body(_, c):
+        return jnp.dot(c, b, preferred_element_type=jnp.float32) * decay
+
+    c = jax.lax.fori_loop(0, n_iter, body, c.astype(jnp.float32))
+    o_ref[...] = c.astype(o_ref.dtype)
+
+
+def ballast_pallas(a: jax.Array, b: jax.Array, n_iter: int,
+                   *, bm: int = 256, decay: float = 0.999,
+                   interpret: bool = False) -> jax.Array:
+    """a: [M, K] tiles to burn through; b: [K, N] resident multiplier.
+
+    Grid over M/bm row-blocks; each block runs the full n_iter chain in
+    VMEM. Returns C [M, N] (checksum keeps XLA from eliding the work).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2 == N, "iterated burner needs a square multiplier"
+    assert M % bm == 0, (a.shape, bm)
+    grid = (M // bm,)
+    return pl.pallas_call(
+        functools.partial(_ballast_kernel, n_iter=n_iter, decay=decay),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((K, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,32 @@
+"""Jit'd wrapper: FLOP-targeted ballast burn."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ballast.ballast import ballast_pallas
+
+
+def ballast_flops(m: int, k: int, n: int, n_iter: int) -> float:
+    return 2.0 * m * k * n * n_iter
+
+
+def _tiles(key, m, k, n, dtype):
+    a = (jax.random.normal(key, (m, k), jnp.float32) / math.sqrt(k)).astype(dtype)
+    # near-orthogonal multiplier keeps iterates bounded for any n_iter
+    b = (jnp.eye(k, n, dtype=jnp.float32) * 0.999).astype(dtype)
+    return a, b
+
+
+@functools.partial(jax.jit, static_argnames=("gflops", "m", "k", "n", "interpret"))
+def ballast_burn(key, *, gflops: float, m: int = 1024, k: int = 256,
+                 n: int = 256, interpret: bool = False) -> jax.Array:
+    """Burn ~gflops of MXU work; returns a checksum scalar (anti-DCE)."""
+    per_iter = 2.0 * m * k * n
+    n_iter = max(int(gflops * 1e9 / per_iter), 1)
+    a, b = _tiles(key, m, k, n, jnp.float32)
+    out = ballast_pallas(a, b, n_iter, interpret=interpret)
+    return jnp.sum(out) * 1e-9

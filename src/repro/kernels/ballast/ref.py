@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the ballast burner kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ballast_ref(a: jax.Array, b: jax.Array, n_iter: int,
+                decay: float = 0.999) -> jax.Array:
+    def body(_, c):
+        return jnp.dot(c, b.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * decay
+    return jax.lax.fori_loop(0, n_iter, body, a.astype(jnp.float32))

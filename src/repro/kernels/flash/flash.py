@@ -1,0 +1,89 @@
+"""Flash-attention forward kernel (perf iteration #2, EXPERIMENTS.md §Perf).
+
+Motivation measured on the qwen1.5-110b prefill_32k cell: with pure-JAX
+chunked attention, XLA materializes every (q-block x kv-chunk) score tensor
+between the QK^T and PV dots — ~94% of the cell's HBM bytes. Fusing the
+whole online-softmax body into one Pallas kernel keeps scores in VMEM; HBM
+traffic drops to the q/k/v/out block streams.
+
+Layout: q [B, S, KV, G, D], k/v [B, T, KV, D] (GQA grouped; G query heads
+share one kv head). Grid = (B*KV, S/q_block): each cell loads its q block
+plus the full (T, D) k/v stripe for that kv head into VMEM (T=32k, D=128
+bf16 -> 8 MB each) and runs the online-softmax fori over kv chunks.
+dims MXU-aligned: D and blocks multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk: int, q_block: int,
+                  causal: bool, scale: float):
+    # q_ref: [1, q_block, 1, G, D]; k_ref/v_ref: [1, T, 1, D]
+    q = q_ref[0, :, 0, :, :].astype(jnp.float32)          # [qb, G, D]
+    qb, G, D = q.shape
+    T = k_ref.shape[1]
+    q2 = q.reshape(qb * G, D) * scale
+    qi = pl.program_id(1)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_c = jax.lax.dynamic_slice_in_dim(k_ref[0, :, 0, :], j * kv_chunk,
+                                           kv_chunk, 0).astype(jnp.float32)
+        v_c = jax.lax.dynamic_slice_in_dim(v_ref[0, :, 0, :], j * kv_chunk,
+                                           kv_chunk, 0).astype(jnp.float32)
+        s = jnp.dot(q2, k_c.T, preferred_element_type=jnp.float32)  # [qb*G, c]
+        if causal:
+            pos_q = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, G), 0)
+            pos_q = pos_q.reshape(qb * G)
+            pos_k = j * kv_chunk + jax.lax.iota(jnp.int32, kv_chunk)
+            s = jnp.where(pos_q[:, None] >= pos_k[None, :], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        e = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + e.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            e, v_c, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    n = T // kv_chunk
+    m0 = jnp.full((qb * G,), NEG, jnp.float32)
+    l0 = jnp.zeros((qb * G,), jnp.float32)
+    a0 = jnp.zeros((qb * G, v_ref.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, :, 0, :, :] = out.reshape(qb, G, -1).astype(o_ref.dtype)
+
+
+def flash_pallas(q, k, v, *, q_block: int = 2048, kv_chunk: int = 1024,
+                 causal: bool = True, interpret: bool = False):
+    """q: [B,S,KV,G,D]; k,v: [B,T,KV,D] -> [B,S,KV,G,Dv]."""
+    B, S, KV, G, D = q.shape
+    T = k.shape[1]
+    Dv = v.shape[-1]
+    assert S % q_block == 0 and T % kv_chunk == 0, (S, q_block, T, kv_chunk)
+    scale = D ** -0.5
+    grid = (B * KV, S // q_block)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, kv_chunk=kv_chunk, q_block=q_block,
+                          causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, G, D),
+                         lambda bk, i, KV=KV: (bk // KV, i, bk % KV, 0, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda bk, i, KV=KV: (bk // KV, 0, bk % KV, 0)),
+            pl.BlockSpec((1, T, 1, Dv),
+                         lambda bk, i, KV=KV: (bk // KV, 0, bk % KV, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, G, Dv),
+                               lambda bk, i, KV=KV: (bk // KV, i, bk % KV, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, G, Dv), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,19 @@
+"""Jit'd wrapper with shape-adaptive blocks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash.flash import flash_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "q_block", "kv_chunk"))
+def flash_sdpa(q, k, v, *, causal: bool = True, q_block: int = 2048,
+               kv_chunk: int = 1024, interpret: bool = False):
+    S, T = q.shape[1], k.shape[1]
+    q_block = min(q_block, S)
+    kv_chunk = min(kv_chunk, T)
+    return flash_pallas(q, k, v, q_block=q_block, kv_chunk=kv_chunk,
+                        causal=causal, interpret=interpret)

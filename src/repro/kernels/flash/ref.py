@@ -1,0 +1,14 @@
+"""Oracle for the flash kernel: the model's dense sdpa (same layouts)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.models.attention import _dense_sdpa
+
+
+def flash_ref(q, k, v, *, causal: bool = True):
+    pos_q = jnp.arange(q.shape[1])
+    pos_k = jnp.arange(k.shape[1])
+    return _dense_sdpa(q, k, v, pos_q, pos_k, causal, q.shape[-1] ** -0.5)

@@ -1,0 +1,1 @@
+from repro.kernels.goertzel.ops import bin_power

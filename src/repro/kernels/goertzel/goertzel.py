@@ -1,0 +1,61 @@
+"""Goertzel FFT-bin power kernel (telemetry backstop hot path, Sec. IV-E).
+
+Input: power telemetry reshaped into non-overlapping windows [W, win].
+Each grid cell loads a block of windows into VMEM and runs K Goertzel
+resonators (one per critical frequency) across the window with a single
+fori_loop — O(win*K) multiply-adds per window vs O(win log win) for a full
+FFT, and only K bins of output. On TPU the [Bw, K] state vectors live in
+VREGs; the window block is the only VMEM traffic.
+
+Outputs per-window bin amplitudes [W, K] (volts/watts units of the input).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _goertzel_kernel(x_ref, coef_ref, cw_ref, sw_ref, o_ref, *, win: int):
+    x = x_ref[...].astype(jnp.float32)          # [Bw, win]
+    coef = coef_ref[...].astype(jnp.float32)    # [K]  2*cos(w)
+    Bw = x.shape[0]
+    K = coef.shape[0]
+
+    def body(t, carry):
+        s1, s2 = carry                           # [Bw, K]
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, 1)  # [Bw, 1]
+        s0 = xt + coef[None, :] * s1 - s2
+        return (s0, s1)
+
+    s1, s2 = jax.lax.fori_loop(
+        0, win, body,
+        (jnp.zeros((Bw, K), jnp.float32), jnp.zeros((Bw, K), jnp.float32)))
+    # amplitude via the standard Goertzel terminal formula
+    power = s1 * s1 + s2 * s2 - coef[None, :] * s1 * s2
+    o_ref[...] = (2.0 / win) * jnp.sqrt(jnp.maximum(power, 0.0))
+
+
+def goertzel_pallas(windows: jax.Array, coef: jax.Array,
+                    *, block_w: int = 8, interpret: bool = False) -> jax.Array:
+    """windows: [W, win] f32; coef: [K] = 2*cos(2*pi*f*dt). -> [W, K]."""
+    W, win = windows.shape
+    K = coef.shape[0]
+    assert W % block_w == 0, (W, block_w)
+    cw = jnp.cos(coef)  # placeholders to keep operand count stable
+    sw = jnp.sin(coef)
+    return pl.pallas_call(
+        functools.partial(_goertzel_kernel, win=win),
+        grid=(W // block_w,),
+        in_specs=[
+            pl.BlockSpec((block_w, win), lambda i: (i, 0)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_w, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, K), jnp.float32),
+        interpret=interpret,
+    )(windows.astype(jnp.float32), coef.astype(jnp.float32), cw, sw)

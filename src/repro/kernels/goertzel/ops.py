@@ -1,0 +1,30 @@
+"""Jit'd wrapper: telemetry trace -> per-window critical-bin amplitudes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.goertzel.goertzel import goertzel_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("win", "block_w", "interpret"))
+def bin_power(x: jax.Array, dt: float, freqs: jax.Array, *, win: int,
+              block_w: int = 8, interpret: bool = False) -> jax.Array:
+    """x: [n] power samples -> [n//win, K] bin amplitudes (non-overlapping
+    windows; the backstop's streaming granularity)."""
+    n = x.shape[0]
+    W = n // win
+    windows = x[: W * win].reshape(W, win)
+    # remove the per-window DC component: near-DC resonator states otherwise
+    # grow to win*mean and the terminal power formula cancels catastrophically
+    # in f32 (the bins of interest are >= 0.1 Hz, unaffected by this)
+    windows = windows - jnp.mean(windows, axis=1, keepdims=True)
+    pad = (-W) % block_w
+    if pad:
+        windows = jnp.concatenate(
+            [windows, jnp.zeros((pad, win), windows.dtype)], axis=0)
+    coef = 2.0 * jnp.cos(2 * jnp.pi * jnp.asarray(freqs) * dt)
+    out = goertzel_pallas(windows, coef, block_w=block_w, interpret=interpret)
+    return out[:W]

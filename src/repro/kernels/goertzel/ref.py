@@ -1,0 +1,63 @@
+"""Pure oracle(s) for the Goertzel bin-power kernel.
+
+``bin_power_ref`` — per-window DFT-bin amplitude by direct correlation
+(the mathematical definition the Goertzel recurrence implements).
+``sliding_bin_power_ref`` — every-sample sliding window via complex
+cumulative sums (used analysis-side by the backstop controller).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def goertzel_ref(windows, coef) -> jnp.ndarray:
+    """Exact pure-jnp mirror of the kernel recurrence.
+
+    windows: [W, win]; coef: [K] = 2*cos(2*pi*f*dt) -> amplitudes [W, K].
+    (At integer cycles-per-window this equals ``bin_power_ref``; at
+    fractional bins the two estimators differ by design — tests check both.)
+    """
+    import jax
+    windows = jnp.asarray(windows, jnp.float32)
+    coef = jnp.asarray(coef, jnp.float32)
+    W, win = windows.shape
+    K = coef.shape[0]
+
+    def step(carry, xt):  # xt: [W]
+        s1, s2 = carry
+        s0 = xt[:, None] + coef[None, :] * s1 - s2
+        return (s0, s1), None
+
+    (s1, s2), _ = jax.lax.scan(
+        step, (jnp.zeros((W, K), jnp.float32), jnp.zeros((W, K), jnp.float32)),
+        windows.T)
+    power = s1 * s1 + s2 * s2 - coef[None, :] * s1 * s2
+    return (2.0 / win) * jnp.sqrt(jnp.maximum(power, 0.0))
+
+
+def bin_power_ref(windows, dt: float, freqs) -> jnp.ndarray:
+    """windows: [W, win]; freqs: [K] Hz -> amplitudes [W, K]."""
+    windows = jnp.asarray(windows, jnp.float32)
+    win = windows.shape[1]
+    t = jnp.arange(win)[:, None] * (2 * jnp.pi * dt) * jnp.asarray(freqs)[None, :]
+    re = jnp.einsum("wt,tk->wk", windows, jnp.cos(t))
+    im = jnp.einsum("wt,tk->wk", windows, jnp.sin(t))
+    return (2.0 / win) * jnp.sqrt(re * re + im * im)
+
+
+def sliding_bin_power_ref(x: np.ndarray, dt: float, freqs: np.ndarray,
+                          win: int) -> np.ndarray:
+    """Every-sample sliding-window bin amplitudes [n, K] (numpy)."""
+    n = len(x)
+    k = len(freqs)
+    out = np.zeros((n, k))
+    t = np.arange(n) * dt
+    for j, f in enumerate(freqs):
+        ph = np.exp(-2j * np.pi * f * t)
+        cs = np.cumsum(x * ph)
+        w = cs.copy()
+        w[win:] = cs[win:] - cs[:-win]
+        denom = np.minimum(np.arange(n) + 1, win)
+        out[:, j] = 2.0 * np.abs(w) / denom
+    return out

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. derives the arch's sharding plan (parallel/sharding.py),
+  3. lowers + compiles train_step (train shapes) or serve_step/prefill
+     (inference shapes) against ShapeDtypeStruct stand-ins — no allocation,
+  4. records memory_analysis / cost_analysis / per-opcode collective bytes
+     (parsed from the partitioned HLO) into artifacts/dryrun/<cell>.json.
+
+EXPERIMENTS.md §Dry-run and §Roofline are generated from these artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, shapes_for
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Ctx, init_cache, init_params, make_prefill
+from repro.parallel.sharding import (batch_pspecs, cache_pspecs, make_plan,
+                                     param_pspecs)
+from repro.serve.engine import make_serve_step
+from repro.train.trainer import (TrainState, in_out_shardings,
+                                 init_train_state, make_train_step)
+
+# Memory-fit knobs for the biggest archs (documented in EXPERIMENTS.md).
+MOMENT_DTYPE = {
+    "nemotron-4-340b": "bfloat16",
+    "qwen1.5-110b": "bfloat16",
+    "dbrx-132b": "bfloat16",
+    "jamba-v0.1-52b": "bfloat16",
+}
+# grad-accumulation microbatches for train cells: global batch 256 ->
+# 32/microbatch keeps per-device residuals (scan-over-layers carry stack)
+# inside v5e HBM; see EXPERIMENTS.md §Dry-run.
+MICROBATCH = {"train_4k": 8}
+
+from repro.launch.hlo_analysis import hlo_collective_bytes, jaxpr_costs
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for every model input (assignment step 2)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Training/prefill batch ShapeDtypeStructs (no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"labels": sds((B, S), jnp.int32)}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = sds((B, S), jnp.int32)
+    else:
+        batch["inputs"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.vision is not None:
+        batch["vision_embeds"] = sds(
+            (B, cfg.vision.n_tokens, cfg.vision.dim), jnp.bfloat16)
+    return batch
+
+
+def _struct(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _eval_shape_params(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _per_device_bytes(struct_tree, shard_tree, mesh) -> int:
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(struct_tree), jax.tree.leaves(shard_tree)):
+        n = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        spec = sh.spec if hasattr(sh, "spec") else sh
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                denom *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+        total += -(-n // denom)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               tcfg: Optional[TrainConfig] = None, trace_only: bool = False,
+               flash: bool = False):
+    plan = make_plan(cfg, mesh, kind=shape.kind)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if shape.kind == "train":
+        # pure-FSDP plans put every sequence on its own chip — microbatch
+        # accumulation would make per-microbatch batches unshardable
+        mb = 1 if plan.tp_axis is None else MICROBATCH.get(shape.name, 1)
+        tcfg = tcfg or TrainConfig(
+            remat="full", moment_dtype=MOMENT_DTYPE.get(cfg.name, "float32"),
+            microbatches=mb)
+        params_s = _eval_shape_params(cfg)
+        opt_s = jax.eval_shape(
+            lambda p: __import__("repro.train.optimizer", fromlist=["x"])
+            .init_opt_state(p, tcfg.moment_dtype), params_s)
+        state_s = TrainState(params_s, opt_s,
+                             jax.ShapeDtypeStruct((), jnp.int32))
+        batch_s = input_specs(cfg, shape)
+        state_sh, batch_sh, _ = in_out_shardings(cfg, plan, state_s, batch_s)
+        step = make_train_step(cfg, tcfg, plan)
+        jf = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+        lowered = None if trace_only else jf.lower(state_s, batch_s)
+        extra_structs = (state_s, state_sh)
+        trace = (step, (state_s, batch_s))
+
+    elif shape.kind == "prefill":
+        params_s = _eval_shape_params(cfg)
+        cache_s = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16))
+        batch_s = input_specs(cfg, shape)
+        batch_s.pop("labels")
+        p_sh = jax.tree.map(ns, param_pspecs(cfg, plan, params_s))
+        c_sh = jax.tree.map(ns, cache_pspecs(cfg, plan, cache_s))
+        b_sh = jax.tree.map(ns, batch_pspecs(cfg, plan, batch_s))
+        prefill = make_prefill(cfg)
+
+        def prefill_step(params, batch, cache):
+            ctx = Ctx(cfg=cfg, flash=flash, moe_sm=plan.moe_sm(cfg),
+                      **plan.ctx_kwargs())
+            return prefill(params, batch, cache, ctx)
+
+        jf = jax.jit(prefill_step, in_shardings=(p_sh, b_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+        lowered = None if trace_only else jf.lower(params_s, batch_s, cache_s)
+        extra_structs = ((params_s, cache_s), (p_sh, c_sh))
+        trace = (prefill_step, (params_s, batch_s, cache_s))
+
+    else:  # decode
+        params_s = _eval_shape_params(cfg)
+        cache_s = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16))
+        B = shape.global_batch
+        if cfg.input_mode == "tokens":
+            inp_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        else:
+            inp_s = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        idx_s = jax.ShapeDtypeStruct((), jnp.int32)
+        p_sh = jax.tree.map(ns, param_pspecs(cfg, plan, params_s))
+        c_sh = jax.tree.map(ns, cache_pspecs(cfg, plan, cache_s, batch_size=B))
+        from repro.parallel.sharding import dp_size
+        bdp = plan.dp if B % dp_size(plan) == 0 else None
+        i_sh = ns(P(bdp, *([None] * (len(inp_s.shape) - 1))))
+        serve = make_serve_step(cfg, plan)
+        jf = jax.jit(serve, in_shardings=(p_sh, i_sh, c_sh, ns(P())),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+        lowered = None if trace_only else jf.lower(params_s, inp_s, cache_s, idx_s)
+        extra_structs = ((params_s, cache_s), (p_sh, c_sh))
+        trace = (serve, (params_s, inp_s, cache_s, idx_s))
+
+    return lowered, plan, extra_structs, trace
+
+
+def run_cell(arch: str, shape: ShapeConfig, multi_pod: bool) -> Dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, plan, (structs, shards), trace = lower_cell(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" in k.lower())}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    # Always record the sharding-derived per-device state bytes (exact).
+    mem["state_bytes_per_device"] = _per_device_bytes(structs, shards, mesh)
+
+    coll = hlo_collective_bytes(compiled.as_text())
+    fn, targs = trace
+    exact = jaxpr_costs(fn, *targs, chips=float(mesh.devices.size))
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape.name, "kind": shape.kind,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": int(n_chips),
+        "attn_mode": plan.attn_mode, "kv_repeat": plan.kv_repeat,
+        "shard_vocab": plan.shard_vocab,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost": cost, "memory": mem, "collectives": coll,
+        "exact": exact,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--retrace", action="store_true",
+                    help="recompute the jaxpr 'exact' costs in existing "
+                         "artifacts without recompiling")
+    ap.add_argument("--flash", action="store_true",
+                    help="with --retrace: cost prefill cells with the Pallas "
+                         "flash-attention kernel (forward-only)")
+    args = ap.parse_args()
+
+    if args.retrace:
+        import glob
+        for path in sorted(glob.glob(os.path.join(args.out, "*.json"))):
+            with open(path) as f:
+                res = json.load(f)
+            if "error" in res:
+                continue
+            cfg = get_config(res["arch"])
+            shape = next(s for s in shapes_for(cfg) if s.name == res["shape"])
+            mesh = make_production_mesh(multi_pod=res["mesh"] == "multi")
+            if args.flash and shape.kind != "prefill":
+                continue  # flash kernel is forward-only (prefill/serve)
+            _, _, _, (fn, targs) = lower_cell(cfg, shape, mesh, trace_only=True,
+                                              flash=args.flash)
+            res["exact"] = jaxpr_costs(fn, *targs, chips=float(mesh.devices.size))
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"[retrace] {os.path.basename(path)} "
+                  f"flops={res['exact']['flops']:.3e} bytes={res['exact']['bytes']:.3e}",
+                  flush=True)
+        return
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if args.shape != "all" and shape.name not in args.shape.split(","):
+                continue
+            for mp in meshes:
+                cell = f"{arch}__{shape.name}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, cell + ".json")
+                if os.path.exists(path):
+                    print(f"[skip] {cell}", flush=True)
+                    continue
+                print(f"[cell] {cell} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp)
+                    n_ok += 1
+                    print(f"  ok lower={res['lower_s']}s compile={res['compile_s']}s "
+                          f"flops={res['cost'].get('flops', 0):.3e} "
+                          f"coll={sum(res['collectives'].values()):.3e}B", flush=True)
+                except Exception:
+                    n_fail += 1
+                    res = {"arch": arch, "shape": shape.name,
+                           "mesh": "multi" if mp else "single",
+                           "error": traceback.format_exc()}
+                    print(f"  FAIL {cell}", flush=True)
+                    traceback.print_exc()
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"dryrun done: {n_ok} ok, {n_fail} failed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,267 @@
+"""Exact cost extraction for the dry-run roofline.
+
+Two analyses, complementing ``compiled.cost_analysis()`` (which counts XLA
+while-loop bodies ONCE, silently dropping the x n_layers factor — verified
+in EXPERIMENTS.md §Dry-run methodology):
+
+1. ``jaxpr_costs``: walks the step function's jaxpr, multiplying every
+   ``scan``/``while`` body by its trip count. FLOPs are exact for
+   dot_general-dominated programs (einsums); byte counts are an un-fused
+   upper bound (every eqn's operands+outputs counted once).
+
+2. ``hlo_collective_bytes``: parses the *partitioned* HLO, attributes every
+   collective to its enclosing computation, recovers while trip counts from
+   loop-condition constants, and multiplies — giving per-chip wire bytes per
+   step, by opcode.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# 1. jaxpr walker
+# ---------------------------------------------------------------------------
+
+_INNER_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                       "body_jaxpr", "branches")
+
+
+def _avals_bytes(avals) -> float:
+    total = 0.0
+    for a in avals:
+        try:
+            total += float(np.prod(a.shape) if a.shape else 1) * a.dtype.itemsize
+        except Exception:
+            pass
+    return total
+
+
+def _dot_flops(eqn) -> float:
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    contract = 1.0
+    for d in lc:
+        contract *= lhs.shape[d]
+    return 2.0 * float(np.prod(out.shape) if out.shape else 1) * contract
+
+
+VMEM_BUDGET = 64e6  # per-chip bytes assumed residency-eligible (v5e: 128MB)
+
+
+def _walk(jaxpr, mult: float, acc: Dict[str, float],
+          chips: float = 1.0, kernel: bool = False) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        inner_mult = mult
+        handled_inner = False
+        if prim == "pallas_call":
+            # Pallas kernel: internals live in VMEM — HBM traffic is the
+            # operand/result block streams only; FLOPs = kernel-body dots
+            # x grid size (each grid cell executes the body once).
+            grid = getattr(eqn.params.get("grid_mapping"), "grid", ()) or (1,)
+            gsz = 1.0
+            for g in grid:
+                gsz *= g
+            _walk(eqn.params["jaxpr"], mult * gsz, acc, chips, kernel=True)
+            in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+            out_avals = [v.aval for v in eqn.outvars]
+            acc["bytes"] += mult * (_avals_bytes(in_avals) + _avals_bytes(out_avals))
+            continue
+        if prim == "scan":
+            length = eqn.params.get("length", 1)
+            body = eqn.params["jaxpr"].jaxpr
+            _walk(body, mult * length, acc, chips, kernel)
+            # VMEM-resident carries: a scan whose carry fits in VMEM does
+            # not round-trip it through HBM every iteration (flash-attention
+            # style blocking). Refund the per-iteration carry read+write the
+            # body accounting charged. (Cost-model refinement — see
+            # EXPERIMENTS.md §Perf iteration 1.)
+            n_carry = eqn.params.get("num_carry", 0)
+            if n_carry:
+                carry_avals = [v.aval for v in body.outvars[:n_carry]]
+                carry_bytes = _avals_bytes(carry_avals)
+                if carry_bytes / max(chips, 1.0) < VMEM_BUDGET:
+                    refund = 2.0 * carry_bytes * (length - 1) * mult
+                    acc["bytes"] = max(acc["bytes"] - refund, 0.0)
+            handled_inner = True
+        elif prim == "while":
+            # trip count unknowable in general; jax fori/scan lowers to scan.
+            # Assume 1 (we never emit raw while in the model code).
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc, chips, kernel)
+            _walk(eqn.params["cond_jaxpr"].jaxpr, mult, acc, chips, kernel)
+            handled_inner = True
+        elif prim == "cond":
+            for br in eqn.params["branches"]:
+                _walk(br.jaxpr, mult, acc, chips, kernel)
+            handled_inner = True
+        else:
+            for pname in _INNER_JAXPR_PARAMS:
+                sub = eqn.params.get(pname)
+                if sub is None:
+                    continue
+                subs = sub if isinstance(sub, (tuple, list)) else (sub,)
+                for s in subs:
+                    _walk(s.jaxpr if hasattr(s, "jaxpr") else s, mult, acc, chips, kernel)
+                handled_inner = True
+        if handled_inner:
+            continue
+
+        in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+        out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
+        out_bytes = 0.0 if kernel else _avals_bytes(out_avals)
+        if kernel:
+            in_avals = []  # kernel internals are VMEM-resident
+        if prim == "dot_general":
+            # matmuls dominate real HBM traffic: operands + result
+            acc["flops"] += mult * _dot_flops(eqn)
+            acc["bytes"] += mult * (_avals_bytes(in_avals) + out_bytes)
+        elif prim in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "dynamic_slice", "dynamic_update_slice", "take"):
+            acc["bytes"] += mult * out_bytes * 2
+        elif prim in ("broadcast_in_dim", "reshape", "transpose",
+                      "convert_element_type", "squeeze", "slice",
+                      "concatenate", "pad", "rev", "iota", "copy",
+                      "sharding_constraint", "stop_gradient",
+                      "optimization_barrier"):
+            pass  # layout ops: fused / zero-cost under XLA
+        elif prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_and",
+                      "reduce_or", "argmax", "argmin", "reduce_precision",
+                      "cumsum", "cumlogsumexp", "cummax", "sort"):
+            acc["flops"] += mult * _avals_bytes(in_avals) / 4.0
+            acc["bytes"] += mult * (_avals_bytes(in_avals) + out_bytes)
+        else:
+            # elementwise: 1 flop/elem; assume producer->consumer fusion so
+            # each eqn contributes one materialized write (no re-reads)
+            acc["flops"] += mult * sum(
+                float(np.prod(a.shape) if a.shape else 1) for a in out_avals)
+            acc["bytes"] += mult * out_bytes
+    return
+
+
+def jaxpr_costs(fn, *args, chips: float = 1.0, **kwargs) -> Dict[str, float]:
+    """Exact (global, unpartitioned) flops & upper-bound bytes of fn(*args).
+
+    ``chips``: partition count used only for the VMEM-residency decision on
+    scan carries (global carry bytes / chips vs VMEM_BUDGET)."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    acc = {"flops": 0.0, "bytes": 0.0}
+    _walk(closed.jaxpr, 1.0, acc, chips)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# 2. trip-count-aware collective parsing of partitioned HLO
+# ---------------------------------------------------------------------------
+
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8,
+         "u64": 8, "f64": 8, "s8": 1, "u8": 1, "pred": 1, "s16": 2,
+         "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^=]*?\)|[\w\[\],\{\}]+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s:
+            m = _COMP_RE.match(s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    if entry is not None and entry != "__entry__":
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def hlo_collective_bytes(text: str) -> Dict[str, float]:
+    """Per-chip wire bytes by opcode, with while trip-count multipliers."""
+    comps = _split_computations(text)
+
+    # direct collective bytes + sub-calls per computation
+    direct: Dict[str, Dict[str, float]] = {}
+    calls: Dict[str, list] = {}
+    for name, lines in comps.items():
+        d: Dict[str, float] = {}
+        cl = []
+        for line in lines:
+            mc = _COLL_RE.search(line)
+            if mc:
+                b = _shape_bytes(mc.group(1)) * COLL_FACTOR[mc.group(2)]
+                d[mc.group(2)] = d.get(mc.group(2), 0.0) + b
+            mw = _WHILE_RE.search(line)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trip = int(mt.group(1))
+                else:  # fallback: largest constant in the loop condition
+                    trip = 1
+                    for cm in _CONST_RE.finditer("\n".join(comps.get(cond, []))):
+                        trip = max(trip, int(cm.group(1)))
+                cl.append((body, trip))
+                cl.append((cond, trip))
+            else:
+                for cm in _CALL_RE.finditer(line):
+                    cl.append((cm.group(1), 1))
+        direct[name] = d
+        calls[name] = cl
+
+    total: Dict[str, float] = {}
+    seen_stack = []
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.append(name)
+        for op, b in direct.get(name, {}).items():
+            total[op] = total.get(op, 0.0) + b * mult
+        for child, trip in calls.get(name, []):
+            visit(child, mult * trip)
+        seen_stack.pop()
+
+    visit("__entry__", 1.0)
+    return total

@@ -1,0 +1,30 @@
+"""Production mesh factories.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run boots 512 host
+placeholder devices while smoke tests and benches must see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run via launch/dryrun.py "
+            "which sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])

@@ -1,0 +1,5 @@
+from repro.models.model import (Model, init_params, forward, loss_fn,
+                                make_prefill, make_decode_step, init_cache)
+
+__all__ = ["Model", "init_params", "forward", "loss_fn", "make_prefill",
+           "make_decode_step", "init_cache"]

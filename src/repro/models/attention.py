@@ -1,0 +1,389 @@
+"""Attention mixers: GQA (dense + KV-chunked online-softmax), MLA, cross-attn.
+
+Layouts (chosen for sharding friendliness — see parallel/sharding.py):
+  activations      x      [B, S, d]
+  queries          q      [B, S, KV, G, D]   (KV*G = n_q_heads, possibly
+                                              after kv-head duplication)
+  keys/values      k, v   [B, T, KV, D]
+  decode KV cache  ck, cv [B, KV, S_max, D]  (seq axis sharded over "model")
+
+KV-head duplication: when tensor-parallel degree exceeds n_kv_heads, kv
+heads are repeated r times after projection (mathematically a no-op for
+grouped attention; lets GSPMD shard the kv-head axis). ``ctx.kv_repeat``
+carries r (1 = off).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, dtype):
+    a = cfg.attention
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, a.n_heads * a.head_dim, dtype).reshape(d, a.n_heads, a.head_dim),
+        "wk": dense_init(ks[1], d, a.n_kv_heads * a.head_dim, dtype).reshape(d, a.n_kv_heads, a.head_dim),
+        "wv": dense_init(ks[2], d, a.n_kv_heads * a.head_dim, dtype).reshape(d, a.n_kv_heads, a.head_dim),
+        "wo": dense_init(ks[3], a.n_heads * a.head_dim, d, dtype).reshape(a.n_heads, a.head_dim, d),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.n_heads, a.head_dim), dtype)
+        p["bk"] = jnp.zeros((a.n_kv_heads, a.head_dim), dtype)
+        p["bv"] = jnp.zeros((a.n_kv_heads, a.head_dim), dtype)
+    return p
+
+
+def init_xattn(key, cfg, dtype):
+    a, v = cfg.attention, cfg.vision
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, a.n_heads * a.head_dim, dtype).reshape(d, a.n_heads, a.head_dim),
+        "wk": dense_init(ks[1], v.dim, a.n_kv_heads * a.head_dim, dtype).reshape(v.dim, a.n_kv_heads, a.head_dim),
+        "wv": dense_init(ks[2], v.dim, a.n_kv_heads * a.head_dim, dtype).reshape(v.dim, a.n_kv_heads, a.head_dim),
+        "wo": dense_init(ks[3], a.n_heads * a.head_dim, d, dtype).reshape(a.n_heads, a.head_dim, d),
+        "gate_attn": jnp.zeros((), dtype),
+    }
+
+
+def init_mla(key, cfg, dtype):
+    a, m = cfg.attention, cfg.mla
+    d = cfg.d_model
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, a.n_heads * qk_dim, dtype).reshape(d, a.n_heads, qk_dim),
+        "wdkv": dense_init(ks[1], d, m.kv_lora_rank, dtype),
+        "wkr": dense_init(ks[2], d, m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wuk": dense_init(ks[3], m.kv_lora_rank, a.n_heads * m.qk_nope_head_dim, dtype).reshape(m.kv_lora_rank, a.n_heads, m.qk_nope_head_dim),
+        "wuv": dense_init(ks[4], m.kv_lora_rank, a.n_heads * m.v_head_dim, dtype).reshape(m.kv_lora_rank, a.n_heads, m.v_head_dim),
+        "wo": dense_init(ks[5], a.n_heads * m.v_head_dim, d, dtype).reshape(a.n_heads, m.v_head_dim, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product attention over [B,S,KV,G,D] queries
+# ---------------------------------------------------------------------------
+
+def _dense_sdpa(q, k, v, pos_q, pos_k, causal, scale):
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=F32) * scale
+    if causal:
+        mask = pos_q[:, None] >= pos_k[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(q.dtype), v,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)
+
+
+def _chunked_sdpa(q, k, v, pos_q, causal, scale, chunk):
+    """Online-softmax (flash-style) scan over KV chunks; f32 accumulators.
+
+    Keeps peak memory at O(S*chunk) per head instead of O(S*T).
+    """
+    B, S, KV, G, D = q.shape
+    Dv = v.shape[-1]  # may differ from D (MLA: qk 192 vs v 128)
+    T = k.shape[1]
+    n = T // chunk
+    assert n * chunk == T, (T, chunk)
+    qf = q.astype(F32)
+
+    def step(carry, i):
+        m, l, acc = carry
+        k_c = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, 1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, 1)
+        s = jnp.einsum("bskgd,btkd->bkgst", qf, k_c.astype(F32)) * scale
+        if causal:
+            pos_kc = i * chunk + jnp.arange(chunk)
+            mask = pos_q[:, None] >= pos_kc[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        e = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + e.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", e, v_c.astype(F32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, S), NEG, F32)
+    l0 = jnp.zeros((B, KV, G, S), F32)
+    a0 = jnp.zeros((B, KV, G, S, Dv), F32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)  # -> [B,S,KV,G,D]
+
+
+def _q_chunked_sdpa(q, k, v, pos_q, causal, scale, chunk, q_chunk):
+    """Outer scan over q blocks, inner online-softmax scan over KV chunks.
+
+    Perf iteration #1 (EXPERIMENTS.md §Perf): with q un-chunked the f32
+    softmax accumulators are [B,H,S,D] — far beyond VMEM at 32k, so every
+    KV-chunk step rewrites them to HBM (the memory-roofline term exploded).
+    Blocking q keeps the accumulators at [B,H,q_chunk,D] (VMEM-resident on
+    TPU) and cuts accumulator HBM traffic by S/q_chunk.
+    """
+    B, S, KV, G, D = q.shape
+    nq = S // q_chunk
+    qb = q.reshape(B, nq, q_chunk, KV, G, D)
+    pb = pos_q.reshape(nq, q_chunk)
+
+    def one_block(_, inp):
+        q_i, pos_i = inp
+        out = _chunked_sdpa(q_i, k, v, pos_i, causal, scale, chunk)
+        return None, out
+
+    _, outs = jax.lax.scan(one_block, None,
+                           (jnp.swapaxes(qb, 0, 1), pb))
+    Dv = outs.shape[-1]  # v head dim (MLA: 128 vs qk 192)
+    return jnp.swapaxes(outs, 0, 1).reshape(B, S, KV, G, Dv)
+
+
+def sdpa(q, k, v, *, pos_q, causal=True, chunk=1024, q_chunk=2048,
+         flash=False):
+    """q:[B,S,KV,G,D] k,v:[B,T,KV,D] -> [B,S,KV,G,D]."""
+    T = k.shape[1]
+    S = q.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    pos_k = jnp.arange(T)
+    if (flash and S == T and S % q_chunk == 0 and T % chunk == 0
+            and S > chunk):
+        # Pallas fused kernel (forward-only paths); perf iteration #2
+        from repro.kernels.flash.flash import flash_pallas
+        return flash_pallas(q, k, v, q_block=q_chunk, kv_chunk=chunk,
+                            causal=causal)
+    if T <= chunk or T % chunk != 0:
+        return _dense_sdpa(q, k, v, pos_q, pos_k, causal, scale)
+    if S > q_chunk and S % q_chunk == 0:
+        return _q_chunked_sdpa(q, k, v, pos_q, causal, scale, chunk, q_chunk)
+    return _chunked_sdpa(q, k, v, pos_q, causal, scale, chunk)
+
+
+def _group(q, kv_heads):
+    """[B,S,H,D] -> [B,S,KV,G,D]."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, kv_heads, H // kv_heads, D)
+
+
+def _repeat_kv(k, r, ctx):
+    if r == 1:
+        return k
+    # Pin the pre-duplication K/V to batch-only sharding: without this,
+    # GSPMD back-propagates the decode-cache's seq sharding into k and the
+    # repeat becomes an "involuntary full rematerialization" (a full
+    # all-gather of K/V per layer — perf iteration #3, EXPERIMENTS.md §Perf)
+    k = ctx.constrain(k, "kv_pre")
+    k = jnp.repeat(k, r, axis=2)
+    return ctx.constrain(k, "kv_heads")
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_forward(p, x, ctx, *, cache=None):
+    """Self-attention over the full sequence. Returns (out, new_cache)."""
+    a = ctx.cfg.attention
+    r = ctx.kv_repeat
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dmk->bsmk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dmk->bsmk", x, p["wv"].astype(x.dtype))
+    if a.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    pos = ctx.positions  # [S]
+    q = apply_rope(q, pos[None, :, None], a.rope_theta)
+    k = apply_rope(k, pos[None, :, None], a.rope_theta)
+    k_pre, v_pre = k, v  # pre-duplication layout (decode-cache layout)
+    k, v = _repeat_kv(k, r, ctx), _repeat_kv(v, r, ctx)
+    q = ctx.constrain(_group(q, a.n_kv_heads * r), "q_heads")
+    out = sdpa(q, k, v, pos_q=pos, causal=True, chunk=a.chunk_size,
+               flash=ctx.flash)
+    out = jnp.einsum("bskgd,kgde->bse", out,
+                     _group_w(p["wo"], a.n_kv_heads * r).astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = _write_prefill_cache(cache, k_pre, v_pre, ctx)
+    return out, new_cache
+
+
+def _group_w(wo, kv):
+    H, D, d = wo.shape
+    return wo.reshape(kv, H // kv, D, d)
+
+
+def _write_prefill_cache(cache, k, v, ctx):
+    """k,v: [B,S,KV,D] -> cache layout [B,KV,S_max,D] (zero-padded)."""
+    S_max = cache["k"].shape[2]
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+    pad = S_max - k.shape[2]
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return {"k": ctx.constrain(k.astype(cache["k"].dtype), "kv_cache"),
+            "v": ctx.constrain(v.astype(cache["v"].dtype), "kv_cache")}
+
+
+def xattn_forward(p, x, ctx, *, cache=None):
+    """Gated cross-attention against precomputed vision patch embeddings."""
+    a = ctx.cfg.attention
+    r = ctx.kv_repeat
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cache is not None and "k" in cache and cache.get("_ready", False):
+        k, v = cache["k"].astype(x.dtype), cache["v"].astype(x.dtype)
+    else:
+        vis = ctx.vision_embeds.astype(x.dtype)  # [B, Nv, vision_dim]
+        k = jnp.einsum("bnd,dmk->bnmk", vis, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bnd,dmk->bnmk", vis, p["wv"].astype(x.dtype))
+    k_pre, v_pre = k, v  # cache layout = pre-duplication
+    k, v = _repeat_kv(k, r, ctx), _repeat_kv(v, r, ctx)
+    q = _group(q, a.n_kv_heads * r)
+    pos_q = jnp.zeros((x.shape[1],), jnp.int32)
+    out = sdpa(q, k, v, pos_q=pos_q, causal=False, chunk=a.chunk_size)
+    out = jnp.einsum("bskgd,kgde->bse", out,
+                     _group_w(p["wo"], a.n_kv_heads * r).astype(x.dtype))
+    out = jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(x.dtype) * out
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": k_pre.astype(cache["k"].dtype),
+                     "v": v_pre.astype(cache["v"].dtype)}
+    return out, new_cache
+
+
+def mla_forward(p, x, ctx, *, cache=None):
+    """DeepSeek-V2 Multi-head Latent Attention (full sequence)."""
+    a, m = ctx.cfg.attention, ctx.cfg.mla
+    from repro.models.layers import rms_norm
+    pos = ctx.positions
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos[None, :, None], a.rope_theta)
+    ckv = rms_norm(x @ p["wdkv"].astype(x.dtype), p["kv_norm"], ctx.cfg.norm_eps)
+    krope = apply_rope((x @ p["wkr"].astype(x.dtype))[:, :, None, :],
+                       pos[None, :, None], a.rope_theta)  # [B,T,1,R]
+    # expand: per-head K = [k_nope | k_rope(bcast)], V from latent
+    k_nope = jnp.einsum("btl,lhn->bthn", ckv, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("btl,lhv->bthv", ckv, p["wuv"].astype(x.dtype))
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        krope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # MHA layout: KV=H, G=1; pad V to qk dim not needed (sdpa v dim free)
+    out = sdpa(qh[:, :, :, None, :], k, v, pos_q=pos, causal=True,
+               chunk=a.chunk_size, flash=ctx.flash)[:, :, :, 0, :]
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        S_max = cache["ckv"].shape[1]
+        pad = S_max - ckv.shape[1]
+        ckv_c = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))) if pad else ckv
+        kr = krope[:, :, 0, :]
+        kr_c = jnp.pad(kr, ((0, 0), (0, pad), (0, 0))) if pad else kr
+        new_cache = {"ckv": ckv_c.astype(cache["ckv"].dtype),
+                     "krope": kr_c.astype(cache["krope"].dtype)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+def attn_decode(p, x, cache, index, ctx):
+    """x: [B,1,d]; cache: {k,v: [B,KV,S,D]}; index: scalar position."""
+    a = ctx.cfg.attention
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dmk->bsmk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dmk->bsmk", x, p["wv"].astype(x.dtype))
+    if a.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    pos = jnp.full((1,), index)
+    q = apply_rope(q, pos[None, :, None], a.rope_theta)
+    k = apply_rope(k, pos[None, :, None], a.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], jnp.swapaxes(k, 1, 2).astype(cache["k"].dtype), index, 2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], jnp.swapaxes(v, 1, 2).astype(cache["v"].dtype), index, 2)
+    q = _group(q, a.n_kv_heads)  # [B,1,KV,G,D]
+    s = jnp.einsum("bskgd,bktd->bkgst", q, ck.astype(q.dtype),
+                   preferred_element_type=F32) / math.sqrt(a.head_dim)
+    mask = jnp.arange(ck.shape[2]) <= index
+    s = jnp.where(mask[None, None, None, None, :], s, NEG)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bskgd", prob.astype(q.dtype),
+                     cv.astype(q.dtype), preferred_element_type=F32).astype(x.dtype)
+    out = jnp.einsum("bskgd,kgde->bse", out, _group_w(p["wo"], a.n_kv_heads).astype(x.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+def mla_decode(p, x, cache, index, ctx):
+    """Weight-absorbed MLA decode: attends in the compressed latent space."""
+    a, m = ctx.cfg.attention, ctx.cfg.mla
+    from repro.models.layers import rms_norm
+    pos = jnp.full((1,), index)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos[None, :, None], a.rope_theta)
+    ckv_t = rms_norm(x @ p["wdkv"].astype(x.dtype), p["kv_norm"], ctx.cfg.norm_eps)
+    kr_t = apply_rope((x @ p["wkr"].astype(x.dtype))[:, :, None, :],
+                      pos[None, :, None], a.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), index, 1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], kr_t.astype(cache["krope"].dtype), index, 1)
+    # absorb W_uk into q; attend over latent cache
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, p["wuk"].astype(x.dtype))
+    s = (jnp.einsum("bshl,btl->bhst", q_lat, ckv.astype(x.dtype), preferred_element_type=F32)
+         + jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(x.dtype), preferred_element_type=F32))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    mask = jnp.arange(ckv.shape[1]) <= index
+    s = jnp.where(mask[None, None, None, :], s, NEG)
+    prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", prob, ckv.astype(x.dtype))
+    out = jnp.einsum("bshl,lhv->bshv", o_lat, p["wuv"].astype(x.dtype))
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def xattn_decode(p, x, cache, index, ctx):
+    out, new_cache = xattn_forward(p, x, ctx, cache=dict(cache, _ready=True))
+    return out, cache  # vision K/V static during decode
+
+
+# ---------------------------------------------------------------------------
+# Cache initializers
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(cfg, batch, seq, dtype):
+    a = cfg.attention
+    shp = (batch, a.n_kv_heads, seq, a.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def init_mla_cache(cfg, batch, seq, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, seq, m.qk_rope_head_dim), dtype)}
+
+
+def init_xattn_cache(cfg, batch, dtype):
+    a, vz = cfg.attention, cfg.vision
+    shp = (batch, vz.n_tokens, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}

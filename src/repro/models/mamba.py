@@ -1,0 +1,111 @@
+"""Mamba (S6) selective-state-space mixer, as used by Jamba.
+
+Training/prefill uses a ``lax.scan`` over time with f32 state; decode keeps
+a (conv window, SSM state) tuple as its cache. The d_inner axis is the TP
+axis (sharded over "model") — conv and scan are elementwise in d_inner so
+the whole mixer is communication-free apart from the in/out projections.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+F32 = jnp.float32
+
+
+def _dt_rank(d_model: int) -> int:
+    return max(1, math.ceil(d_model / 16))
+
+
+def init_mamba(key, cfg, dtype):
+    m, d = cfg.mamba, cfg.d_model
+    di = m.expand * d
+    r = _dt_rank(d)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, m.d_state + 1, dtype=F32)[None, :], (di, 1))
+    kx, kz = jax.random.split(ks[0])
+    return {
+        # separate x/z projections (a fused [d, 2*di] would force GSPMD to
+        # reshard at the split point when di is TP-sharded)
+        "in_proj_x": dense_init(kx, d, di, dtype),
+        "in_proj_z": dense_init(kz, d, di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, di), F32) / math.sqrt(m.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * m.d_state, dtype),
+        "dt_proj": dense_init(ks[3], r, di, dtype, scale=r ** -0.5 * r),  # ~ N(0, 1/sqrt(r))
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,), F32) * (0.1 - 1e-3) + 1e-3, 1e-4))).astype(dtype),
+        "A_log": jnp.log(a_init).astype(F32),
+        "D": jnp.ones((di,), F32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b, init_window=None):
+    """x: [B,S,di]; w: [K,di]. Depthwise causal conv via K shifted adds."""
+    K = w.shape[0]
+    if init_window is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    return y + b.astype(x.dtype), xp[:, -(K - 1):, :]
+
+
+def mamba_forward(p, x, ctx, *, cache=None):
+    """x: [B,S,d] -> (out, new_cache)."""
+    m = ctx.cfg.mamba
+    d = ctx.cfg.d_model
+    di = m.expand * d
+    r = _dt_rank(d)
+    xi = ctx.constrain(x @ p["in_proj_x"].astype(x.dtype), "mamba_inner")
+    z = ctx.constrain(x @ p["in_proj_z"].astype(x.dtype), "mamba_inner")
+    conv_init = None if cache is None else cache["conv"]
+    xi, conv_win = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_init)
+    xi = jax.nn.silu(xi)
+    xdbl = xi @ p["x_proj"].astype(x.dtype)
+    dt_r, Bc, Cc = jnp.split(xdbl, [r, r + m.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype)).astype(F32)  # [B,S,di]
+    A = -jnp.exp(p["A_log"])  # [di, ds] f32
+
+    def step(h, inp):
+        xi_t, dt_t, b_t, c_t = inp  # [B,di],[B,di],[B,ds],[B,ds]
+        dA = jnp.exp(dt_t[:, :, None] * A[None])          # [B,di,ds]
+        dBx = dt_t[:, :, None] * b_t[:, None, :].astype(F32) * xi_t[:, :, None].astype(F32)
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(F32))
+        return h, y
+
+    h0 = (jnp.zeros((x.shape[0], di, m.d_state), F32) if cache is None
+          else cache["ssm"].astype(F32))
+    xs = (jnp.swapaxes(xi, 0, 1), jnp.swapaxes(dt, 0, 1),
+          jnp.swapaxes(Bc, 0, 1), jnp.swapaxes(Cc, 0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.swapaxes(ys, 0, 1).astype(x.dtype) + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_win.astype(cache["conv"].dtype),
+                     "ssm": h_last.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def mamba_decode(p, x, cache, index, ctx):
+    """Single-token step; cache = {conv: [B,K-1,di], ssm: [B,di,ds]}."""
+    out, new_cache = mamba_forward(p, x, ctx, cache=cache)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, m.d_state), F32)}

@@ -1,0 +1,32 @@
+"""Dense feed-forward variants: SwiGLU, squared-ReLU (Nemotron), GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d_model, dtype)}
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_forward(p, x, kind: str, ctx=None):
+    h = x @ p["w_in"].astype(x.dtype)
+    if kind == "swiglu":
+        g = x @ p["w_gate"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    elif kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(kind)
+    if ctx is not None:
+        h = ctx.constrain(h, "ffn_hidden")
+    return h @ p["w_out"].astype(x.dtype)

@@ -1,0 +1,410 @@
+"""Model assembly: layer dispatch, scan-over-repeats, loss, prefill/decode.
+
+The repeating-unit layers are applied with a single ``lax.scan`` over the
+repeat axis (params stacked [R, ...]), keeping compile time O(1) in depth —
+essential for the 96-layer dry-run cells on a CPU-hosted compiler. Remat
+(``jax.checkpoint``) wraps the scan body so activation memory is O(unit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import dense_init, embed_init, rms_norm, stack_init
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Context threaded through every layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ModelConfig
+    positions: Any = None            # [S] int32 absolute positions
+    vision_embeds: Any = None        # [B, Nv, vdim] (vlm stub input)
+    kv_repeat: int = 1               # kv-head duplication factor (TP)
+    remat: str = "none"              # none | dots | full
+    constrain_fn: Optional[Callable] = None  # (x, role) -> x
+    # Unroll the layer scan. Used by the dry-run so cost_analysis counts
+    # every layer (XLA counts while-loop bodies once — see launch/dryrun.py).
+    unroll: bool = False
+    # MoE dropless mode (decode/serving): capacity = all slots, no token
+    # drops — batched prefill with capacity dropping would otherwise diverge
+    # from per-token decode.
+    dropless: bool = False
+    # Use the Pallas flash-attention kernel for full-sequence self-attention
+    # (forward-only paths: prefill/serving; see kernels/flash).
+    flash: bool = False
+    # shard_map expert parallelism: (mesh, dp_axes, fsdp_axes, tp_axis)
+    # from the sharding Plan (perf iteration #7); None = GSPMD auto.
+    moe_sm: Any = None
+
+    def constrain(self, x, role: str):
+        if self.constrain_fn is None:
+            return x
+        return self.constrain_fn(x, role)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply / decode dispatch
+# ---------------------------------------------------------------------------
+
+def _init_mixer(key, cfg, spec: LayerSpec, dtype):
+    if spec.mixer == "attn":
+        return attn_mod.init_attn(key, cfg, dtype)
+    if spec.mixer == "xattn":
+        return attn_mod.init_xattn(key, cfg, dtype)
+    if spec.mixer == "mla":
+        return attn_mod.init_mla(key, cfg, dtype)
+    if spec.mixer == "mamba":
+        return mamba_mod.init_mamba(key, cfg, dtype)
+    if spec.mixer == "rwkv":
+        return rwkv_mod.init_rwkv_tm(key, cfg, dtype)
+    return {}
+
+
+def _init_ffn(key, cfg, spec: LayerSpec, dtype):
+    if spec.ffn == "dense":
+        return mlp_mod.init_mlp(key, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    if spec.ffn == "moe":
+        return moe_mod.init_moe(key, cfg, dtype)
+    if spec.ffn == "rwkv_cm":
+        return rwkv_mod.init_rwkv_cm(key, cfg, dtype)
+    return {}
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": jnp.ones((cfg.d_model,), dtype),
+         "mix": _init_mixer(k1, cfg, spec, dtype)}
+    if spec.ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = _init_ffn(k2, cfg, spec, dtype)
+    return p
+
+
+def _apply_mixer(spec, p, x, ctx, cache=None):
+    if spec.mixer == "attn":
+        return attn_mod.attn_forward(p, x, ctx, cache=cache)
+    if spec.mixer == "xattn":
+        return attn_mod.xattn_forward(p, x, ctx, cache=cache)
+    if spec.mixer == "mla":
+        return attn_mod.mla_forward(p, x, ctx, cache=cache)
+    if spec.mixer == "mamba":
+        return mamba_mod.mamba_forward(p, x, ctx, cache=cache)
+    if spec.mixer == "rwkv":
+        sub = None if cache is None else {k: cache[k] for k in ("shift_tm", "wkv")}
+        return rwkv_mod.rwkv_tm_forward(p, x, ctx, cache=sub)
+    return x, None
+
+
+def _decode_mixer(spec, p, x, cache, index, ctx):
+    if spec.mixer == "attn":
+        return attn_mod.attn_decode(p, x, cache, index, ctx)
+    if spec.mixer == "xattn":
+        return attn_mod.xattn_decode(p, x, cache, index, ctx)
+    if spec.mixer == "mla":
+        return attn_mod.mla_decode(p, x, cache, index, ctx)
+    if spec.mixer == "mamba":
+        return mamba_mod.mamba_decode(p, x, cache, index, ctx)
+    if spec.mixer == "rwkv":
+        sub = {k: cache[k] for k in ("shift_tm", "wkv")}
+        return rwkv_mod.rwkv_tm_forward(p, x, ctx, cache=sub)
+    return x, None
+
+
+def _apply_ffn(spec, p, x, ctx, cache=None):
+    """Returns (out, aux_loss, new_cache)."""
+    if spec.ffn == "dense":
+        return mlp_mod.mlp_forward(p, x, ctx.cfg.mlp_kind, ctx), 0.0, None
+    if spec.ffn == "moe":
+        if ctx.moe_sm is not None:
+            out, aux = moe_mod.moe_forward_shardmap(p, x, ctx.cfg, ctx, ctx.moe_sm)
+        else:
+            out, aux = moe_mod.moe_forward(p, x, ctx.cfg, ctx)
+        return out, aux, None
+    if spec.ffn == "rwkv_cm":
+        sub = None if cache is None else {"shift_cm": cache["shift_cm"]}
+        out, c = rwkv_mod.rwkv_cm_forward(p, x, ctx, cache=sub)
+        return out, 0.0, c
+    return jnp.zeros_like(x), 0.0, None
+
+
+def apply_layer(spec, p, x, ctx, cache=None):
+    """Pre-norm residual layer. Returns (x, aux, new_cache)."""
+    eps = ctx.cfg.norm_eps
+    h, mc = _apply_mixer(spec, p["mix"], rms_norm(x, p["norm1"], eps), ctx, cache=cache)
+    x = x + h
+    aux = 0.0
+    fc = None
+    if spec.ffn != "none":
+        h, aux, fc = _apply_ffn(spec, p["ffn"], rms_norm(x, p["norm2"], eps), ctx, cache=cache)
+        x = x + h
+    return x, aux, _merge_cache(mc, fc)
+
+
+def apply_layer_decode(spec, p, x, cache, index, ctx):
+    eps = ctx.cfg.norm_eps
+    h, mc = _decode_mixer(spec, p["mix"], rms_norm(x, p["norm1"], eps), cache, index, ctx)
+    x = x + h
+    fc = None
+    if spec.ffn != "none":
+        h, _, fc = _apply_ffn(spec, p["ffn"], rms_norm(x, p["norm2"], eps), ctx, cache=cache)
+        x = x + h
+    return x, _merge_cache(mc, fc)
+
+
+def _merge_cache(mc, fc):
+    if mc is None and fc is None:
+        return None
+    out = {}
+    if mc:
+        out.update(mc)
+    if fc:
+        out.update(fc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    cfg.validate()
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4 + len(cfg.prefix))
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = {"emb": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+    params["prefix"] = [init_layer(keys[4 + i], cfg, s, dtype)
+                        for i, s in enumerate(cfg.prefix)]
+    unit = []
+    for i, spec in enumerate(cfg.unit):
+        kk = jax.random.fold_in(keys[1], i)
+        unit.append(stack_init(kk, cfg.n_repeats,
+                               lambda k, spec=spec: init_layer(k, cfg, spec, dtype)))
+    params["unit"] = tuple(unit)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    params["lm_head"] = dense_init(keys[2], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train): backbone -> final-normed activations; loss with chunked CE
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, batch, ctx):
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"]["emb"], batch["tokens"], axis=0)
+    else:
+        x = batch["inputs"]
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    return ctx.constrain(x, "activations")
+
+
+def _unit_scan(params, cfg, x, ctx, aux0=0.0):
+    """Scan the repeating unit; optionally remat the body."""
+    def body(carry, pslice):
+        xc, aux = carry
+        for i, spec in enumerate(cfg.unit):
+            xc, a, _ = apply_layer(spec, pslice[i], xc, ctx)
+            aux = aux + a
+        return (xc, aux), None
+
+    if ctx.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif ctx.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.asarray(aux0, F32)), params["unit"],
+                               unroll=cfg.n_repeats if ctx.unroll else 1)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, batch, ctx: Optional[Ctx] = None):
+    """Returns (final-normed activations [B,S,d], moe_aux scalar)."""
+    ctx = ctx or Ctx(cfg=cfg)
+    if ctx.positions is None:
+        S = (batch["tokens"] if cfg.input_mode == "tokens" else batch["inputs"]).shape[1]
+        ctx = dataclasses.replace(ctx, positions=jnp.arange(S))
+    if cfg.vision is not None and "vision_embeds" in batch:
+        ctx = dataclasses.replace(ctx, vision_embeds=batch["vision_embeds"])
+    x = _embed(params, cfg, batch, ctx)
+    aux = jnp.asarray(0.0, F32)
+    for spec, p in zip(cfg.prefix, params["prefix"]):
+        x, a, _ = apply_layer(spec, p, x, ctx)
+        aux = aux + a
+    x, aux = _unit_scan(params, cfg, x, ctx, aux)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _ce(logits, labels):
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: Optional[Ctx] = None):
+    """Mean next-token CE (+ MoE aux). Chunked over seq when cfg.loss_chunk."""
+    x, aux = forward(params, cfg, batch, ctx)
+    labels = batch["labels"]
+    w_head = params["lm_head"]
+    chunk = cfg.loss_chunk
+    S = x.shape[1]
+    if chunk and S % chunk == 0 and S > chunk:
+        n = S // chunk
+        xc = x.reshape(x.shape[0], n, chunk, x.shape[2])
+        lc = labels.reshape(labels.shape[0], n, chunk)
+
+        def body(tot, inp):
+            xi, li = inp  # [B,chunk,d], [B,chunk]
+            logits = xi @ w_head.astype(xi.dtype)
+            return tot + _ce(logits, li).sum(), None
+
+        tot, _ = jax.lax.scan(body, jnp.asarray(0.0, F32),
+                              (jnp.swapaxes(xc, 0, 1), jnp.swapaxes(lc, 0, 1)))
+        ce = tot / (labels.shape[0] * S)
+    else:
+        logits = x @ w_head.astype(x.dtype)
+        ce = _ce(logits, labels).mean()
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return ce + coef * aux, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg, spec: LayerSpec, batch, seq, dtype):
+    c = {}
+    if spec.mixer == "attn":
+        c.update(attn_mod.init_attn_cache(cfg, batch, seq, dtype))
+    elif spec.mixer == "mla":
+        c.update(attn_mod.init_mla_cache(cfg, batch, seq, dtype))
+    elif spec.mixer == "xattn":
+        c.update(attn_mod.init_xattn_cache(cfg, batch, dtype))
+    elif spec.mixer == "mamba":
+        c.update(mamba_mod.init_mamba_cache(cfg, batch, dtype))
+    elif spec.mixer == "rwkv":
+        c.update({k: v for k, v in rwkv_mod.init_rwkv_cache(cfg, batch, dtype).items()
+                  if k in ("shift_tm", "wkv")})
+    if spec.ffn == "rwkv_cm":
+        c["shift_cm"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    prefix = [_init_layer_cache(cfg, s, batch, seq, dtype) for s in cfg.prefix]
+    unit = []
+    for spec in cfg.unit:
+        one = _init_layer_cache(cfg, spec, batch, seq, dtype)
+        unit.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats, *a.shape)).copy(), one))
+    return {"prefix": prefix, "unit": tuple(unit)}
+
+
+def make_prefill(cfg: ModelConfig):
+    """prefill(params, batch, cache, ctx) -> (last_logits, cache)."""
+    def prefill(params, batch, cache, ctx: Optional[Ctx] = None):
+        ctx = ctx or Ctx(cfg=cfg)
+        S = (batch["tokens"] if cfg.input_mode == "tokens" else batch["inputs"]).shape[1]
+        if ctx.positions is None:
+            ctx = dataclasses.replace(ctx, positions=jnp.arange(S))
+        if cfg.vision is not None and "vision_embeds" in batch:
+            ctx = dataclasses.replace(ctx, vision_embeds=batch["vision_embeds"])
+        x = _embed(params, cfg, batch, ctx)
+        new_prefix = []
+        for spec, p, c in zip(cfg.prefix, params["prefix"], cache["prefix"]):
+            x, _, nc = apply_layer(spec, p, x, ctx, cache=c)
+            new_prefix.append(nc)
+
+        def body(xc, inp):
+            pslice, cslice = inp
+            ncs = []
+            for i, spec in enumerate(cfg.unit):
+                xc, _, nc = apply_layer(spec, pslice[i], xc, ctx, cache=cslice[i])
+                ncs.append(nc)
+            return xc, tuple(ncs)
+
+        if ctx.remat in ("full", "dots"):
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, new_unit = jax.lax.scan(body, x, (params["unit"], cache["unit"]),
+                                   unroll=cfg.n_repeats if ctx.unroll else 1)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1:, :] @ params["lm_head"].astype(x.dtype)
+        return logits, {"prefix": new_prefix, "unit": new_unit}
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode(params, token_or_embed, cache, index, ctx) -> (logits, cache)."""
+    def decode(params, inp, cache, index, ctx: Optional[Ctx] = None):
+        ctx = ctx or Ctx(cfg=cfg)
+        ctx = dataclasses.replace(ctx, positions=jnp.full((1,), index),
+                                  dropless=True)
+        if cfg.input_mode == "tokens":
+            x = jnp.take(params["embed"]["emb"], inp, axis=0)  # [B,1,d]
+        else:
+            x = inp
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        new_prefix = []
+        for spec, p, c in zip(cfg.prefix, params["prefix"], cache["prefix"]):
+            x, nc = apply_layer_decode(spec, p, x, c, index, ctx)
+            new_prefix.append(nc)
+
+        def body(xc, inp_):
+            pslice, cslice = inp_
+            ncs = []
+            for i, spec in enumerate(cfg.unit):
+                xc, nc = apply_layer_decode(spec, pslice[i], xc, cslice[i], index, ctx)
+                ncs.append(nc)
+            return xc, tuple(ncs)
+
+        x, new_unit = jax.lax.scan(body, x, (params["unit"], cache["unit"]),
+                                   unroll=cfg.n_repeats if ctx.unroll else 1)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, {"prefix": new_prefix, "unit": new_unit}
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrapper
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(key, self.cfg)
+
+    def loss(self, params, batch, ctx=None):
+        return loss_fn(params, self.cfg, batch, ctx)
+
+    def forward(self, params, batch, ctx=None):
+        return forward(params, self.cfg, batch, ctx)
+
+    def prefill(self):
+        return make_prefill(self.cfg)
+
+    def decode_step(self):
+        return make_decode_step(self.cfg)
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        return init_cache(self.cfg, batch, seq, dtype)

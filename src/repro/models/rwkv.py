@@ -1,0 +1,122 @@
+"""RWKV-6 ("Finch") mixer: token-mix with data-dependent decay + channel-mix.
+
+State per layer: token-shift vectors and the per-head [hd_k, hd_v] wkv
+matrix. The value-channel (hd_v) axis is the TP axis; decay/receptance act
+on the replicated key channel so the recurrence is communication-free.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, group_norm_heads
+
+F32 = jnp.float32
+
+
+def init_rwkv_tm(key, cfg, dtype):
+    d = cfg.d_model
+    r = cfg.rwkv
+    H, hd = d // r.head_dim, r.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), F32)).astype(dtype),  # r,k,v,w,g
+        "w0": jnp.zeros((d,), F32) - 6.0,
+        "w_A": dense_init(ks[1], d, r.decay_lora, dtype),
+        "w_B": dense_init(ks[2], r.decay_lora, d, dtype, scale=0.1),
+        "u": (jax.random.normal(ks[3], (H, hd), F32) * 0.1).astype(F32),
+        "wr": dense_init(ks[4], d, d, dtype).reshape(d, H, hd),
+        "wk": dense_init(ks[5], d, d, dtype).reshape(d, H, hd),
+        "wv": dense_init(ks[6], d, d, dtype).reshape(d, H, hd),
+        "wg": dense_init(ks[7], d, d, dtype).reshape(d, H, hd),
+        "gn_w": jnp.ones((H, hd), F32),
+        "gn_b": jnp.zeros((H, hd), F32),
+        "wo": dense_init(jax.random.fold_in(key, 9), d, d, dtype).reshape(H, hd, d),
+    }
+
+
+def init_rwkv_cm(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.uniform(jax.random.fold_in(key, 7), (2, d), F32)).astype(dtype),  # k, r
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x[:, t] -> x[:, t-1]; prev: [B,d] previous last token."""
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def rwkv_tm_forward(p, x, ctx, *, cache=None):
+    cfg = ctx.cfg
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    B, S, _ = x.shape
+    prev = jnp.zeros((B, d), x.dtype) if cache is None else cache["shift_tm"]
+    xs = _shift(x, prev)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_lerp(x, xs, mu[i]) for i in range(5))
+    rr = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(x.dtype))
+    kk = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(x.dtype))
+    vv = ctx.constrain(jnp.einsum("bsd,dhv->bshv", xv, p["wv"].astype(x.dtype)), "rwkv_v")
+    gg = ctx.constrain(jnp.einsum("bsd,dhv->bshv", xg, p["wg"].astype(x.dtype)), "rwkv_v")
+    # data-dependent decay (per key channel), f32 for stability
+    lora = jnp.tanh(xw @ p["w_A"].astype(x.dtype)).astype(F32) @ p["w_B"].astype(F32)
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + lora)).reshape(B, S, H, hd)  # in (0,1)
+    u = p["u"]  # [H, hd]
+
+    def step(Sst, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,hd] each (k-chan for r,k,w; v-chan for v)
+        kv = k_t.astype(F32)[..., :, None] * v_t.astype(F32)[..., None, :]  # [B,H,k,v]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(F32), Sst + u[None, :, :, None] * kv)
+        Sst = w_t.astype(F32)[..., :, None] * Sst + kv
+        return Sst, y
+
+    S0 = (jnp.zeros((B, H, hd, hd), F32) if cache is None
+          else cache["wkv"].astype(F32))
+    xs_seq = tuple(jnp.swapaxes(t, 0, 1) for t in (rr, kk, vv, w))
+    S_last, ys = jax.lax.scan(step, S0, xs_seq)
+    y = jnp.swapaxes(ys, 0, 1)  # [B,S,H,hd_v] f32
+    y = group_norm_heads(y, p["gn_w"], p["gn_b"], 64e-5).astype(x.dtype)
+    y = y * jax.nn.silu(gg)
+    out = jnp.einsum("bshv,hvd->bsd", y, p["wo"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_tm": x[:, -1, :].astype(cache["shift_tm"].dtype),
+                     "wkv": S_last.astype(cache["wkv"].dtype)}
+    return out, new_cache
+
+
+def rwkv_cm_forward(p, x, ctx, *, cache=None):
+    prev = (jnp.zeros((x.shape[0], x.shape[-1]), x.dtype) if cache is None
+            else cache["shift_cm"])
+    xs = _shift(x, prev)
+    xk = _lerp(x, xs, p["mu"][0])
+    xr = _lerp(x, xs, p["mu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    k = ctx.constrain(k, "ffn_hidden")
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * (k @ p["wv"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_cm": x[:, -1, :].astype(cache["shift_cm"].dtype)}
+    return out, new_cache
+
+
+def init_rwkv_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    return {"shift_tm": jnp.zeros((batch, d), dtype),
+            "wkv": jnp.zeros((batch, H, hd, hd), F32),
+            "shift_cm": jnp.zeros((batch, d), dtype)}

@@ -1,0 +1,1 @@
+from repro.parallel.sharding import Plan, make_plan, param_pspecs, batch_pspecs

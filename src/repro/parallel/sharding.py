@@ -1,0 +1,320 @@
+"""Sharding plans: logical roles -> PartitionSpecs over (pod, data, model).
+
+Scheme (see DESIGN.md §6):
+  * FSDP: every large weight matrix shards its d_model-ish input axis over
+    ("pod","data") — GSPMD all-gathers weights per scanned layer forward and
+    reduce-scatters gradients backward (ZeRO-3 semantics from annotations).
+  * TP over "model": attention q-heads (with kv-head duplication so the kv
+    axis equals the TP degree), FFN hidden, MoE experts (EP), Mamba d_inner,
+    RWKV value channel, vocab (embed table + logits).
+  * Archs whose head count does not divide the TP degree (minitron-4b,
+    musicgen-medium: 24 heads vs 16) replicate attention *compute* over
+    "model" and keep TP on FFN/vocab — recorded as ``attn_mode="replicated"``.
+  * Decode KV caches shard the *sequence* axis over "model" (SP) so a 32k
+    cache at batch 128 fits HBM; GSPMD inserts the small softmax-stat
+    all-reduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]       # batch axes, e.g. ("pod","data")
+    tp_axis: Optional[str]         # "model" (None = no TP, single device)
+    attn_mode: str                 # "heads" | "replicated"
+    kv_repeat: int                 # kv-head duplication factor (heads mode)
+    shard_vocab: bool
+    # weight-shard (ZeRO/FSDP) axes. Deliberately excludes "pod": weight
+    # all-gathers stay inside a pod's ICI; the pod axis carries only the
+    # per-step gradient all-reduce (hierarchical DP).
+    fsdp_axes: Tuple[str, ...] = ("data",)
+
+    @property
+    def dp(self):
+        return self.dp_axes if self.dp_axes else None
+
+    @property
+    def fsdp(self):
+        axes = tuple(a for a in self.fsdp_axes if a in self.mesh.axis_names)
+        return axes if axes else None
+
+    def constrain(self, x, role: str):
+        spec = _ACT_RULES.get(role)
+        if spec is None or self.tp_axis is None:
+            return x
+        pspec = spec(self, x.ndim)
+        if pspec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, pspec))
+
+    def ctx_kwargs(self):
+        return dict(kv_repeat=self.kv_repeat, constrain_fn=self.constrain)
+
+    def moe_sm(self, cfg: ModelConfig):
+        """shard_map expert-parallel handle when the plan supports it."""
+        if self.tp_axis is None or cfg.moe is None:
+            return None
+        tp_size = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[self.tp_axis]
+        if cfg.moe.n_experts % tp_size != 0:
+            return None
+        return (self.mesh, self.dp_axes, self.fsdp or (), self.tp_axis)
+
+
+def make_plan(cfg: ModelConfig, mesh: Mesh, *, kind: str = "train",
+              pure_fsdp: bool = False) -> Plan:
+    """``pure_fsdp``: experimental opt-in (perf iteration #6, REFUTED —
+    EXPERIMENTS.md §Perf): napkin math predicted pure-FSDP beats TP for
+    <=20B dense archs (weight gathers ~1.3e11 B vs TP-AR 4.6e11 B on
+    granite/train_4k), but GSPMD currently lowers the batch-and-weights-on-
+    the-same-axes pattern through involuntary full rematerialization
+    (measured 2.7e13 B all-reduce, 2.3 TB temp). Kept for re-testing under
+    the Shardy partitioner."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    if tp == 1:
+        return Plan(mesh, dp_axes, None, "replicated", 1, False)
+    if (pure_fsdp and kind == "train" and cfg.moe is None
+            and mesh.devices.size <= 256):
+        return Plan(mesh, dp_axes + ("model",), None, "replicated", 1, False,
+                    fsdp_axes=("data", "model"))
+    attn_mode, r = "replicated", 1
+    a = cfg.attention
+    if a is not None:
+        if a.n_heads % tp == 0 and (a.n_kv_heads % tp == 0 or tp % a.n_kv_heads == 0):
+            attn_mode = "heads"
+            r = max(1, tp // a.n_kv_heads)
+    return Plan(mesh, dp_axes, "model", attn_mode, r,
+                shard_vocab=cfg.vocab_size % tp == 0)
+
+
+# ---------------------------------------------------------------------------
+# Activation roles
+# ---------------------------------------------------------------------------
+
+def _heads_only(fn):
+    def rule(plan: Plan, ndim: int):
+        if plan.attn_mode != "heads":
+            return None
+        return fn(plan, ndim)
+    return rule
+
+
+_ACT_RULES = {
+    # [B, S, d]
+    "activations": lambda p, n: P(p.dp, *([None] * (n - 1))),
+    # [B, S, KV', G, D]
+    "q_heads": _heads_only(lambda p, n: P(p.dp, None, p.tp_axis, None, None)),
+    # [B, T, KV', D]
+    "kv_heads": _heads_only(lambda p, n: P(p.dp, None, p.tp_axis, None)),
+    # [B, T, KV, D] pre-duplication (replicated over model)
+    "kv_pre": _heads_only(lambda p, n: P(p.dp, None, None, None)),
+    # [B, S, f] or [N, f]
+    "ffn_hidden": lambda p, n: P(p.dp, *([None] * (n - 2)), p.tp_axis),
+    # [E, C, d] / [E, C, f]: deliberately UNCONSTRAINED. Expert weights are
+    # EP-sharded at the param level; forcing the activation buffers onto the
+    # same axis made GSPMD reshard the token scatter/gather through full
+    # all-reduces (5.5x the collective bytes on dbrx train_4k — perf
+    # iteration #4, EXPERIMENTS.md §Perf). Free propagation lets the
+    # partitioner pick collective-permute routes instead.
+    "expert_buf": lambda p, n: None,
+    "expert_hidden": lambda p, n: None,
+    # [B, S, di]
+    "mamba_inner": lambda p, n: P(p.dp, None, p.tp_axis),
+    # [B, S, H, hd_v]
+    "rwkv_v": lambda p, n: P(p.dp, None, None, p.tp_axis),
+    # decode KV cache [B, KV, S, D] — SP over sequence
+    "kv_cache": lambda p, n: P(p.dp, None, p.tp_axis, None),
+    # [B, S, V]
+    "logits": lambda p, n: (P(p.dp, None, p.tp_axis) if p.shard_vocab
+                            else P(p.dp, None, None)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs (path-pattern rules)
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(plan: Plan, cfg: ModelConfig, path: Tuple[str, ...], ndim: int):
+    """Spec for an *unstacked* layer param; caller prepends None for 'unit'."""
+    F = plan.fsdp  # weight-shard (ZeRO-3) axes — intra-pod only
+    T = plan.tp_axis
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    heads = plan.attn_mode == "heads"
+    is_rwkv = cfg.rwkv is not None  # no assigned arch mixes rwkv with attn
+
+    if name == "emb":  # [V, d]
+        return P(T if plan.shard_vocab else None, F)
+    if name == "lm_head":  # [d, V]
+        return P(F, T if plan.shard_vocab else None)
+    if name in ("final_norm", "norm1", "norm2", "kv_norm", "w0", "dt_bias",
+                "conv_b", "D", "gate_attn", "mu", "u", "bk", "bv"):
+        return P(*([None] * ndim))
+
+    if is_rwkv:  # ---- RWKV6: TP on the value channel --------------------
+        if name in ("wr", "wk") and ndim == 3:   # [d, H, hd_k] key channel
+            return P(F, None, None)
+        if name in ("wv", "wg") and ndim == 3:   # [d, H, hd_v] value channel
+            return P(F, None, T)
+        if name == "wo" and ndim == 3:           # [H, hd_v, d]
+            return P(None, T, F)
+        if name in ("gn_w", "gn_b"):             # [H, hd_v]
+            return P(None, T)
+        if name == "w_A":
+            return P(F, None)
+        if name == "w_B":
+            return P(None, None)
+        if name == "wr" and ndim == 2:           # channel-mix receptance [d,d]
+            return P(F, None)
+        if name == "wk" and ndim == 2:           # channel-mix [d, f]
+            return P(F, T)
+        if name == "wv" and ndim == 2:           # channel-mix [f, d]
+            return P(T, F)
+
+    # attention ------------------------------------------------------------
+    if name == "wq":  # [d|vdim, H, hd] or mla [d, H, qk]
+        return P(F, T if heads else None, None)
+    if name in ("wk", "wv") and ndim == 3:
+        return P(F, None, None)  # kv heads pre-duplication: replicated
+    if name == "wo" and ndim == 3:  # [H, hd, d]
+        return P(T if heads else None, None, F)
+    if name == "bq":
+        return P(T if heads else None, None)
+    # MLA --------------------------------------------------------------------
+    if name in ("wdkv", "wkr"):
+        return P(F, None)
+    if name in ("wuk", "wuv"):  # [l, H, n]
+        return P(F, T if heads else None, None)
+    # MoE ----------------------------------------------------------------
+    if name == "router":
+        return P(F, None)
+    if parent != "shared" and name in ("w_in", "w_gate") and ndim == 3:  # [E,d,f]
+        return P(T, F, None)
+    if parent != "shared" and name == "w_out" and ndim == 3:  # [E,f,d]
+        return P(T, None, F)
+    # dense mlp / shared expert ---------------------------------------------
+    if name in ("w_in", "w_gate"):  # [d, f]
+        return P(F, T)
+    if name == "w_out":  # [f, d]
+        return P(T, F)
+    # mamba -------------------------------------------------------------------
+    if name in ("in_proj_x", "in_proj_z"):  # [d, di]
+        return P(F, T)
+    if name == "conv_w":  # [K, di]
+        return P(None, T)
+    if name == "x_proj":  # [di, r+2ds]
+        return P(T, None)
+    if name == "dt_proj":  # [r, di]
+        return P(None, T)
+    if name == "A_log":  # [di, ds]
+        return P(T, None)
+    return P(*([None] * ndim))
+
+
+def path_contains(path, token):
+    return any(t == token for t in path)
+
+
+def _path_names(keypath) -> Tuple[str, ...]:
+    names = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_pspecs(cfg: ModelConfig, plan: Plan, params_tree) -> Dict:
+    """PartitionSpec pytree matching ``params_tree`` (values or shape-structs)."""
+    def spec_of(keypath, leaf):
+        if plan.tp_axis is None and plan.fsdp is None:
+            return P()
+        names = _path_names(keypath)
+        ndim = len(leaf.shape)
+        stacked = names and names[0] == "unit"
+        base_ndim = ndim - 1 if stacked else ndim
+        # RWKV cm/tm disambiguation happens via leaf rank; path carries names
+        spec = _leaf_spec(plan, cfg, tuple(n for n in names if not n.isdigit()),
+                          base_ndim)
+        spec_t = tuple(spec) + (None,) * (base_ndim - len(spec))
+        if stacked:
+            spec_t = (None,) + spec_t
+        assert len(spec_t) == ndim, (names, spec_t, leaf.shape)
+        return P(*spec_t)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_tree)
+
+
+def batch_pspecs(cfg: ModelConfig, plan: Plan, batch_tree) -> Dict:
+    def spec_of(keypath, leaf):
+        if plan.dp is None:
+            return P()
+        return P(plan.dp, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map_with_path(spec_of, batch_tree)
+
+
+def dp_size(plan: Plan) -> int:
+    sizes = dict(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
+    n = 1
+    for a in plan.dp_axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def cache_pspecs(cfg: ModelConfig, plan: Plan, cache_tree,
+                 batch_size: int = 0) -> Dict:
+    """Decode-cache specs: seq axis over "model" for attention/MLA caches.
+
+    ``batch_size``: when given and not divisible by the dp degree (e.g. the
+    long_500k cell's global_batch=1), batch dims are left unsharded.
+    """
+    dp = plan.dp
+    if batch_size and dp is not None and batch_size % dp_size(plan) != 0:
+        plan = dataclasses.replace(plan, dp_axes=())
+
+    def spec_of(keypath, leaf):
+        if plan.tp_axis is None:
+            return P()
+        names = _path_names(keypath)
+        name = names[-1]
+        ndim = len(leaf.shape)
+        stacked = names and names[0] == "unit"
+        base = ndim - 1 if stacked else ndim
+        T = plan.tp_axis
+        if name in ("k", "v") and base == 4:
+            # attn cache [B,KV,S,D] -> SP on S ; xattn cache [B,Nv,KV,D]
+            # (distinguish: xattn caches have n_tokens second)
+            is_xattn = (cfg.vision is not None
+                        and leaf.shape[stacked + 1] == cfg.vision.n_tokens)
+            spec = (plan.dp, None, None, None) if is_xattn else (plan.dp, None, T, None)
+        elif name == "ckv" and base == 3:  # [B,S,l]
+            spec = (plan.dp, T, None)
+        elif name == "krope":
+            spec = (plan.dp, T, None)
+        elif name == "ssm":  # [B,di,ds]
+            spec = (plan.dp, T, None)
+        elif name == "conv":  # [B,K-1,di]
+            spec = (plan.dp, None, T)
+        elif name == "wkv":  # [B,H,hdk,hdv]
+            spec = (plan.dp, None, None, T)
+        else:  # shift_tm/shift_cm [B,d]
+            spec = (plan.dp,) + (None,) * (base - 1)
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(spec_of, cache_tree)

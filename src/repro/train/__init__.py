@@ -1,0 +1,3 @@
+from repro.train.optimizer import (adamw_update, clip_by_global_norm,
+                                   init_opt_state, lr_schedule)
+from repro.train.trainer import TrainState, make_train_step, init_train_state

@@ -1,0 +1,73 @@
+"""Pure-JAX AdamW with decoupled weight decay, global-norm clipping, and a
+warmup+cosine schedule. Moments are stored in ``moment_dtype`` (bf16 for the
+>=100B dry-run configs) with f32 update math."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_opt_state(params, moment_dtype="float32"):
+    mdt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def lr_schedule(step, tcfg):
+    step = step.astype(F32) + 1.0  # 1-indexed: step 0 trains at lr/warmup
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(F32) * scale).astype(x.dtype), grads), g
+
+
+_DECAY_EXEMPT = ("norm", "bias", "gate", "mu", "w0", "u", "dt_bias", "gn_",
+                 "A_log", "D")
+
+
+def _decay_mask(path_names) -> bool:
+    name = path_names[-1]
+    return not any(t in name for t in _DECAY_EXEMPT)
+
+
+def adamw_update(params, grads, opt_state, tcfg, lr):
+    count = opt_state["count"] + 1
+    c = count.astype(F32)
+    bc1 = 1.0 - tcfg.b1 ** c
+    bc2 = 1.0 - tcfg.b2 ** c
+
+    def upd(keypath, p, g, m, v):
+        gf = g.astype(F32)
+        m2 = tcfg.b1 * m.astype(F32) + (1 - tcfg.b1) * gf
+        v2 = tcfg.b2 * v.astype(F32) + (1 - tcfg.b2) * gf * gf
+        mh = m2 / bc1
+        vh = v2 / bc2
+        step = mh / (jnp.sqrt(vh) + tcfg.eps)
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        if _decay_mask(names):
+            step = step + tcfg.weight_decay * p.astype(F32)
+        p2 = p.astype(F32) - lr * step
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat = jax.tree_util.tree_map_with_path(
+        upd, params, grads, opt_state["m"], opt_state["v"])
+    outer = jax.tree.structure(params)
+    inner = jax.tree.structure((0, 0, 0))
+    new_params, new_m, new_v = jax.tree.transpose(outer, inner, flat)
+    return new_params, {"m": new_m, "v": new_v, "count": count}

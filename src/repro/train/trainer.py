@@ -1,0 +1,166 @@
+"""Train-step builder: value_and_grad + microbatch accumulation + AdamW,
+with the paper's in-graph ballast hook (power stabilization) attached.
+
+The returned ``train_step(state, batch)`` is pure and jit/pjit-friendly;
+``in_out_shardings`` builds the NamedSharding trees for pjit from a Plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import Ctx, init_params, loss_fn
+from repro.train.optimizer import (adamw_update, clip_by_global_norm,
+                                   init_opt_state, lr_schedule)
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array  # int32 scalar
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    params = init_params(key, cfg)
+    opt = init_opt_state(params, tcfg.moment_dtype)
+    return TrainState(params, opt, jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch, n):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan=None,
+                    unroll: bool = False):
+    ctx_kwargs = plan.ctx_kwargs() if plan is not None else {}
+    if plan is not None and hasattr(plan, "moe_sm"):
+        ctx_kwargs["moe_sm"] = plan.moe_sm(cfg)
+
+    def loss_for_grad(params, mb):
+        ctx = Ctx(cfg=cfg, remat=tcfg.remat, unroll=unroll, **ctx_kwargs)
+        loss, metrics = loss_fn(params, cfg, mb, ctx)
+        if tcfg.ballast and tcfg.ballast_gflops > 0:
+            from repro.core.ballast_inject import attach_ballast
+            loss = attach_ballast(loss, tcfg.ballast_gflops)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        n = tcfg.microbatches
+        if n > 1:
+            mbs = _split_microbatches(batch, n)
+
+            def acc(carry, mb):
+                (tot, gacc) = carry
+                (l, _m), g = grad_fn(state.params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(F32), gacc, g)
+                return (tot + l, gacc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), F32), g0), mbs)
+            loss = loss / n
+            grads = jax.tree.map(lambda g: (g / n), grads)
+            metrics = {"ce": loss, "moe_aux": jnp.zeros((), F32)}
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_schedule(state.step, tcfg)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt, tcfg, lr)
+        out = TrainState(new_params, new_opt, state.step + 1)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return out, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Compressed-gradient data-parallel step (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def make_dp_compressed_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                                  axis: str = "data"):
+    """Data-parallel train step with int8 error-feedback gradient reduction.
+
+    Params replicated; each shard computes grads on its batch slice; the
+    mean is taken with ``compressed_allreduce_mean`` (8.25 bits/elem wire vs
+    32 — the paper's Call-to-Action #1 'power-aware training algorithms'
+    cuts the comm-phase duration, which directly shrinks the power trough).
+    Error-feedback residuals ride in the state so the quantization bias
+    vanishes across steps. State: (TrainState, err_tree).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.parallel.collectives import compressed_allreduce_mean
+
+    def init_err(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def step_body(state: TrainState, err, batch):
+        ctx_kwargs = {}
+
+        def loss_f(params, mb):
+            ctx = Ctx(cfg=cfg, remat=tcfg.remat, **ctx_kwargs)
+            return loss_fn(params, cfg, mb, ctx)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_f, has_aux=True)(
+            state.params, batch)
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree.leaves(err)
+        reduced, new_err = [], []
+        for g, e in zip(flat_g, flat_e):
+            r, ne = compressed_allreduce_mean(g, e, axis)
+            reduced.append(r)
+            new_err.append(ne.astype(jnp.float32))
+        grads = jax.tree_util.tree_unflatten(tdef, reduced)
+        err = jax.tree_util.tree_unflatten(tdef, new_err)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_schedule(state.step, tcfg)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt,
+                                           tcfg, lr)
+        loss = jax.lax.pmean(loss, axis)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), err, metrics
+
+    rep = P()
+
+    def train_step(state, err, batch):
+        fn = shard_map(
+            step_body, mesh=mesh,
+            in_specs=(rep, rep, P(axis)),   # pytree-prefix specs
+            out_specs=(rep, rep, rep), check_rep=False)
+        return fn(state, err, batch)
+
+    return train_step, init_err
+
+
+# ---------------------------------------------------------------------------
+# pjit sharding trees
+# ---------------------------------------------------------------------------
+
+def in_out_shardings(cfg: ModelConfig, plan, state_shape, batch_shape):
+    """NamedSharding trees for (state, batch) -> (state, metrics)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.sharding import batch_pspecs, param_pspecs
+
+    def ns(spec):
+        return NamedSharding(plan.mesh, spec)
+
+    pspecs = param_pspecs(cfg, plan, state_shape.params)
+    param_sh = jax.tree.map(ns, pspecs)
+    opt_sh = {"m": jax.tree.map(ns, pspecs), "v": jax.tree.map(ns, pspecs),
+              "count": ns(P())}
+    state_sh = TrainState(param_sh, opt_sh, ns(P()))
+    batch_sh = jax.tree.map(ns, batch_pspecs(cfg, plan, batch_shape))
+    metrics_sh = ns(P())
+    return state_sh, batch_sh, metrics_sh

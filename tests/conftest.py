@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+only launch/dryrun.py boots the 512-device placeholder platform."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(cfg, B=2, S=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    batch = {"labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jax.random.randint(jax.random.fold_in(k, 1),
+                                             (B, S), 0, cfg.vocab_size)
+    else:
+        batch["inputs"] = jax.random.normal(jax.random.fold_in(k, 2),
+                                            (B, S, cfg.d_model))
+    if cfg.vision is not None:
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 3), (B, cfg.vision.n_tokens, cfg.vision.dim))
+    return batch
+
+
+@pytest.fixture(params=ARCH_IDS)
+def arch_cfg(request):
+    return reduced(get_config(request.param))

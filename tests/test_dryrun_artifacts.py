@@ -1,0 +1,81 @@
+"""Validate the committed multi-pod dry-run artifacts: every (arch x shape
+x mesh) cell compiled, with coherent cost/memory/collective numbers.
+
+Skipped when artifacts/dryrun is absent (e.g. fresh checkout) — regenerate
+with: PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, shapes_for
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+ART = os.path.join(_ROOT, "dryrun")
+ART_V2 = os.path.join(_ROOT, "dryrun_v2")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(ART), reason="dry-run artifacts not generated")
+
+
+def _cells():
+    out = []
+    for arch in ARCH_IDS:
+        for shape in shapes_for(get_config(arch)):
+            for mesh in ("single", "multi"):
+                out.append((arch, shape.name, mesh))
+    return out
+
+
+@pytest.mark.parametrize("root", [ART, ART_V2])
+def test_all_cells_present_and_ok(root):
+    if not os.path.isdir(root):
+        pytest.skip("sweep missing")
+    cells = _cells()
+    assert len(cells) == 64
+    missing, failed = [], []
+    for arch, shape, mesh in cells:
+        p = os.path.join(root, f"{arch}__{shape}__{mesh}.json")
+        if not os.path.exists(p):
+            missing.append((arch, shape, mesh))
+            continue
+        with open(p) as f:
+            d = json.load(f)
+        if "error" in d:
+            failed.append((arch, shape, mesh))
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"
+
+
+@pytest.mark.parametrize("mesh,chips", [("single", 256), ("multi", 512)])
+def test_cell_contents_coherent(mesh, chips):
+    for p in glob.glob(os.path.join(ART, f"*__{mesh}.json")):
+        with open(p) as f:
+            d = json.load(f)
+        if "error" in d:
+            continue
+        assert d["n_chips"] == chips, p
+        assert d["exact"]["flops"] > 0, p
+        assert d["exact"]["bytes"] > 0, p
+        assert d["memory"]["state_bytes_per_device"] > 0, p
+        # multi-pod mesh must actually use the pod axis: gradient sync
+        # crosses pods for train cells -> nonzero collectives
+        if d["kind"] == "train":
+            assert sum(d["collectives"].values()) > 0, p
+
+
+def test_train_flops_close_to_6nd():
+    """MODEL_FLOPS = 6*N*D should be within ~3.5x of compiled HLO flops
+    (remat + causal-chunk overcompute account for the gap, see §Roofline)."""
+    for arch in ARCH_IDS:
+        p = os.path.join(ART, f"{arch}__train_4k__single.json")
+        with open(p) as f:
+            d = json.load(f)
+        if "error" in d:
+            continue
+        n = d["active_params"]
+        model_flops = 6.0 * n * 4096 * 256
+        ratio = d["exact"]["flops"] / model_flops
+        assert 0.9 < ratio < 5.0, (arch, ratio)

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ballast.ballast import ballast_pallas
+from repro.kernels.ballast.ops import ballast_burn, ballast_flops
+from repro.kernels.ballast.ref import ballast_ref
+from repro.kernels.goertzel.goertzel import goertzel_pallas
+from repro.kernels.goertzel.ops import bin_power
+from repro.kernels.goertzel.ref import bin_power_ref, goertzel_ref
+
+
+@pytest.mark.parametrize("m,k,n", [(256, 128, 128), (512, 256, 256),
+                                   (1024, 384, 384)])
+@pytest.mark.parametrize("n_iter", [1, 7, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ballast_vs_ref(m, k, n, n_iter, dtype):
+    key = jax.random.PRNGKey(42)
+    a = (jax.random.normal(key, (m, k), jnp.float32) / np.sqrt(k)).astype(dtype)
+    b = (jnp.eye(k, n) * 0.999).astype(dtype)
+    out = ballast_pallas(a, b, n_iter, interpret=True)
+    ref = ballast_ref(a, b, n_iter)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bm", [128, 256])
+def test_ballast_block_shapes(bm):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (512, 128), jnp.float32)
+    b = (jnp.eye(128) * 0.999).astype(jnp.float32)
+    out = ballast_pallas(a, b, 4, bm=bm, interpret=True)
+    ref = ballast_ref(a, b, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_ballast_burn_hits_flop_target():
+    assert ballast_flops(1024, 256, 256, 10) == 2 * 1024 * 256 * 256 * 10
+    s = ballast_burn(jax.random.PRNGKey(0), gflops=0.02, interpret=True)
+    assert np.isfinite(float(s))
+
+
+@pytest.mark.parametrize("win", [256, 1000, 1024])
+@pytest.mark.parametrize("n_freqs", [1, 3, 4])
+def test_goertzel_vs_recurrence_ref(win, n_freqs):
+    rng = np.random.default_rng(win + n_freqs)
+    dt = 0.001
+    n = win * 8
+    x = rng.normal(100.0, 20.0, n).astype(np.float32)
+    freqs = np.linspace(0.5, 10.0, n_freqs)
+    out = bin_power(jnp.asarray(x), dt, jnp.asarray(freqs), win=win,
+                    interpret=True)
+    W = n // win
+    coef = 2 * np.cos(2 * np.pi * freqs * dt)
+    wnd = x[: W * win].reshape(W, win)
+    wnd = wnd - wnd.mean(axis=1, keepdims=True)  # ops wrapper removes DC
+    ref = goertzel_ref(wnd, coef)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=0.1)
+
+
+def test_goertzel_recovers_known_amplitude():
+    """A 30 W, 2 Hz oscillation must read ~30 on the 2 Hz bin."""
+    dt = 0.001
+    n = 8000
+    t = np.arange(n) * dt
+    x = 200 + 30 * np.sin(2 * np.pi * 2.0 * t)
+    out = bin_power(jnp.asarray(x, jnp.float32), dt,
+                    jnp.asarray([1.0, 2.0, 5.0]), win=1000, interpret=True)
+    amps = np.asarray(out).mean(axis=0)
+    assert abs(amps[1] - 30.0) < 1.5
+    assert amps[0] < 3.0 and amps[2] < 3.0
+
+
+def test_goertzel_matches_dft_at_integer_bins():
+    dt = 0.001
+    win = 1000  # 1 s -> integer Hz are exact DFT bins
+    rng = np.random.default_rng(0)
+    x = rng.normal(100, 15, win * 4).astype(np.float32)
+    freqs = np.array([1.0, 3.0, 7.0])
+    out = bin_power(jnp.asarray(x), dt, jnp.asarray(freqs), win=win,
+                    interpret=True)
+    ref = bin_power_ref(x.reshape(4, win), dt, freqs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-3, atol=0.05)
+
+
+def test_goertzel_block_padding():
+    """W not divisible by block_w exercises the pad/trim path."""
+    dt = 0.001
+    x = np.random.default_rng(1).normal(50, 5, 5 * 256).astype(np.float32)
+    out = bin_power(jnp.asarray(x), dt, jnp.asarray([2.0]), win=256,
+                    block_w=4, interpret=True)
+    assert out.shape == (5, 1)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (perf iteration #2)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash.ops import flash_sdpa
+from repro.kernels.flash.ref import flash_ref
+
+
+@pytest.mark.parametrize("B,S,KV,G,D", [(1, 64, 2, 2, 16), (2, 128, 1, 4, 8),
+                                        (1, 96, 3, 1, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_vs_dense_oracle(B, S, KV, G, D, causal):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B * S), 3)
+    q = jax.random.normal(k1, (B, S, KV, G, D))
+    k = jax.random.normal(k2, (B, S, KV, D))
+    v = jax.random.normal(k3, (B, S, KV, D))
+    out = flash_sdpa(q, k, v, causal=causal, q_block=32, kv_chunk=16,
+                     interpret=True)
+    ref = flash_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_mla_vdim():
+    """V head dim != QK head dim (MLA layout)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(k1, (1, 64, 2, 1, 24))
+    k = jax.random.normal(k2, (1, 64, 2, 24))
+    v = jax.random.normal(k3, (1, 64, 2, 16))
+    out = flash_sdpa(q, k, v, q_block=32, kv_chunk=16, interpret=True)
+    assert out.shape == (1, 64, 2, 1, 16)
+    ref = flash_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (1, 64, 2, 2, 16), jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 64, 2, 16), jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 64, 2, 16), jnp.bfloat16)
+    out = flash_sdpa(q, k, v, q_block=32, kv_chunk=16, interpret=True)
+    ref = flash_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2)

@@ -1,0 +1,77 @@
+"""Per-arch smoke tests (assignment requirement: reduced config of the same
+family, one forward/train step on CPU, assert shapes + no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced, shapes_for
+from repro.configs.base import LM_SHAPES
+from repro.models import Model
+from repro.train import init_train_state, make_train_step
+from repro.configs import TrainConfig
+
+from conftest import tiny_batch
+
+
+def test_all_archs_registered():
+    assert len(ARCH_IDS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_validates(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    n = cfg.param_count()
+    # sanity: params within 40% of the advertised size class
+    advertised = {"granite-3-8b": 8e9, "nemotron-4-340b": 340e9,
+                  "qwen1.5-110b": 110e9, "minitron-4b": 4e9,
+                  "musicgen-medium": 1.5e9, "deepseek-v2-lite-16b": 16e9,
+                  "dbrx-132b": 132e9, "jamba-v0.1-52b": 52e9,
+                  "rwkv6-3b": 3e9, "llama-3.2-vision-11b": 11e9}[arch]
+    assert 0.6 * advertised < n < 1.6 * advertised, (arch, n, advertised)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = tiny_batch(cfg)
+    x, aux = jax.jit(lambda p, b: m.forward(p, b))(params, batch)
+    assert x.shape == (2, 16, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(x)))
+    # one train step
+    tcfg = TrainConfig(total_steps=10)
+    state = init_train_state(jax.random.PRNGKey(1), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2.step) == 1
+    # params actually changed
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(state.params),
+                                jax.tree.leaves(state2.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_moe_aux_present_for_moe_archs(arch):
+    cfg = reduced(get_config(arch))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    loss, metrics = jax.jit(lambda p, b: m.loss(p, b))(params, tiny_batch(cfg))
+    if cfg.moe is not None:
+        assert float(metrics["moe_aux"]) > 0.0
+    else:
+        assert float(metrics["moe_aux"]) == 0.0
+
+
+def test_shape_cells_inventory():
+    """40 assigned cells; long_500k runs only for sub-quadratic archs."""
+    cells = [(a, s.name) for a in ARCH_IDS for s in shapes_for(get_config(a))]
+    assert len(cells) == 32  # 8 archs x 3 + 2 archs x 4 (skips in DESIGN.md)
+    assert ("rwkv6-3b", "long_500k") in cells
+    assert ("jamba-v0.1-52b", "long_500k") in cells
+    assert ("granite-3-8b", "long_500k") not in cells
+    assert len(LM_SHAPES) == 4

@@ -1,0 +1,107 @@
+"""shard_map expert-parallel MoE (perf iteration #7) vs the dense oracle.
+
+The multi-device check runs in a subprocess with 8 simulated host devices
+(the main test process must keep the default 1-device platform)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import moe as moe_mod
+from repro.models.model import Ctx
+
+
+def test_shardmap_moe_single_device_degenerate():
+    """On a (1,1) mesh the psum/all_gather are identities."""
+    cfg = reduced(get_config("dbrx-132b"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    ref = moe_mod.moe_forward_ref(p, x, cfg)
+    ctx = Ctx(cfg=cfg, dropless=True)
+    sm = (mesh, ("data",), ("data",), "model")
+    out, aux = jax.jit(
+        lambda p, x: moe_mod.moe_forward_shardmap(p, x, cfg, ctx, sm))(p, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import moe as moe_mod
+    from repro.models.model import Ctx
+    for arch in ("dbrx-132b", "deepseek-v2-lite-16b"):
+        cfg = reduced(get_config(arch))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        p = moe_mod.init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, cfg.d_model))
+        ref = moe_mod.moe_forward_ref(p, x, cfg)
+        ctx = Ctx(cfg=cfg, dropless=True)
+        sm = (mesh, ("data",), ("data",), "model")
+        out, aux = jax.jit(
+            lambda p, x: moe_mod.moe_forward_shardmap(p, x, cfg, ctx, sm))(p, x)
+        assert np.allclose(out, ref, rtol=2e-4, atol=2e-4), arch
+        g = jax.grad(lambda p, x: moe_mod.moe_forward_shardmap(
+            p, x, cfg, ctx, sm)[0].sum())(p, x)
+        gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+        assert gn > 0 and np.isfinite(gn), arch
+    print("MULTIDEV_OK")
+""")
+
+
+def test_shardmap_moe_multidevice_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=480,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
+
+
+DP_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.data import SyntheticLM
+    from repro.train import init_train_state, make_train_step
+    from repro.train.trainer import make_dp_compressed_train_step
+    cfg = reduced(get_config("granite-3-8b"))
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=5, total_steps=30)
+    mesh = jax.make_mesh((8,), ("data",))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_c, init_err = make_dp_compressed_train_step(cfg, tcfg, mesh)
+    err = init_err(state.params)
+    step_c = jax.jit(step_c)
+    ref_state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    ref_step = jax.jit(make_train_step(cfg, tcfg))
+    data = SyntheticLM(cfg, batch=8, seq=32, seed=0)
+    for i in range(30):
+        b = {k: jnp.asarray(v) for k, v in data(i).items()}
+        state, err, m = step_c(state, err, b)
+        ref_state, mr = ref_step(ref_state, b)
+    lc, lr = float(m["loss"]), float(mr["loss"])
+    assert lc < 4.0, lc                      # converged
+    assert abs(lc - lr) < 0.4, (lc, lr)      # tracks exact training
+    print("DP_COMPRESSED_OK")
+""")
+
+
+def test_dp_compressed_training_subprocess():
+    """int8 error-feedback gradient all-reduce: 8-way DP training converges
+    and tracks the exact-gradient trajectory (3.9x less DP wire)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", DP_SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=480,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "DP_COMPRESSED_OK" in r.stdout, r.stdout + r.stderr

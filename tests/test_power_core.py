@@ -1,0 +1,115 @@
+"""Unit tests: spec validation, spectrum, waveform synthesis, phases."""
+import numpy as np
+import pytest
+
+import repro.core as core
+
+
+def square_wave(period_s=2.0, duty=0.75, hi=220.0, lo=90.0, dt=0.001, secs=60):
+    n = int(secs / dt)
+    t = np.arange(n) * dt
+    return np.where((t % period_s) < duty * period_s, hi, lo), dt
+
+
+# ---------------------------------------------------------------------------
+def test_spectrum_peak_at_iteration_frequency():
+    w, dt = square_wave(period_s=2.0)
+    assert abs(core.dominant_frequency(w, dt) - 0.5) < 0.05
+
+
+def test_band_energy_concentered_in_paper_band():
+    """Paper: FFT energy concentrated 0.2-3 Hz for 1-5 s iterations."""
+    for period in (0.5, 1.0, 3.0):
+        w, dt = square_wave(period_s=period)
+        frac = core.band_energy_fraction(w, dt, 0.2, 3.0)
+        assert frac > 0.5, (period, frac)
+
+
+def test_flat_load_has_no_band_energy():
+    w = np.full(10000, 1e6)
+    assert core.band_energy_fraction(w, 0.001, 0.1, 20.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+def test_spec_validate_flags_violations():
+    w, dt = square_wave(hi=1e6, lo=0.4e6)
+    spec = core.UtilitySpec(
+        "tight",
+        core.TimeDomainSpec(ramp_up_w_per_s=1e5, ramp_down_w_per_s=1e5,
+                            dynamic_range_w=1e5),
+        core.FrequencyDomainSpec((0.1, 20.0), 0.1))
+    rep = spec.validate(w, dt)
+    assert not rep.ok
+    assert "ramp_up" in rep.violations
+    assert "dynamic_range" in rep.violations
+    assert "band_energy" in rep.violations
+
+
+def test_spec_validate_passes_smooth_load():
+    n = 60000
+    w = 1e6 + 1e3 * np.sin(2 * np.pi * 0.01 * np.arange(n) * 0.001)
+    spec = core.example_specs(job_mw=1.0)["tight"]
+    rep = spec.validate(w, 0.001)
+    assert rep.ok, rep.violations
+
+
+# ---------------------------------------------------------------------------
+def test_phase_timeline_from_cell():
+    cell = {"n_chips": 256,
+            "exact": {"flops": 7.5e16, "bytes": 1.0e16},
+            "collectives": {"all-reduce": 7e11},
+            "memory": {"state_bytes_per_device": 8e9}}
+    tl = core.from_dryrun_cell(cell)
+    assert tl.period_s > 0
+    modes = [p.mode for p in tl.phases]
+    assert "comm" in modes
+    # moe cell adds the all-to-all notch
+    cell["collectives"]["all-to-all"] = 2e11
+    tl2 = core.from_dryrun_cell(cell)
+    assert any(p.name == "moe-a2a" for p in tl2.phases)
+
+
+def test_chip_waveform_levels_and_edp():
+    tl = core.synthetic_timeline(period_s=1.0, comm_frac=0.3)
+    cfg = core.WaveformConfig(dt=0.001, steps=5, edp_spikes=True)
+    w = core.chip_waveform(tl, cfg)
+    hw = core.DEFAULT_HW
+    assert w.min() == pytest.approx(hw.chip.comm_w)
+    assert w.max() == pytest.approx(hw.chip.tdp_w * hw.chip.edp_factor)
+    # EDP overshoot limited to the 50 ms window
+    over = (w > hw.chip.tdp_w + 1).sum() * cfg.dt
+    assert over <= 5 * (hw.chip.edp_window_s + 0.002)
+
+
+def test_aggregate_scales_and_jitter_softens():
+    tl = core.synthetic_timeline(period_s=1.0, comm_frac=0.3)
+    cfg0 = core.WaveformConfig(dt=0.001, steps=6, jitter_s=0.0, edp_spikes=False)
+    cfgj = core.WaveformConfig(dt=0.001, steps=6, jitter_s=0.02, edp_spikes=False)
+    w0 = core.aggregate(core.chip_waveform(tl, cfg0), 512, cfg0)
+    wj = core.aggregate(core.chip_waveform(tl, cfgj), 512, cfgj)
+    assert w0.max() > 512 * 200  # ~512 chips near TDP
+    # jitter preserves mean but softens the extremes
+    assert abs(wj.mean() - w0.mean()) / w0.mean() < 0.02
+    assert wj.max() <= w0.max() + 1e-6
+    # swing survives jitter (bulk-synchronous job): still a large fraction
+    assert (wj.max() - wj.min()) > 0.5 * (w0.max() - w0.min())
+
+
+def test_server_breakdown_matches_fig2_claim():
+    """Fig. 2: accelerators are >50% of provisioned server power."""
+    assert core.DEFAULT_HW.chip_share() > 0.5
+
+
+# ---------------------------------------------------------------------------
+def test_stagger_meets_ramp_limit():
+    rack_w = 32 * 220.0
+    limit = 2 * rack_w  # W/s
+    sched = core.plan_stagger(n_racks=16, rack_power_w=rack_w,
+                              ramp_limit_w_per_s=limit, rack_ramp_s=2.0)
+    w = core.ramp_waveform(sched, 16, rack_w, dt=0.01)
+    assert core.max_ramp(w, 0.01) <= limit * 1.05
+    # and the unstaggered ramp would violate it
+    flat = core.StaggerSchedule(offsets_s=np.zeros(16),
+                                rack_ramp_w_per_s=sched.rack_ramp_w_per_s)
+    w_bad = core.ramp_waveform(flat, 16, rack_w, dt=0.01)
+    assert core.max_ramp(w_bad, 0.01) > limit

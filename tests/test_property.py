@@ -1,0 +1,157 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core.hardware import DEFAULT_HW
+from repro.models.layers import apply_rope
+from repro.parallel.collectives import BLOCK, compressed_bytes, quantize_roundtrip
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3000), st.integers(0, 2 ** 31 - 1),
+       st.floats(1e-6, 1e6))
+def test_quantize_roundtrip_error_bounded(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    y = quantize_roundtrip(x)
+    # per-block error bounded by half a quantization step
+    err = np.abs(np.asarray(x - y))
+    blocks = np.abs(np.asarray(x))
+    pad = (-n) % BLOCK
+    bmax = np.pad(blocks, (0, pad)).reshape(-1, BLOCK).max(axis=1)
+    bound = np.repeat(bmax / 127.0 * 0.5001 + 1e-10, BLOCK)[:n]
+    assert np.all(err <= bound)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 10 ** 6))
+def test_compressed_bytes_below_fp32(n):
+    assert compressed_bytes(n) < 4 * n or n < 16
+
+
+# ---------------------------------------------------------------------------
+# power controllers
+# ---------------------------------------------------------------------------
+
+def _wave(seed, n=4000, dt=0.001):
+    rng = np.random.default_rng(seed)
+    levels = rng.uniform(DEFAULT_HW.chip.idle_w, DEFAULT_HW.chip.tdp_w, 8)
+    seg = n // 8
+    return np.repeat(levels, seg)[:n].astype(np.float64)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.4, 0.9),
+       st.floats(100.0, 5000.0))
+def test_gpu_floor_ramp_invariant(seed, mpf, ramp):
+    w = _wave(seed)
+    gf = core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=ramp,
+                                ramp_down_w_per_s=ramp, stop_delay_s=1.0)
+    out, _ = gf.apply(w, 0.001)
+    d = np.abs(np.diff(out)) / 0.001
+    assert d.max() <= ramp * 1.01 + 1e-6
+    assert out.max() <= DEFAULT_HW.chip.tdp_w * DEFAULT_HW.chip.edp_factor + 1e-6
+    assert out.min() >= 0.0
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.8, 1.0),
+       st.floats(0.1, 4.0))
+def test_battery_soc_and_energy_invariants(seed, eff, capf):
+    w = _wave(seed) * 100
+    swing = max(w.max() - w.min(), 1.0)
+    bat = core.RackBattery(capacity_j=capf * swing, max_discharge_w=swing,
+                           max_charge_w=swing, efficiency=eff)
+    out, aux = bat.apply(w, 0.001)
+    soc = aux["soc_trace"]
+    assert soc.min() >= -1e-3 and soc.max() <= capf * swing * (1 + 1e-6)
+    assert np.all(out >= -1e-6)
+    # exact bookkeeping identity: SoC trajectory = integral of (dis, chg)
+    # flows with one-way efficiency — energy is never created in the update
+    dt = 0.001
+    flows = w - out                         # >0: discharge, <0: charge
+    dis = np.clip(flows, 0.0, None)
+    chg = np.clip(-flows, 0.0, None)
+    soc0 = 0.5 * capf * swing
+    expected = soc0 - dis.sum() * dt / eff + chg.sum() * dt * eff
+    np.testing.assert_allclose(soc[-1], expected,
+                               rtol=5e-3, atol=1e-2 * capf * swing + 1.0)
+    # and the battery never delivers more than efficiency allows round-trip
+    assert dis.sum() * dt <= eff * (soc0 + chg.sum() * dt * eff) + 1.0
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_firefly_never_exceeds_tdp_nor_reduces_power(seed):
+    w = _wave(seed)
+    ff = core.Firefly()
+    out, _ = ff.apply(w, 0.001)
+    assert out.max() <= DEFAULT_HW.chip.tdp_w + 1e-6
+    assert np.all(out >= w - 1e-6)  # ballast only ever adds power
+
+
+# ---------------------------------------------------------------------------
+# spectrum / stagger
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_band_fractions_partition(seed):
+    w = _wave(seed)
+    lo = core.band_energy_fraction(w, 0.001, 0.0, 5.0)
+    hi = core.band_energy_fraction(w, 0.001, 5.0001, 500.0)  # disjoint bins
+    assert 0.0 <= lo <= 1.0 and 0.0 <= hi <= 1.0
+    assert lo + hi <= 1.0 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.floats(1e4, 1e6), st.floats(0.2, 3.0))
+def test_stagger_always_meets_limit(n_racks, rack_w, mult):
+    limit = mult * rack_w  # W/s
+    sched = core.plan_stagger(n_racks, rack_w, limit, rack_ramp_s=1.0)
+    w = core.ramp_waveform(sched, n_racks, rack_w, dt=0.02)
+    assert core.max_ramp(w, 0.02) <= limit * 1.10
+
+
+# ---------------------------------------------------------------------------
+# model numerics
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 4), st.integers(1, 16), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_rope_is_isometry(b, s, d2, seed):
+    d = 2 * d2
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, 1, d))
+    pos = jnp.arange(s)
+    y = apply_rope(x, pos[None, :, None], 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([8, 12, 16]),
+       st.sampled_from([4, 8]), st.integers(0, 2 ** 31 - 1))
+def test_chunked_attention_property(b, s, chunk, seed):
+    from repro.models.attention import _chunked_sdpa, _dense_sdpa
+    if s % chunk:
+        return
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, s, 2, 2, 8))
+    k = jax.random.normal(k2, (b, s, 2, 8))
+    v = jax.random.normal(k3, (b, s, 2, 8))
+    pos = jnp.arange(s)
+    dense = _dense_sdpa(q, k, v, pos, jnp.arange(s), True, 8 ** -0.5)
+    chnk = _chunked_sdpa(q, k, v, pos, True, 8 ** -0.5, chunk)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chnk),
+                               rtol=1e-4, atol=1e-4)
