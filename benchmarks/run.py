@@ -10,7 +10,7 @@ import traceback
 
 from benchmarks import (fig1_waveform, fig2_breakdown, fig3_fft,
                         fig5_squarewave, fig6_mpf, fig7_battery,
-                        kernels_bench, roofline, table1_matrix)
+                        kernels_bench, roofline, sweep_bench, table1_matrix)
 
 MODULES = [
     ("fig1", fig1_waveform),
@@ -20,6 +20,7 @@ MODULES = [
     ("fig6", fig6_mpf),
     ("fig7", fig7_battery),
     ("table1", table1_matrix),
+    ("sweep", sweep_bench),
     ("kernels", kernels_bench),
     ("roofline", roofline),
 ]

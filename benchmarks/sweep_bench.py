@@ -1,0 +1,124 @@
+"""Serial vs batched scenario-sweep wall-clock — writes BENCH_sweep.json.
+
+The workload is the operator's pre-dispatch question: across a matrix of
+workloads and (MPF, battery) configurations, which pass the utility spec
+and at what energy overhead?  The serial path answers it one ``simulate``
+call at a time (the pre-engine architecture); the batched path runs each
+workload's 25-config grid as ONE jit/vmap call via ``engine.sweep``.
+
+  PYTHONPATH=src python -m benchmarks.sweep_bench
+
+Reported timings: ``serial_s`` is the full Python loop; ``batched_warm_s``
+is a steady-state sweep (compiled functions cached — the regime every
+sweep after the first runs in); ``batched_cold_s`` includes compilation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import emit
+
+N_CHIPS = 512
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+
+
+def scenario_matrix():
+    """4 workloads x 25 (MPF x battery) configs — the acceptance grid."""
+    workloads = {
+        "dense_2s": core.synthetic_timeline(period_s=2.0, comm_frac=0.19),
+        "dense_1s": core.synthetic_timeline(period_s=1.0, comm_frac=0.30),
+        "moe_3s": core.synthetic_timeline(period_s=3.0, comm_frac=0.25,
+                                          moe_notch=True),
+        "ckpt_heavy": core.synthetic_timeline(period_s=1.5, comm_frac=0.40),
+    }
+    cfg = core.WaveformConfig(dt=0.002, steps=12, jitter_s=0.002)
+    # swing scale for battery sizing: one representative aggregate
+    w = core.aggregate(core.chip_waveform(workloads["dense_2s"], cfg),
+                       N_CHIPS, cfg)
+    swing = float(w.max() - w.min())
+    configs = []
+    for mpf in (0.5, 0.65, 0.8, 0.85, 0.9):
+        for cap_f in (0.25, 0.5, 1.0, 2.0, 4.0):
+            gpu = core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=2000,
+                                         ramp_down_w_per_s=2000,
+                                         stop_delay_s=1.0)
+            bat = core.RackBattery(capacity_j=cap_f * swing,
+                                   max_discharge_w=swing, max_charge_w=swing,
+                                   target_tau_s=10.0)
+            configs.append((gpu, bat))
+    spec = core.example_specs(job_mw=w.mean() / 1e6)["moderate"]
+    return workloads, configs, cfg, spec
+
+
+def run_serial(workloads, configs, cfg, spec):
+    records = []
+    for name, tl in workloads.items():
+        for gpu, bat in configs:
+            res = core.simulate(tl, N_CHIPS, cfg, device_mitigation=gpu,
+                                rack_mitigation=bat, spec=spec)
+            records.append((name, res.spec_report.ok, res.energy_overhead))
+    return records
+
+
+def run_batched(workloads, configs, cfg, spec):
+    recs = core.sweep(workloads, [N_CHIPS], configs, cfg, spec=spec)
+    return [(r["workload"], r["spec_ok"], r["energy_overhead"]) for r in recs]
+
+
+def main() -> None:
+    workloads, configs, cfg, spec = scenario_matrix()
+    n_scen = len(workloads) * len(configs)
+
+    # warm the per-shape scan/FFT caches for EVERY workload length (they
+    # compile separately) so the serial loop is measured in its own steady
+    # state, symmetric with the batched warm timing
+    run_serial(workloads, configs[:1], cfg, spec)
+    t0 = time.perf_counter()
+    serial = run_serial(workloads, configs, cfg, spec)
+    serial_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    batched_first = run_batched(workloads, configs, cfg, spec)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batched = run_batched(workloads, configs, cfg, spec)
+    warm_s = time.perf_counter() - t0
+
+    # verdict parity: same pass/fail for every scenario
+    agree = sum(int(a[1] == b[1]) for a, b in zip(serial, batched))
+    result = {
+        "n_scenarios": n_scen,
+        "n_workloads": len(workloads),
+        "n_configs": len(configs),
+        "serial_s": round(serial_s, 3),
+        "batched_cold_s": round(cold_s, 3),
+        "batched_warm_s": round(warm_s, 3),
+        "speedup_warm": round(serial_s / warm_s, 1),
+        "speedup_cold": round(serial_s / cold_s, 1),
+        "verdict_agreement": f"{agree}/{n_scen}",
+        "passing_configs": sum(int(ok) for _, ok, _ in batched),
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+    emit("sweep/serial", serial_s * 1e6 / n_scen, {"total_s": round(serial_s, 2)})
+    emit("sweep/batched_warm", warm_s * 1e6 / n_scen,
+         {"total_s": round(warm_s, 2), "speedup": result["speedup_warm"]})
+    emit("sweep/batched_cold", cold_s * 1e6 / n_scen,
+         {"total_s": round(cold_s, 2), "speedup": result["speedup_cold"]})
+    assert agree == n_scen, "serial and batched spec verdicts disagree"
+    # the speedup target is advisory (wall-clock is environment-dependent);
+    # correctness (verdict parity) is the hard invariant above
+    if serial_s / warm_s < 5.0:
+        print(f"# WARNING: batched sweep only {serial_s / warm_s:.1f}x "
+              "serial on this machine (target >=5x)")
+    print("wrote", os.path.abspath(OUT_PATH))
+
+
+if __name__ == "__main__":
+    main()

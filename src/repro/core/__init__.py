@@ -12,12 +12,15 @@ from repro.core.spec import (FrequencyDomainSpec, SpecReport, TimeDomainSpec,
                              UtilitySpec, example_specs)
 from repro.core.spectrum import (band_energy_fraction, critical_band_report,
                                  dominant_frequency, spectrum)
-from repro.core.stratosim import SimResult, simulate, simulate_cell
+from repro.core.stratosim import SimResult, simulate, simulate_cell, simulate_jit
 from repro.core.telemetry import TelemetrySource
 from repro.core.waveform import (WaveformConfig, aggregate, chip_waveform,
                                  job_waveform, swing_stats)
 from repro.core.smoothing import (CombinedMitigation, Firefly, GpuPowerSmoothing,
                                   RackBattery, Stack, TelemetryBackstop,
                                   design_mitigation, energy_overhead)
+from repro.core.engine import (BatchResult, apply_batch, design_grid,
+                               simulate_batch, stack_mitigations, sweep,
+                               validate_many)
 from repro.core.ballast_inject import attach_ballast, ballast_gflops_for_cell
 from repro.core.stagger import StaggerSchedule, max_ramp, plan_stagger, ramp_waveform

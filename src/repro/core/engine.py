@@ -1,0 +1,433 @@
+"""Batched scenario engine: the whole waveform -> mitigation -> spec
+pipeline as one jit/vmap-able JAX program.
+
+The paper evaluates every mitigation "on the real waveform from Figure 1"
+across a matrix of workloads, fleet sizes and (MPF, battery) configurations.
+StratoSim's ``simulate`` runs one scenario at a time; this module runs a
+*grid* of scenarios in a single compiled call:
+
+  ``simulate_batch``  vmaps (timeline levels x n_chips x mitigation config
+                      x jitter seed) through synthesis, aggregation,
+                      mitigation scans, swing/band metrics and utility-spec
+                      validation — no host round-trips inside.
+  ``sweep``           cartesian product over workloads / fleet sizes /
+                      configs / seeds, bucketed by waveform length (each
+                      bucket is one compiled call), returning flat records.
+  ``apply_batch``     one waveform through a stack of mitigation configs
+                      (the Fig. 6 MPF sweep in one call).
+  ``design_grid``     the batched grid search behind
+                      ``smoothing.design_mitigation``.
+
+Only the timeline -> sample-count expansion (``phase_levels``) and the
+jitter-shift draw stay in numpy: they fix array shapes.  Everything with a
+static shape is traced, so mitigation parameter grids ride through ``vmap``
+as stacked pytree leaves (see ``stack_mitigations``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hardware import DEFAULT_HW, Hardware
+from repro.core.phases import IterationTimeline
+from repro.core.smoothing.base import (Mitigation, energy_overhead_jax,
+                                       materialize_aux)
+from repro.core.smoothing.battery import RackBattery
+from repro.core.smoothing.gpu_floor import GpuPowerSmoothing
+from repro.core.spec import SpecReport, UtilitySpec, report_from_arrays
+from repro.core.spectrum import critical_band_report_jax
+from repro.core.stratosim import SimResult
+from repro.core.waveform import (WaveformConfig, aggregate_jax,
+                                 chip_waveform_jax, jitter_shifts,
+                                 phase_levels, swing_stats_jax)
+
+
+# ---------------------------------------------------------------------------
+# config batching
+# ---------------------------------------------------------------------------
+
+def stack_mitigations(mitigations: Sequence) -> object:
+    """Stack structurally-identical mitigation pytrees into one batched
+    pytree (leaves gain a leading config axis) for ``vmap``.
+
+    All entries must be the same class with identical static metadata
+    (hardware spec, telemetry config, windows); continuous parameters may
+    differ per entry — that is the grid being swept.
+    """
+    mitigations = list(mitigations)
+    if not mitigations:
+        raise ValueError("empty mitigation list")
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+        *mitigations)
+
+
+def _tile(values, B: int, what: str) -> list:
+    values = list(values)
+    if len(values) == 1:
+        return values * B
+    if len(values) != B:
+        raise ValueError(f"{what}: got {len(values)} entries, expected 1 or {B}")
+    return values
+
+
+def _normalize_mits(mits, B: int, what: str):
+    """None | Mitigation | sequence -> (batched pytree | None)."""
+    if mits is None:
+        return None
+    if not isinstance(mits, (list, tuple)):
+        mits = [mits]
+    mits = _tile(mits, B, what)
+    if all(m is None for m in mits):
+        return None
+    if any(m is None for m in mits):
+        raise ValueError(f"{what}: mixed None/mitigation rows are not "
+                         "batchable — use a disabled config instead")
+    return stack_mitigations(mits)
+
+
+# ---------------------------------------------------------------------------
+# the compiled pipeline
+# ---------------------------------------------------------------------------
+
+def _simulate_one(levels, shifts, n_chips, dev, rack,
+                  cfg: WaveformConfig, hw: Hardware,
+                  spec: Optional[UtilitySpec]) -> Dict:
+    chip = chip_waveform_jax(levels, cfg.dt, hw, edp_spikes=cfg.edp_spikes,
+                             include_host=cfg.include_host)
+    dc_raw = aggregate_jax(chip, n_chips, shifts, hw)
+    out: Dict = {"chip_raw": chip, "dc_raw": dc_raw}
+    aux: Dict = {}
+    dc = dc_raw
+    if dev is not None:
+        chip_m, aux_d = dev.apply_jax(chip, cfg.dt)
+        aux["device"] = aux_d
+        out["chip_mitigated"] = chip_m
+        dc = aggregate_jax(chip_m, n_chips, shifts, hw)
+    if rack is not None:
+        dc, aux_r = rack.apply_jax(dc, cfg.dt)
+        aux["rack"] = aux_r
+    out["dc_mitigated"] = dc
+    out["energy_overhead"] = energy_overhead_jax(dc_raw, dc)
+    out["swing"] = swing_stats_jax(dc_raw)
+    out["swing_mitigated"] = swing_stats_jax(dc)
+    out["bands"] = critical_band_report_jax(dc_raw, cfg.dt)
+    out["bands_mitigated"] = critical_band_report_jax(dc, cfg.dt)
+    if spec is not None:
+        ok, flags, metrics = spec.validate_jax(dc, cfg.dt)
+        out["spec_ok"] = ok
+        out["spec_flags"] = flags
+        out["spec_metrics"] = metrics
+    out["aux"] = aux
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "hw", "spec"))
+def _simulate_vmapped(levels, shifts, n_chips, dev, rack, *,
+                      cfg: WaveformConfig, hw: Hardware,
+                      spec: Optional[UtilitySpec]):
+    return jax.vmap(
+        lambda L, S, N, D, R: _simulate_one(L, S, N, D, R, cfg, hw, spec)
+    )(levels, shifts, n_chips, dev, rack)
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchResult:
+    """One row per scenario; waveforms are [B, n], metrics are [B]."""
+    t: np.ndarray
+    dc_raw: np.ndarray
+    dc_mitigated: np.ndarray
+    chip_raw: np.ndarray
+    chip_mitigated: Optional[np.ndarray]
+    energy_overhead: np.ndarray
+    swing: Dict[str, np.ndarray]
+    swing_mitigated: Dict[str, np.ndarray]
+    bands: Dict[str, np.ndarray]
+    bands_mitigated: Dict[str, np.ndarray]
+    spec_ok: Optional[np.ndarray]
+    spec_flags: Optional[Dict[str, np.ndarray]]
+    spec_metrics: Optional[Dict[str, np.ndarray]]
+    aux: Dict
+
+    def __len__(self) -> int:
+        return self.dc_raw.shape[0]
+
+    def report(self, i: int) -> Optional[SpecReport]:
+        if self.spec_ok is None:
+            return None
+        row = jax.tree.map(lambda a: a[i], (self.spec_flags, self.spec_metrics))
+        return report_from_arrays(self.spec_ok[i], row[0], row[1])
+
+    def scenario(self, i: int) -> SimResult:
+        """Rebuild the per-scenario ``SimResult`` (API compat with
+        ``stratosim.simulate``) for row ``i``."""
+        row = lambda d: {k: float(v[i]) for k, v in d.items()}
+        return SimResult(
+            t=self.t,
+            dc_raw=self.dc_raw[i], dc_mitigated=self.dc_mitigated[i],
+            chip_raw=self.chip_raw[i],
+            chip_mitigated=(None if self.chip_mitigated is None
+                            else self.chip_mitigated[i]),
+            energy_overhead=float(self.energy_overhead[i]),
+            swing=row(self.swing), swing_mitigated=row(self.swing_mitigated),
+            bands=row(self.bands), bands_mitigated=row(self.bands_mitigated),
+            spec_report=self.report(i),
+            aux=materialize_aux(jax.tree.map(lambda a: a[i], self.aux)))
+
+
+def simulate_batch(
+        timelines: Union[IterationTimeline, Sequence[IterationTimeline]],
+        n_chips: Union[int, Sequence[int]],
+        wave_cfg: Optional[WaveformConfig] = None,
+        *, device_mitigation=None, rack_mitigation=None,
+        spec: Optional[UtilitySpec] = None, hw: Hardware = DEFAULT_HW,
+        seeds: Union[int, Sequence[int]] = 0,
+        sample_chips: int = 64,
+        levels: Optional[Sequence[np.ndarray]] = None) -> BatchResult:
+    """Simulate a batch of scenarios in one compiled call.
+
+    Each batched argument (timelines, n_chips, device/rack mitigation
+    configs, seeds) is a singleton (broadcast) or a length-B sequence; all
+    timelines in one call must expand to the same sample count (``sweep``
+    buckets mixed-length workloads automatically).  ``levels`` optionally
+    supplies the per-row ``phase_levels`` arrays precomputed (callers like
+    ``sweep`` that already expanded the timelines skip re-expansion).
+    """
+    cfg = wave_cfg or WaveformConfig()
+    tls = timelines if isinstance(timelines, (list, tuple)) else [timelines]
+    chips = n_chips if isinstance(n_chips, (list, tuple)) else [n_chips]
+    seed_list = seeds if isinstance(seeds, (list, tuple)) else [seeds]
+    dev_list = (device_mitigation if isinstance(device_mitigation, (list, tuple))
+                else [device_mitigation])
+    rack_list = (rack_mitigation if isinstance(rack_mitigation, (list, tuple))
+                 else [rack_mitigation])
+
+    B = max(len(tls), len(chips), len(seed_list), len(dev_list), len(rack_list))
+    tls = _tile(tls, B, "timelines")
+    chips = _tile(chips, B, "n_chips")
+    seed_list = _tile(seed_list, B, "seeds")
+
+    if levels is not None:
+        level_rows = _tile(list(levels), B, "levels")
+    else:
+        # expand each distinct timeline once (rows are usually a small set
+        # of workloads tiled across a big config grid)
+        level_cache: Dict[int, np.ndarray] = {}
+        level_rows = [
+            level_cache.setdefault(id(tl), phase_levels(tl, cfg, hw))
+            for tl in tls]
+    n = len(level_rows[0])
+    if any(len(r) != n for r in level_rows):
+        raise ValueError(
+            "all timelines in one simulate_batch call must expand to the "
+            f"same sample count (got {sorted({len(r) for r in level_rows})}); "
+            "use sweep() to bucket mixed-length workloads")
+    levels = jnp.asarray(np.stack(level_rows), jnp.float32)
+    shifts = jnp.asarray(np.stack(
+        [jitter_shifts(cfg, s, sample_chips) for s in seed_list]))
+    chips_f = jnp.asarray(np.asarray(chips, np.float32))
+    dev = _normalize_mits(dev_list, B, "device_mitigation")
+    rack = _normalize_mits(rack_list, B, "rack_mitigation")
+
+    res = _simulate_vmapped(levels, shifts, chips_f, dev, rack,
+                            cfg=cfg, hw=hw, spec=spec)
+    res = jax.tree.map(np.asarray, res)
+    return BatchResult(
+        t=np.arange(n) * cfg.dt,
+        dc_raw=res["dc_raw"], dc_mitigated=res["dc_mitigated"],
+        chip_raw=res["chip_raw"],
+        chip_mitigated=res.get("chip_mitigated"),
+        energy_overhead=res["energy_overhead"],
+        swing=res["swing"], swing_mitigated=res["swing_mitigated"],
+        bands=res["bands"], bands_mitigated=res["bands_mitigated"],
+        spec_ok=res.get("spec_ok"), spec_flags=res.get("spec_flags"),
+        spec_metrics=res.get("spec_metrics"), aux=res["aux"])
+
+
+# ---------------------------------------------------------------------------
+# cartesian sweep
+# ---------------------------------------------------------------------------
+
+def sweep(workloads,
+          n_chips: Sequence[int],
+          configs: Sequence[Tuple[Optional[Mitigation], Optional[Mitigation]]],
+          wave_cfg: Optional[WaveformConfig] = None,
+          *, spec: Optional[UtilitySpec] = None, hw: Hardware = DEFAULT_HW,
+          seeds: Sequence[int] = (0,), sample_chips: int = 64) -> List[Dict]:
+    """Cartesian (workload x fleet size x config x seed) sweep.
+
+    ``workloads`` is a dict name -> IterationTimeline (or a sequence, named
+    by index); each config is a ``(device_mitigation, rack_mitigation)``
+    pair (either side may be None, consistently across configs).  Workloads
+    are bucketed by sample count; each bucket runs as ONE compiled vmapped
+    call.  Returns one flat record dict per scenario.
+    """
+    cfg = wave_cfg or WaveformConfig()
+    if isinstance(workloads, dict):
+        names, tls = list(workloads.keys()), list(workloads.values())
+    else:
+        tls = list(workloads)
+        names = [f"workload{i}" for i in range(len(tls))]
+    combos = [(ti, ni, ci, si)
+              for ti in range(len(tls)) for ni in n_chips
+              for ci in range(len(configs)) for si in seeds]
+    tl_levels = [phase_levels(tl, cfg, hw) for tl in tls]  # once per workload
+    buckets: Dict[int, List[Tuple[int, Tuple]]] = {}
+    for pos, combo in enumerate(combos):
+        buckets.setdefault(len(tl_levels[combo[0]]), []).append((pos, combo))
+
+    records: List[Optional[Dict]] = [None] * len(combos)
+    for _, items in sorted(buckets.items()):
+        idxs = [combo for _, combo in items]
+        res = simulate_batch(
+            [tls[ti] for ti, _, _, _ in idxs],
+            [ni for _, ni, _, _ in idxs],
+            cfg,
+            device_mitigation=[configs[ci][0] for _, _, ci, _ in idxs],
+            rack_mitigation=[configs[ci][1] for _, _, ci, _ in idxs],
+            spec=spec, hw=hw, seeds=[si for _, _, _, si in idxs],
+            sample_chips=sample_chips,
+            levels=[tl_levels[ti] for ti, _, _, _ in idxs])
+        for b, (pos, (ti, ni, ci, si)) in enumerate(items):
+            rec = {
+                "workload": names[ti],
+                "n_chips": ni,
+                "config": ci,
+                "seed": si,
+                "period_s": tls[ti].period_s,
+                "mean_mw": float(res.swing["mean_w"][b]) / 1e6,
+                "swing_mw": float(res.swing["swing_w"][b]) / 1e6,
+                "swing_mitigated_mw":
+                    float(res.swing_mitigated["swing_w"][b]) / 1e6,
+                "energy_overhead": float(res.energy_overhead[b]),
+                "paper_band_frac":
+                    float(res.bands_mitigated["paper_band_0p2_3hz"][b]),
+            }
+            if res.spec_ok is not None:
+                rec["spec_ok"] = bool(res.spec_ok[b])
+                rec["violations"] = res.report(b).violations
+            records[pos] = rec
+    return records
+
+
+# ---------------------------------------------------------------------------
+# chip-level config batches (Fig. 6 style sweeps)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("dt",))
+def _apply_vmapped(mits, w, *, dt: float):
+    return jax.vmap(lambda m: m.apply_jax(w, dt))(mits)
+
+
+def apply_batch(mitigations: Sequence, w: np.ndarray, dt: float
+                ) -> Tuple[np.ndarray, Dict]:
+    """Apply B structurally-identical mitigation configs to ONE waveform in
+    a single vmapped call: (outs [B, n], aux dict with leading B axis)."""
+    batched = stack_mitigations(mitigations)
+    outs, aux = _apply_vmapped(batched, jnp.asarray(w, jnp.float32), dt=dt)
+    return np.asarray(outs), jax.tree.map(np.asarray, aux)
+
+
+# ---------------------------------------------------------------------------
+# batched spec validation
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "dt"))
+def _validate_vmapped(ws, *, spec: UtilitySpec, dt: float):
+    return jax.vmap(lambda w: spec.validate_jax(w, dt))(ws)
+
+
+def validate_many(ws: np.ndarray, spec: UtilitySpec, dt: float
+                  ) -> Tuple[np.ndarray, List[SpecReport]]:
+    """Validate B same-length waveforms [B, n] against one spec in a single
+    vmapped call: (ok [B], per-row SpecReports)."""
+    ok, flags, metrics = _validate_vmapped(
+        jnp.asarray(np.asarray(ws), jnp.float32), spec=spec, dt=dt)
+    ok = np.asarray(ok)
+    flags, metrics = jax.tree.map(np.asarray, (flags, metrics))
+    reports = [report_from_arrays(ok[i],
+                                  {k: v[i] for k, v in flags.items()},
+                                  {k: v[i] for k, v in metrics.items()})
+               for i in range(len(ok))]
+    return ok, reports
+
+
+# ---------------------------------------------------------------------------
+# batched (MPF x battery) design search
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "dt"))
+def _design_eval(gpu_b, bat_b, gpu_on, bat_on, w, n_chips, *,
+                 spec: UtilitySpec, dt: float):
+    def one(gpu, bat, g_on, b_on):
+        per_chip = w / n_chips
+        smoothed, _ = gpu.apply_jax(per_chip, dt)
+        agg = jnp.where(g_on > 0, smoothed, per_chip) * n_chips
+        out_b, _ = bat.apply_jax(agg, dt)
+        out = jnp.where(b_on > 0, out_b, agg)
+        ok, flags, metrics = spec.validate_jax(out, dt)
+        return out, ok, energy_overhead_jax(w, out), flags, metrics
+
+    return jax.vmap(one)(gpu_b, bat_b, gpu_on, bat_on)
+
+
+def design_grid(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int,
+                mpf_grid: Sequence[float], cap_grid: Sequence[float],
+                *, swing: float, hw: Hardware = DEFAULT_HW) -> Optional[Dict]:
+    """Evaluate every (MPF, capacity) candidate in one vmapped call and
+    return the first passing one in grid order (MPF-major ascending — the
+    serial search's minimal-waste-then-minimal-capacity preference)."""
+    candidates = [(m, c) for m in mpf_grid for c in cap_grid]
+    gpus = stack_mitigations([
+        GpuPowerSmoothing(
+            mpf_frac=m, hw=hw,
+            ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
+            ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
+        for m, _ in candidates])
+    # a disabled battery still runs through the scan (then gets deselected),
+    # so give it a non-zero capacity to keep the SoC math finite
+    bats = stack_mitigations([
+        RackBattery(capacity_j=(c if c > 0 else 1.0),
+                    max_discharge_w=swing, max_charge_w=swing)
+        for _, c in candidates])
+    gpu_on = jnp.asarray([1.0 if m > 0 else 0.0 for m, _ in candidates])
+    bat_on = jnp.asarray([1.0 if c > 0 else 0.0 for _, c in candidates])
+
+    outs, ok, overhead, flags, metrics = _design_eval(
+        gpus, bats, gpu_on, bat_on, jnp.asarray(w, jnp.float32),
+        jnp.asarray(float(n_chips), jnp.float32), spec=spec, dt=dt)
+    ok = np.asarray(ok)
+    if not ok.any():
+        return None
+    idx = int(np.argmax(ok))
+    mpf, cap = candidates[idx]
+    row = jax.tree.map(lambda a: np.asarray(a)[idx], (flags, metrics))
+    # the winner as concrete mitigation objects — the single construction
+    # point callers (design_mitigation, demos) reuse instead of rebuilding
+    gpu_sel = (GpuPowerSmoothing(
+        mpf_frac=mpf, hw=hw,
+        ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
+        ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
+        if mpf > 0 else None)
+    bat_sel = (RackBattery(capacity_j=cap, max_discharge_w=swing,
+                           max_charge_w=swing) if cap > 0 else None)
+    return {
+        "mpf_frac": mpf,
+        "battery_capacity_j": cap,
+        "energy_overhead": float(np.asarray(overhead)[idx]),
+        "report": report_from_arrays(ok[idx], row[0], row[1]),
+        "device_mitigation": gpu_sel,
+        "rack_mitigation": bat_sel,
+        "mitigated": np.asarray(outs)[idx],
+        "grid_ok": ok.reshape(len(mpf_grid), len(cap_grid)),
+        "aux": {},
+    }

@@ -12,15 +12,23 @@ bin's amplitude stays above threshold:
 
 De-escalation happens after the bin amplitude stays below threshold for
 ``cooldown_s``.
+
+The escalation state machine runs as a lax.scan, so the whole monitor is
+jit/vmap-able; thresholds and response gains are pytree leaves, while the
+monitored bins and window/sustain/cooldown durations fix shapes and counter
+constants and stay static.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.goertzel.ref import sliding_bin_power_ref
+from repro.core.smoothing.base import np_apply, register_mitigation
+from repro.kernels.goertzel.ref import sliding_bin_power_jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,48 +42,56 @@ class TelemetryBackstop:
     shed_frac: float = 0.7                  # level-2 cap (fraction of mean)
     idle_frac: float = 0.2                  # level-3 floor
 
-    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
-        n = len(w)
+    def __post_init__(self):
+        object.__setattr__(self, "critical_hz", tuple(self.critical_hz))
+
+    def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
+        w = jnp.asarray(w, jnp.float32)
+        n = w.shape[-1]
         win = max(int(self.window_s / dt), 8)
-        amps = sliding_bin_power_ref(
-            np.asarray(w, np.float64), dt, np.asarray(self.critical_hz), win)
+        amps = sliding_bin_power_jnp(w, dt, self.critical_hz, win)
         worst = amps.max(axis=1)  # [n]
 
         sustain_n = max(int(self.sustain_s / dt), 1)
         cool_n = max(int(self.cooldown_s / dt), 1)
-        level = 0
-        above = below = 0
-        levels = np.zeros(n, np.int8)
-        detect_idx = -1
-        for i in range(n):
-            if worst[i] > self.amp_threshold_w:
-                above += 1
-                below = 0
-                if above >= sustain_n and level < 3:
-                    level += 1
-                    above = 0
-                    if detect_idx < 0:
-                        detect_idx = i
-            else:
-                below += 1
-                above = 0
-                if below >= cool_n and level > 0:
-                    level -= 1
-                    below = 0
-            levels[i] = level
 
-        mean = float(w.mean())
-        out = w.copy()
-        l1 = levels == 1
-        out[l1] = mean + self.alpha1 * (w[l1] - mean)
-        l2 = levels == 2
-        out[l2] = np.minimum(w[l2], self.shed_frac * mean)
-        l3 = levels == 3
-        out[l3] = self.idle_frac * mean
+        def step(carry, inp):
+            level, above, below, detect = carry
+            worst_i, i = inp
+            hit = worst_i > self.amp_threshold_w
+            above = jnp.where(hit, above + 1, 0)
+            below = jnp.where(hit, 0, below + 1)
+            esc = hit & (above >= sustain_n) & (level < 3)
+            detect = jnp.where(esc & (detect < 0), i, detect)
+            level = jnp.where(esc, level + 1, level)
+            above = jnp.where(esc, 0, above)
+            deesc = (~hit) & (below >= cool_n) & (level > 0)
+            level = jnp.where(deesc, level - 1, level)
+            below = jnp.where(deesc, 0, below)
+            return (level, above, below, detect), level
+
+        zero = jnp.asarray(0, jnp.int32)
+        init = (zero, zero, zero, jnp.asarray(-1, jnp.int32))
+        (_, _, _, detect), levels = jax.lax.scan(
+            step, init, (worst, jnp.arange(n, dtype=jnp.int32)))
+
+        mean = w.mean()
+        out = jnp.where(levels == 1, mean + self.alpha1 * (w - mean), w)
+        out = jnp.where(levels == 2, jnp.minimum(w, self.shed_frac * mean), out)
+        out = jnp.where(levels == 3, self.idle_frac * mean, out)
         aux = {
-            "max_level": int(levels.max()),
-            "detect_latency_s": float(detect_idx * dt) if detect_idx >= 0 else -1.0,
+            "max_level": levels.max(),
+            "detect_latency_s": jnp.where(detect >= 0, detect * dt, -1.0),
             "levels": levels,
             "worst_bin_amp": worst,
         }
         return out, aux
+
+    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+        return np_apply(self, w, dt)
+
+
+register_mitigation(
+    TelemetryBackstop,
+    data_fields=("amp_threshold_w", "alpha1", "shed_frac", "idle_frac"),
+    meta_fields=("critical_hz", "window_s", "sustain_s", "cooldown_s"))

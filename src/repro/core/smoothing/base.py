@@ -1,13 +1,27 @@
 """Mitigation interface: a transform on sampled power waveforms.
 
-``apply(w, dt)`` consumes the power the load *wants* to draw and returns
-the power the upstream level *sees*, plus an aux dict (state traces,
-overheads). Mitigations compose with ``Stack`` in load->utility order.
+Every mitigation exposes two entry points:
+
+``apply_jax(w, dt) -> (w, aux)`` — the *pure* contract: jnp arrays in, jnp
+arrays out, no host sync.  Mitigation dataclasses are registered as JAX
+pytrees whose continuous parameters are leaves, so a grid of configurations
+stacks into one batched pytree and the whole waveform->mitigation->spec
+pipeline jits and vmaps (core/engine.py).  ``dt`` and any field that fixes
+array shapes (windows, sampling periods) must stay concrete.
+
+``apply(w, dt) -> (w, aux)`` — the numpy-facing wrapper kept for API
+compatibility: delegates to ``apply_jax`` and materializes the outputs.
+
+``apply`` consumes the power the load *wants* to draw and returns the power
+the upstream level *sees*, plus an aux dict (state traces, overheads).
+Mitigations compose with ``Stack`` in load->utility order.
 """
 from __future__ import annotations
 
 from typing import Dict, Protocol, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -15,20 +29,75 @@ class Mitigation(Protocol):
     def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
         ...
 
+    def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
+        ...
+
+
+def register_mitigation(cls, data_fields: Sequence[str],
+                        meta_fields: Sequence[str]):
+    """Register a mitigation dataclass as a pytree: ``data_fields`` are
+    leaves (vmappable parameter grids), ``meta_fields`` are static aux data
+    (hardware specs, telemetry configs, shape-fixing windows)."""
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=list(meta_fields))
+    return cls
+
+
+def materialize_aux(aux: Dict) -> Dict:
+    """Convert an apply_jax aux tree to numpy/python for the np-facing API."""
+    out: Dict = {}
+    for k, v in aux.items():
+        if isinstance(v, dict):
+            out[k] = materialize_aux(v)
+        elif isinstance(v, (jnp.ndarray, np.ndarray)):
+            a = np.asarray(v)
+            if a.ndim == 0:
+                out[k] = int(a) if a.dtype.kind in "iub" else float(a)
+            else:
+                out[k] = a
+        else:
+            out[k] = v
+    return out
+
+
+def np_apply(mit, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+    """Shared numpy-facing wrapper around a mitigation's ``apply_jax``."""
+    out, aux = mit.apply_jax(jnp.asarray(w, jnp.float32), dt)
+    return np.asarray(out), materialize_aux(aux)
+
 
 class Stack:
     def __init__(self, stages: Sequence[Mitigation]):
         self.stages = list(stages)
 
-    def apply(self, w: np.ndarray, dt: float):
+    def apply_jax(self, w: jnp.ndarray, dt: float):
         aux_all: Dict = {}
         for i, s in enumerate(self.stages):
-            w, aux = s.apply(w, dt)
+            w, aux = s.apply_jax(w, dt)
             aux_all[f"{i}:{type(s).__name__}"] = aux
         return w, aux_all
+
+    def apply(self, w: np.ndarray, dt: float):
+        return np_apply(self, w, dt)
+
+
+def _stack_flatten(s: Stack):
+    return tuple(s.stages), None
+
+
+def _stack_unflatten(_, stages):
+    return Stack(stages)
+
+
+jax.tree_util.register_pytree_node(Stack, _stack_flatten, _stack_unflatten)
 
 
 def energy_overhead(w_in: np.ndarray, w_out: np.ndarray) -> float:
     """(E_out - E_in) / E_in — the paper's 'wasted energy' metric."""
     e_in = float(np.sum(w_in))
     return (float(np.sum(w_out)) - e_in) / max(e_in, 1e-12)
+
+
+def energy_overhead_jax(w_in: jnp.ndarray, w_out: jnp.ndarray) -> jnp.ndarray:
+    e_in = jnp.sum(w_in)
+    return (jnp.sum(w_out) - e_in) / jnp.maximum(e_in, 1e-12)

@@ -6,6 +6,9 @@ capacity (J), charge/discharge power (W), round-trip efficiency, and the
 charge/discharge mode-switch latency (the paper's requirement 4: 'switch
 modes quickly'). Energy is conserved up to efficiency losses (property
 tested).
+
+Every parameter is a pytree leaf, so a capacity/power grid vmaps through
+``apply_jax`` in one compiled call (see core/engine.py).
 """
 from __future__ import annotations
 
@@ -15,6 +18,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.smoothing.base import (energy_overhead_jax, np_apply,
+                                       register_mitigation)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,9 +33,10 @@ class RackBattery:
     initial_soc: float = 0.5
     switch_latency_s: float = 0.0        # mode-switch dead time
 
-    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
-        alpha = dt / max(self.target_tau_s, dt)
-        lat_n = int(round(self.switch_latency_s / dt))
+    def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
+        alpha = dt / jnp.maximum(self.target_tau_s, dt)
+        lat_n = jnp.round(self.switch_latency_s / dt)
+        cap_j = self.capacity_j
 
         def step(carry, p):
             soc, tgt, mode, hold = carry
@@ -37,41 +44,51 @@ class RackBattery:
             want = p - tgt                      # >0: discharge, <0: charge
             new_mode = jnp.sign(want)
             switching = (new_mode != mode) & (new_mode != 0) & (mode != 0)
-            hold = jnp.where(switching, lat_n, jnp.maximum(hold - 1, 0))
+            hold = jnp.where(switching, lat_n, jnp.maximum(hold - 1.0, 0.0))
             blocked = hold > 0
             # power limits, with anti-windup taper near the SoC bounds so a
             # saturating battery releases the load gradually (no grid steps)
-            soc_frac = soc / self.capacity_j
+            soc_frac = soc / cap_j
             taper_lo = jnp.clip(soc_frac / 0.10, 0.0, 1.0)
             taper_hi = jnp.clip((1.0 - soc_frac) / 0.10, 0.0, 1.0)
             dis = jnp.clip(want, 0.0, self.max_discharge_w * taper_lo)
             dis = jnp.minimum(dis, soc * self.efficiency / dt)
             chg = jnp.clip(-want, 0.0, self.max_charge_w * taper_hi)
-            chg = jnp.minimum(chg, (self.capacity_j - soc) / self.efficiency / dt)
+            chg = jnp.minimum(chg, (cap_j - soc) / self.efficiency / dt)
             dis = jnp.where(blocked, 0.0, dis)
             chg = jnp.where(blocked, 0.0, chg)
             grid = p - dis + chg
             soc = soc - dis * dt / self.efficiency + chg * dt * self.efficiency
-            soc = jnp.clip(soc, 0.0, self.capacity_j)
+            soc = jnp.clip(soc, 0.0, cap_j)
             return (soc, tgt, new_mode, hold), (grid, soc)
 
-        w_j = jnp.asarray(w, jnp.float32)
+        w = jnp.asarray(w, jnp.float32)
         # grid target starts at the trace mean (the scheduled steady-state
         # draw a real operator bids into the day-ahead market) — starting at
         # w[0] makes the battery burn capacity chasing the initial transient
-        init = (jnp.asarray(self.initial_soc * self.capacity_j, jnp.float32),
-                jnp.mean(w_j), jnp.asarray(0.0, jnp.float32),
-                jnp.asarray(0, jnp.int32))
-        _, (grid, soc) = jax.lax.scan(step, init, w_j)
-        grid, soc = np.asarray(grid), np.asarray(soc)
+        init = (jnp.asarray(self.initial_soc * cap_j, jnp.float32),
+                jnp.mean(w), jnp.asarray(0.0, jnp.float32),
+                jnp.asarray(0.0, jnp.float32))
+        _, (grid, soc) = jax.lax.scan(step, init, w)
         aux = {
             "soc_trace": soc,
-            "soc_min_frac": float(soc.min() / self.capacity_j),
-            "soc_max_frac": float(soc.max() / self.capacity_j),
-            "energy_overhead": float((grid.sum() - w.sum()) / max(w.sum(), 1e-12)),
-            "peak_reduction_w": float(w.max() - grid.max()),
+            "soc_min_frac": soc.min() / cap_j,
+            "soc_max_frac": soc.max() / cap_j,
+            "energy_overhead": energy_overhead_jax(w, grid),
+            "peak_reduction_w": w.max() - grid.max(),
         }
         return grid, aux
+
+    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+        return np_apply(self, w, dt)
+
+
+register_mitigation(
+    RackBattery,
+    data_fields=("capacity_j", "max_discharge_w", "max_charge_w",
+                 "efficiency", "target_tau_s", "initial_soc",
+                 "switch_latency_s"),
+    meta_fields=())
 
 
 def size_battery_for(job_w_swing: float, period_s: float, n_racks: int,

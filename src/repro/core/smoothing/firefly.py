@@ -17,15 +17,22 @@ the primary ramps up. Modeled faithfully to the description:
 The TPU in-graph equivalent (compile-time co-scheduled ballast) lives in
 core/ballast_inject.py; this module is the *control-loop* model used by
 StratoSim and the Table-I comparison.
+
+The engage/threshold/interference knobs are pytree leaves (vmappable);
+telemetry timing and back-off cadence fix sampling indices, so they are
+static metadata.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hardware import DEFAULT_HW, Hardware
+from repro.core.smoothing.base import (energy_overhead_jax, np_apply,
+                                       register_mitigation)
 from repro.core.telemetry import TelemetrySource
 
 
@@ -41,33 +48,51 @@ class Firefly:
     interference: float = 0.04           # primary slowdown while co-running
     hw: Hardware = DEFAULT_HW
 
-    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+    def apply_jax(self, w: jnp.ndarray, dt: float,
+                  key=None) -> Tuple[jnp.ndarray, Dict]:
         tdp = self.hw.chip.tdp_w
         target = self.engage_frac * tdp
         thresh = self.threshold_frac * tdp
-        meas = self.telemetry.measure(w, dt)
+        w = jnp.asarray(w, jnp.float32)
+        meas = self.telemetry.measure_jax(w, dt, key=key)
 
-        n = len(w)
+        n = w.shape[-1]
         every = max(int(self.backoff_every_s / dt), 1)
         bdur = max(int(self.backoff_dur_s / dt), 1)
         phase = (np.arange(n) % every) < bdur  # True = forced back-off
 
-        raw = np.clip(target - meas, 0.0, None)
+        raw = jnp.clip(target - meas, 0.0, None)
         step_w = target / self.ballast_steps
-        ballast = np.ceil(raw / step_w - 1e-9) * step_w
-        ballast = np.where(meas < thresh, ballast, 0.0)
-        ballast = np.where(phase, 0.0, ballast)
-        out = np.minimum(w + ballast, tdp)
+        ballast = jnp.ceil(raw / step_w - 1e-9) * step_w
+        ballast = jnp.where(meas < thresh, ballast, 0.0)
+        ballast = jnp.where(jnp.asarray(phase), 0.0, ballast)
+        out = jnp.minimum(w + ballast, tdp)
 
         # interference accounting: ballast active while primary is busy
         busy = w > thresh
-        mis_fire = ballast[busy].sum()
-        perf_overhead = self.interference * (ballast > 0)[busy].mean() if busy.any() else 0.0
+        on = ballast > 0
+        n_busy = busy.sum()
+        mis_fire = jnp.where(busy, ballast, 0.0).sum()
+        perf_overhead = jnp.where(
+            n_busy > 0,
+            self.interference * jnp.where(busy, on, False).sum()
+            / jnp.maximum(n_busy, 1),
+            0.0)
         aux = {
-            "energy_overhead": float((out.sum() - w.sum()) / max(w.sum(), 1e-12)),
-            "perf_overhead": float(perf_overhead),
-            "ballast_duty": float((ballast > 0).mean()),
-            "reaches_tdp_frac": float(out.max() / tdp),
-            "misfire_j": float(mis_fire * dt),
+            "energy_overhead": energy_overhead_jax(w, out),
+            "perf_overhead": perf_overhead,
+            "ballast_duty": on.mean(),
+            "reaches_tdp_frac": out.max() / tdp,
+            "misfire_j": mis_fire * dt,
         }
         return out, aux
+
+    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+        return np_apply(self, w, dt)
+
+
+register_mitigation(
+    Firefly,
+    data_fields=("engage_frac", "threshold_frac", "interference"),
+    meta_fields=("telemetry", "backoff_every_s", "backoff_dur_s",
+                 "ballast_steps", "hw"))

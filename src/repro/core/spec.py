@@ -3,15 +3,26 @@
 Time-domain: ramp-up / ramp-down rate limits (W/s) and a dynamic power
 range (max deviation within a sliding window) — Fig. 4. Frequency-domain:
 a critical band and a cap on the fraction of AC spectral energy inside it.
+
+``UtilitySpec.validate`` is the numpy reference; ``validate_jax`` is the
+pure traced mirror the batched scenario engine jits/vmaps (spec thresholds
+are static, the waveform is the traced input), returning per-violation
+boolean flags instead of a string list so verdicts vectorize.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spectrum import band_amplitude_w, band_energy_fraction
+from repro.core.spectrum import (band_amplitude_w, band_amplitude_w_jax,
+                                 band_energy_fraction,
+                                 band_energy_fraction_jax)
+
+VIOLATION_ORDER = ("ramp_up", "ramp_down", "dynamic_range",
+                   "band_energy", "band_amplitude")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +94,68 @@ class UtilitySpec:
             if amp > self.freq.max_bin_amplitude_w:
                 v.append("band_amplitude")
         return SpecReport(ok=not v, violations=tuple(v), metrics=m)
+
+    def validate_jax(self, w: jnp.ndarray, dt: float
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray],
+                                Dict[str, jnp.ndarray]]:
+        """Traced mirror of ``validate``: (ok, violation flags, metrics).
+
+        Waveform length and dt are static (they fix window/bin shapes);
+        thresholds come from this (static) spec.  Use ``report_from_arrays``
+        to rebuild a ``SpecReport`` from one row of vmapped outputs.
+        """
+        w = jnp.asarray(w, jnp.float32)
+        flags: Dict[str, jnp.ndarray] = {}
+        m: Dict[str, jnp.ndarray] = {}
+        false = jnp.asarray(False)
+        # ---- ramps (averaged over the metering window)
+        k = max(int(self.time.ramp_window_s / dt), 1)
+        if w.shape[-1] > k:
+            box = jnp.convolve(w, jnp.ones(k, jnp.float32) / k, mode="valid")
+            dp = jnp.diff(box) / dt
+            m["max_ramp_up_w_per_s"] = jnp.maximum(dp.max(), 0.0)
+            m["max_ramp_down_w_per_s"] = jnp.maximum(-dp.min(), 0.0)
+            flags["ramp_up"] = m["max_ramp_up_w_per_s"] > self.time.ramp_up_w_per_s
+            flags["ramp_down"] = (m["max_ramp_down_w_per_s"]
+                                  > self.time.ramp_down_w_per_s)
+        else:
+            flags["ramp_up"] = flags["ramp_down"] = false
+        # ---- dynamic range in sliding window (same strided starts as the
+        # numpy path, but as one [windows, n] gather instead of a loop)
+        n = max(int(self.time.window_s / dt), 2)
+        starts = np.arange(0, w.shape[-1] - n, max(n // 8, 1))
+        if w.shape[-1] >= n and len(starts):
+            seg = w[starts[:, None] + np.arange(n)[None, :]]
+            rng = (seg.max(axis=1) - seg.min(axis=1)).max()
+            m["dynamic_range_w"] = rng
+            flags["dynamic_range"] = rng > self.time.dynamic_range_w
+        else:
+            flags["dynamic_range"] = false
+        # ---- frequency domain
+        f_lo, f_hi = self.freq.band_hz
+        frac = band_energy_fraction_jax(w, dt, f_lo, f_hi)
+        m["band_energy_fraction"] = frac
+        m["ac_rms_frac"] = jnp.std(w) / jnp.maximum(jnp.mean(w), 1e-9)
+        material = m["ac_rms_frac"] >= self.freq.min_ac_rms_frac
+        flags["band_energy"] = material & (frac > self.freq.max_energy_fraction)
+        if self.freq.max_bin_amplitude_w is not None:
+            amp = band_amplitude_w_jax(w, dt, f_lo, f_hi)
+            m["band_bin_amplitude_w"] = amp
+            flags["band_amplitude"] = amp > self.freq.max_bin_amplitude_w
+        else:
+            flags["band_amplitude"] = false
+        ok = ~(flags["ramp_up"] | flags["ramp_down"] | flags["dynamic_range"]
+               | flags["band_energy"] | flags["band_amplitude"])
+        return ok, flags, m
+
+
+def report_from_arrays(ok, flags: Dict, metrics: Dict) -> "SpecReport":
+    """Rebuild a SpecReport from (one row of) ``validate_jax`` outputs."""
+    violations = tuple(v for v in VIOLATION_ORDER
+                       if v in flags and bool(np.asarray(flags[v])))
+    return SpecReport(ok=bool(np.asarray(ok)), violations=violations,
+                      metrics={k: float(np.asarray(v))
+                               for k, v in metrics.items()})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,13 +1,15 @@
 """Frequency-domain analysis of power waveforms (paper Fig. 3, Sec. III).
 
-All routines are plain numpy (analysis-side); the *streaming* per-bin
-monitor used by the backstop lives in kernels/goertzel (Pallas) with its
-jnp oracle in kernels/goertzel/ref.py.
+Numpy routines are the analysis-side reference; each has a pure-jnp mirror
+(``*_jax``) used inside the jit/vmap scenario engine (core/engine.py).  The
+*streaming* per-bin monitor used by the backstop lives in kernels/goertzel
+(Pallas) with its jnp oracle in kernels/goertzel/ref.py.
 """
 from __future__ import annotations
 
 from typing import Dict, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -57,4 +59,72 @@ def critical_band_report(x: np.ndarray, dt: float) -> Dict[str, float]:
         "torsional_7_100hz": band_energy_fraction(x, dt, 7.0, 100.0),
         "paper_band_0p2_3hz": band_energy_fraction(x, dt, 0.2, 3.0),
         "dominant_hz": dominant_frequency(x, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# jit/vmap-able mirrors.  Band edges and dt are static (they select FFT bins,
+# which fixes the computation shape); the waveform is the traced input.
+# ---------------------------------------------------------------------------
+
+def spectrum_jax(x: jnp.ndarray, dt: float) -> Tuple[np.ndarray, jnp.ndarray]:
+    """One-sided amplitude spectrum of the AC component (freqs are static)."""
+    x = jnp.asarray(x, jnp.float32)
+    xac = x - x.mean()
+    n = x.shape[-1]
+    mag = jnp.abs(jnp.fft.rfft(xac * jnp.asarray(np.hanning(n), jnp.float32)))
+    mag = mag * 2.0 / n
+    freqs = np.fft.rfftfreq(n, dt)
+    return freqs, mag
+
+
+def _band_mask(freqs: np.ndarray, f_lo: float, f_hi: float) -> np.ndarray:
+    sel = (freqs >= f_lo) & (freqs <= f_hi)
+    sel[0] = False  # DC is not part of the AC energy budget
+    return sel
+
+
+def band_energy_fraction_jax(x: jnp.ndarray, dt: float,
+                             f_lo: float, f_hi: float) -> jnp.ndarray:
+    freqs, mag = spectrum_jax(x, dt)
+    e = mag ** 2
+    tot = e[1:].sum()
+    frac = e[_band_mask(freqs, f_lo, f_hi)].sum() / jnp.maximum(tot, 1e-30)
+    return jnp.where(tot > 0, frac, 0.0)
+
+
+def band_amplitude_w_jax(x: jnp.ndarray, dt: float,
+                         f_lo: float, f_hi: float) -> jnp.ndarray:
+    freqs, mag = spectrum_jax(x, dt)
+    sel = (freqs >= f_lo) & (freqs <= f_hi)
+    if not sel.any():
+        return jnp.asarray(0.0, jnp.float32)
+    return mag[sel].max()
+
+
+def dominant_frequency_jax(x: jnp.ndarray, dt: float) -> jnp.ndarray:
+    freqs, mag = spectrum_jax(x, dt)
+    if len(freqs) < 2:
+        return jnp.asarray(0.0, jnp.float32)
+    return jnp.asarray(freqs, jnp.float32)[1:][jnp.argmax(mag[1:])]
+
+
+def critical_band_report_jax(x: jnp.ndarray, dt: float) -> Dict[str, jnp.ndarray]:
+    """jnp mirror of ``critical_band_report`` (one rfft, five reductions)."""
+    freqs, mag = spectrum_jax(x, dt)
+    e = mag ** 2
+    tot = e[1:].sum()
+
+    def frac(f_lo, f_hi):
+        val = e[_band_mask(freqs, f_lo, f_hi)].sum() / jnp.maximum(tot, 1e-30)
+        return jnp.where(tot > 0, val, 0.0)
+
+    dom = (jnp.asarray(freqs, jnp.float32)[1:][jnp.argmax(mag[1:])]
+           if len(freqs) >= 2 else jnp.asarray(0.0, jnp.float32))
+    return {
+        "sub_1hz": frac(0.05, 1.0),
+        "plant_1_2p5hz": frac(1.0, 2.5),
+        "torsional_7_100hz": frac(7.0, 100.0),
+        "paper_band_0p2_3hz": frac(0.2, 3.0),
+        "dominant_hz": dom,
     }

@@ -8,8 +8,11 @@ waveform from Figure 1' before deployment):
   -> datacenter waveform (+ jitter, distribution loss) -> utility spec
   validation + frequency report (+ optional backstop).
 
-``simulate`` is the single entry point used by benchmarks, tests and the
-power_stabilization_demo example.
+``simulate`` is the per-scenario entry point used by benchmarks, tests and
+the power_stabilization_demo example; it is the numpy-facing serial
+reference for the batched engine (core/engine.py), which runs grids of
+scenarios — and ``simulate_jit`` below, a single scenario — as one
+compiled jit/vmap call.
 """
 from __future__ import annotations
 
@@ -76,6 +79,22 @@ def simulate(timeline: IterationTimeline, n_chips: int,
         bands=critical_band_report(dc_raw, cfg.dt),
         bands_mitigated=critical_band_report(dc, cfg.dt),
         spec_report=report, aux=aux)
+
+
+def simulate_jit(timeline: IterationTimeline, n_chips: int,
+                 wave_cfg: Optional[WaveformConfig] = None,
+                 *, device_mitigation: Optional[Mitigation] = None,
+                 rack_mitigation: Optional[Mitigation] = None,
+                 spec: Optional[UtilitySpec] = None,
+                 hw: Hardware = DEFAULT_HW, seed: int = 0) -> SimResult:
+    """``simulate`` with the whole pipeline in ONE compiled call (the
+    batched engine at B=1); numerically equivalent to ``simulate`` (parity
+    tested in tests/test_engine.py)."""
+    from repro.core.engine import simulate_batch  # lazy: engine imports us
+    return simulate_batch(timeline, n_chips, wave_cfg,
+                          device_mitigation=device_mitigation,
+                          rack_mitigation=rack_mitigation, spec=spec,
+                          hw=hw, seeds=seed).scenario(0)
 
 
 def simulate_cell(cell: Dict, *, steps: int = 30, dt: float = 0.001,

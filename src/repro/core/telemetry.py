@@ -7,7 +7,10 @@ class so the latency/period trade-off is first-class in every simulation.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -36,4 +39,31 @@ class TelemetrySource:
             m = m + rng.normal(0.0, self.noise_w, size=n)
         if self.quantization_w > 0:
             m = np.round(m / self.quantization_w) * self.quantization_w
+        return m
+
+    def measure_jax(self, w: jnp.ndarray, dt: float,
+                    key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Pure traced mirror of ``measure`` for the jit/vmap engine.
+
+        Sampling indices are static (period/latency/dt are config);
+        noise, when enabled, draws from ``key`` instead of a numpy rng.
+        NOTE: without an explicit ``key`` the noise vector is a fixed
+        PRNGKey(0) draw — identical across calls and batch rows; thread a
+        per-scenario key when sweeping noisy-telemetry configs.
+        """
+        n = w.shape[-1]
+        k = max(int(round(self.period_s / dt)), 1)
+        lag = int(round(self.latency_s / dt))
+        if self.averaged and k > 1:
+            kernel = jnp.ones(k, jnp.float32) / k
+            base = jnp.convolve(w, kernel, mode="full")[:n]
+        else:
+            base = w
+        idx = np.clip((np.arange(n) // k) * k - lag, 0, n - 1)
+        m = base[idx]
+        if self.noise_w > 0:
+            key = jax.random.PRNGKey(0) if key is None else key
+            m = m + self.noise_w * jax.random.normal(key, (n,), jnp.float32)
+        if self.quantization_w > 0:
+            m = jnp.round(m / self.quantization_w) * self.quantization_w
         return m

@@ -5,12 +5,24 @@ near-TDP compute and near-idle communication, EDP overshoot spikes at phase
 rises, checkpoint valleys, and rack/DC aggregation with per-chip jitter
 (stragglers soften edges at scale, they do not remove the swing — the job
 is bulk-synchronous).
+
+Two layers:
+
+* the numpy-facing API (``chip_waveform`` / ``aggregate`` / ``job_waveform``)
+  used by existing callers, and
+* pure jnp building blocks (``chip_waveform_jax`` / ``aggregate_jax`` /
+  ``swing_stats_jax``) that run inside jit/vmap for the batched scenario
+  engine (core/engine.py).  The shape-determining timeline->samples
+  expansion stays in numpy (``phase_levels``); everything downstream of the
+  level array is traceable.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hardware import DEFAULT_HW, Hardware
@@ -35,9 +47,14 @@ class WaveformConfig:
     include_host: bool = False        # add per-chip host overhead (Fig. 2)
 
 
-def chip_waveform(tl: IterationTimeline, cfg: WaveformConfig,
-                  hw: Hardware = DEFAULT_HW) -> np.ndarray:
-    """One chip's power trace [n_samples] over cfg.steps iterations."""
+def phase_levels(tl: IterationTimeline, cfg: WaveformConfig,
+                 hw: Hardware = DEFAULT_HW) -> np.ndarray:
+    """Base per-sample power levels [n_samples] — no EDP spikes, no host.
+
+    This is the only shape-determining step (sample count depends on the
+    timeline), so it runs in numpy outside jit; the result feeds
+    ``chip_waveform_jax`` inside the compiled engine.
+    """
     seq = []
     for s in range(cfg.steps):
         phases = list(tl.phases)
@@ -46,7 +63,13 @@ def chip_waveform(tl: IterationTimeline, cfg: WaveformConfig,
         for p in phases:
             n = max(int(round(p.duration_s / cfg.dt)), 1)
             seq.append(np.full(n, mode_power(p.mode, hw)))
-    x = np.concatenate(seq)
+    return np.concatenate(seq)
+
+
+def chip_waveform(tl: IterationTimeline, cfg: WaveformConfig,
+                  hw: Hardware = DEFAULT_HW) -> np.ndarray:
+    """One chip's power trace [n_samples] over cfg.steps iterations."""
+    x = phase_levels(tl, cfg, hw)
     if cfg.edp_spikes:
         x = _add_edp_spikes(x, cfg.dt, hw)
     if cfg.include_host:
@@ -66,6 +89,45 @@ def _add_edp_spikes(x: np.ndarray, dt: float, hw: Hardware) -> np.ndarray:
     return out
 
 
+def chip_waveform_jax(levels: jnp.ndarray, dt: float,
+                      hw: Hardware = DEFAULT_HW, *, edp_spikes: bool = True,
+                      include_host: bool = False) -> jnp.ndarray:
+    """jnp mirror of ``chip_waveform`` on a precomputed level array."""
+    x = jnp.asarray(levels, jnp.float32)
+    if edp_spikes:
+        x = _add_edp_spikes_jax(x, dt, hw)
+    if include_host:
+        x = x + hw.server.overhead_per_chip_w()
+    return x
+
+
+def _add_edp_spikes_jax(x: jnp.ndarray, dt: float, hw: Hardware) -> jnp.ndarray:
+    """Vectorized EDP overshoot: a rise at r plants a spike source of value
+    x[r+1]*edp_factor at r+1 that persists for the EDP window; the output is
+    the running max of x against all active sources (order-free, so it
+    matches the serial rise-by-rise update exactly)."""
+    w = max(int(hw.chip.edp_window_s / dt), 1)
+    rise = jnp.diff(x) > 0.25 * hw.chip.tdp_w
+    src = jnp.concatenate([jnp.zeros(1, x.dtype),
+                           jnp.where(rise, x[1:], 0.0)]) * hw.chip.edp_factor
+    # held[i] = max(src[i-w+1 .. i]): one sliding-window max (spikes decay
+    # to 0 past the EDP window, and src >= 0, so 0-padding is neutral)
+    held = jax.lax.reduce_window(src, jnp.asarray(0.0, x.dtype), jax.lax.max,
+                                 (w,), (1,), [(w - 1, 0)])
+    return jnp.maximum(x, held)
+
+
+def jitter_shifts(cfg: WaveformConfig, seed: int = 0,
+                  sample_chips: int = 64) -> np.ndarray:
+    """Per-chip sample shifts (int32) used by both aggregate paths; a
+    degenerate [0] when jitter is off so the aggregation math is uniform."""
+    if cfg.jitter_s <= 0 or sample_chips <= 1:
+        return np.zeros(1, np.int32)
+    rng = np.random.default_rng(seed)
+    sh = rng.normal(0.0, cfg.jitter_s / cfg.dt, size=sample_chips)
+    return np.array([int(round(s)) for s in sh], np.int32)
+
+
 def aggregate(chip_wave: np.ndarray, n_chips: int, cfg: WaveformConfig,
               hw: Hardware = DEFAULT_HW, *, seed: int = 0,
               sample_chips: int = 64) -> np.ndarray:
@@ -73,18 +135,27 @@ def aggregate(chip_wave: np.ndarray, n_chips: int, cfg: WaveformConfig,
 
     Sampling `sample_chips` distinct jitter offsets and scaling captures the
     edge-softening of stragglers at O(sample) cost instead of O(n_chips).
+    Shifted replicas are edge-padded (the chip holds its boundary power),
+    not wrapped: rolling the tail onto the head used to create a spurious
+    edge at t=0.
     """
-    if cfg.jitter_s <= 0 or sample_chips <= 1:
-        total = chip_wave * n_chips
-    else:
-        rng = np.random.default_rng(seed)
-        shifts = rng.normal(0.0, cfg.jitter_s / cfg.dt, size=sample_chips)
-        acc = np.zeros_like(chip_wave)
-        for sh in shifts:
-            acc += np.roll(chip_wave, int(round(sh)))
-        total = acc * (n_chips / sample_chips)
-    if cfg.include_host:
-        pass  # host overhead already per-chip in chip_waveform
+    shifts = jitter_shifts(cfg, seed, sample_chips)
+    n = len(chip_wave)
+    idx = np.clip(np.arange(n)[None, :] - shifts[:, None], 0, n - 1)
+    total = chip_wave[idx].mean(axis=0) * n_chips
+    return total * (1.0 + hw.topo.distribution_loss)
+
+
+def aggregate_jax(chip_wave: jnp.ndarray, n_chips, shifts,
+                  hw: Hardware = DEFAULT_HW) -> jnp.ndarray:
+    """jnp mirror of ``aggregate``: one gather against a [S, n] shift-index
+    matrix replaces the per-sample-chip roll loop; edge-padded like the
+    numpy path.  ``shifts`` comes from ``jitter_shifts`` ([1] zero when
+    jitter is off); ``n_chips`` may be a traced scalar."""
+    n = chip_wave.shape[-1]
+    shifts = jnp.asarray(shifts)
+    idx = jnp.clip(jnp.arange(n)[None, :] - shifts[:, None], 0, n - 1)
+    total = chip_wave[idx].mean(axis=0) * n_chips
     return total * (1.0 + hw.topo.distribution_loss)
 
 
@@ -106,4 +177,15 @@ def swing_stats(w: np.ndarray) -> Dict[str, float]:
         "swing_w": float(np.max(w) - np.min(w)),
         "mean_w": float(np.mean(w)),
         "swing_frac": float((np.max(w) - np.min(w)) / max(np.max(w), 1e-9)),
+    }
+
+
+def swing_stats_jax(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    peak, trough = jnp.max(w), jnp.min(w)
+    return {
+        "peak_w": peak,
+        "trough_w": trough,
+        "swing_w": peak - trough,
+        "mean_w": jnp.mean(w),
+        "swing_frac": (peak - trough) / jnp.maximum(peak, 1e-9),
     }

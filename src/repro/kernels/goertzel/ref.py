@@ -46,6 +46,22 @@ def bin_power_ref(windows, dt: float, freqs) -> jnp.ndarray:
     return (2.0 / win) * jnp.sqrt(re * re + im * im)
 
 
+def sliding_bin_power_jnp(x: jnp.ndarray, dt: float, freqs,
+                          win: int) -> jnp.ndarray:
+    """Traced mirror of ``sliding_bin_power_ref``: every-sample sliding
+    window bin amplitudes [n, K] via complex cumulative sums, jit/vmap-safe
+    (``freqs`` and ``win`` are static)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[-1]
+    f = jnp.asarray(freqs, jnp.float32)
+    t = jnp.arange(n, dtype=jnp.float32) * dt
+    ph = jnp.exp(-2j * jnp.pi * t[:, None] * f[None, :])      # [n, K]
+    cs = jnp.cumsum(x[:, None] * ph, axis=0)
+    w = jnp.concatenate([cs[:win], cs[win:] - cs[:-win]]) if n > win else cs
+    denom = jnp.minimum(jnp.arange(n, dtype=jnp.float32) + 1.0, float(win))
+    return 2.0 * jnp.abs(w) / denom[:, None]
+
+
 def sliding_bin_power_ref(x: np.ndarray, dt: float, freqs: np.ndarray,
                           win: int) -> np.ndarray:
     """Every-sample sliding-window bin amplitudes [n, K] (numpy)."""

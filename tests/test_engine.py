@@ -1,0 +1,316 @@
+"""Batched scenario engine: parity with the serial path + batching laws.
+
+The contract under test: for every mitigation, ``simulate_batch`` /
+``apply_batch`` (vmapped apply_jax) produce the same waveforms, swing
+stats, band reports and spec verdicts as looping the serial ``simulate`` /
+``apply`` over the scenarios one at a time.
+"""
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import engine
+from repro.core.hardware import DEFAULT_HW
+
+DT = 0.002
+N_CHIPS = 512
+
+
+def _timeline(period=1.0, comm=0.3, moe=False):
+    return core.synthetic_timeline(period_s=period, comm_frac=comm,
+                                   moe_notch=moe)
+
+
+def _cfg(**kw):
+    kw.setdefault("dt", DT)
+    kw.setdefault("steps", 6)
+    return core.WaveformConfig(**kw)
+
+
+def _chip_wave():
+    return core.chip_waveform(_timeline(), _cfg())
+
+
+def _dc_wave():
+    cfg = _cfg(jitter_s=0.002)
+    return core.aggregate(core.chip_waveform(_timeline(), cfg), N_CHIPS, cfg)
+
+
+def _gpu(mpf, **kw):
+    kw.setdefault("ramp_up_w_per_s", 2000)
+    kw.setdefault("ramp_down_w_per_s", 2000)
+    kw.setdefault("stop_delay_s", 1.0)
+    return core.GpuPowerSmoothing(mpf_frac=mpf, **kw)
+
+
+def _bat(cap, swing):
+    return core.RackBattery(capacity_j=cap, max_discharge_w=swing,
+                            max_charge_w=swing, target_tau_s=5.0)
+
+
+# ---------------------------------------------------------------------------
+# apply_batch: vmapped apply_jax == per-config serial apply
+# ---------------------------------------------------------------------------
+
+def _grids():
+    chip = _chip_wave()
+    dc = _dc_wave()
+    swing_c = float(chip.max() - chip.min())
+    swing_d = float(dc.max() - dc.min())
+    return {
+        "gpu_floor": (chip, [_gpu(m) for m in (0.5, 0.65, 0.9)]),
+        "battery": (dc, [_bat(f * swing_d, swing_d) for f in (0.5, 1.0, 2.0)]),
+        "firefly": (chip, [core.Firefly(engage_frac=e, threshold_frac=e - 0.05)
+                           for e in (0.85, 0.95)]),
+        "backstop": (dc, [core.TelemetryBackstop(
+            critical_hz=(0.5, 1.0), window_s=2.0, sustain_s=0.5,
+            amp_threshold_w=a * swing_d) for a in (0.05, 10.0)]),
+        "combined": (dc, [core.CombinedMitigation(
+            _gpu(m), _bat(swing_d, swing_d), N_CHIPS) for m in (0.5, 0.9)]),
+        "stack": (chip, [core.Stack([_gpu(m), _bat(2 * swing_c, swing_c)])
+                         for m in (0.5, 0.9)]),
+    }
+
+
+@pytest.mark.parametrize("name", ["gpu_floor", "battery", "firefly",
+                                  "backstop", "combined", "stack"])
+def test_apply_batch_matches_serial(name):
+    w, mits = _grids()[name]
+    outs, aux = core.apply_batch(mits, w, DT)
+    assert outs.shape == (len(mits), len(w))
+    for i, m in enumerate(mits):
+        ref, ref_aux = m.apply(w, DT)
+        np.testing.assert_allclose(outs[i], ref, rtol=1e-5, atol=1e-3)
+        # scalar aux entries agree row-by-row
+        for k, v in ref_aux.items():
+            if isinstance(v, float):
+                np.testing.assert_allclose(
+                    np.asarray(aux[k][i], np.float64), v,
+                    rtol=1e-4, atol=1e-6, err_msg=f"{name}.{k}")
+
+
+# ---------------------------------------------------------------------------
+# simulate_batch: one compiled call == loop of serial simulate
+# ---------------------------------------------------------------------------
+
+def _scenarios():
+    """(device, rack) configs covering every mitigation class, batchable
+    per group."""
+    dc = _dc_wave()
+    swing = float(dc.max() - dc.min())
+    return {
+        "device_gpu": ([_gpu(m) for m in (0.5, 0.8, 0.9)], None),
+        "device_firefly": ([core.Firefly(engage_frac=e, threshold_frac=e - 0.05)
+                            for e in (0.85, 0.95)], None),
+        "rack_battery": (None, [_bat(f * swing, swing) for f in (0.5, 2.0)]),
+        "rack_backstop": (None, [core.TelemetryBackstop(
+            critical_hz=(0.5, 1.0), window_s=2.0, sustain_s=0.5,
+            amp_threshold_w=a * swing) for a in (0.05, 10.0)]),
+        "gpu_plus_battery": ([_gpu(m) for m in (0.5, 0.9)],
+                             [_bat(f * swing, swing) for f in (0.5, 2.0)]),
+    }
+
+
+@pytest.mark.parametrize("name", ["device_gpu", "device_firefly",
+                                  "rack_battery", "rack_backstop",
+                                  "gpu_plus_battery"])
+def test_simulate_batch_matches_simulate(name):
+    dev, rack = _scenarios()[name]
+    B = len(dev) if dev is not None else len(rack)
+    tl = _timeline()
+    # firefly's ballast quantization has ceil() decision boundaries that
+    # f32/f64 EDP-spike rounding can flip; exact levels keep parity exact
+    cfg = _cfg(jitter_s=0.002, edp_spikes=(name != "device_firefly"))
+    spec = core.example_specs(job_mw=0.1)["moderate"]
+
+    res = engine.simulate_batch(tl, N_CHIPS, cfg, device_mitigation=dev,
+                                rack_mitigation=rack, spec=spec, seeds=3)
+    assert len(res) == B
+    for i in range(B):
+        ref = core.simulate(
+            tl, N_CHIPS, cfg,
+            device_mitigation=dev[i] if dev is not None else None,
+            rack_mitigation=rack[i] if rack is not None else None,
+            spec=spec, seed=3)
+        np.testing.assert_allclose(res.dc_raw[i], ref.dc_raw,
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.dc_mitigated[i], ref.dc_mitigated,
+                                   rtol=1e-4, atol=1e-3)
+        if dev is not None:
+            np.testing.assert_allclose(res.chip_mitigated[i],
+                                       ref.chip_mitigated,
+                                       rtol=1e-5, atol=1e-3)
+        for k, v in ref.swing_mitigated.items():
+            np.testing.assert_allclose(res.swing_mitigated[k][i], v,
+                                       rtol=1e-4, atol=1e-3, err_msg=k)
+        for k, v in ref.bands_mitigated.items():
+            np.testing.assert_allclose(res.bands_mitigated[k][i], v,
+                                       rtol=5e-3, atol=2e-3, err_msg=k)
+        np.testing.assert_allclose(res.energy_overhead[i],
+                                   ref.energy_overhead, rtol=1e-3, atol=1e-6)
+        # spec verdicts and violation sets agree exactly
+        assert bool(res.spec_ok[i]) == ref.spec_report.ok
+        assert res.report(i).violations == ref.spec_report.violations
+        # the reconstructed per-scenario SimResult round-trips
+        sr = res.scenario(i)
+        assert sr.spec_report.ok == ref.spec_report.ok
+        np.testing.assert_allclose(sr.dc_mitigated, ref.dc_mitigated,
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_simulate_batch_broadcasts_fleet_and_seeds():
+    tl = _timeline()
+    cfg = _cfg(jitter_s=0.002)
+    fleets = [128, 512, 2048]
+    res = engine.simulate_batch(tl, fleets, cfg, seeds=[0, 1, 2])
+    for i, n in enumerate(fleets):
+        ref = core.simulate(tl, n, cfg, seed=i)
+        np.testing.assert_allclose(res.dc_raw[i], ref.dc_raw,
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_simulate_batch_rejects_mixed_none_configs():
+    with pytest.raises(ValueError):
+        engine.simulate_batch(_timeline(), N_CHIPS, _cfg(),
+                              device_mitigation=[_gpu(0.5), None])
+
+
+def test_simulate_batch_rejects_mixed_lengths():
+    with pytest.raises(ValueError):
+        engine.simulate_batch([_timeline(1.0), _timeline(2.0)],
+                              N_CHIPS, _cfg())
+
+
+# ---------------------------------------------------------------------------
+# sweep: cartesian product, bucketed by waveform length
+# ---------------------------------------------------------------------------
+
+def test_sweep_buckets_mixed_length_workloads():
+    workloads = {"short": _timeline(1.0), "long": _timeline(2.0, moe=True)}
+    cfg = _cfg(jitter_s=0.002, steps=4)
+    spec = core.example_specs(job_mw=0.1)["moderate"]
+    dc = core.aggregate(core.chip_waveform(workloads["short"], cfg),
+                        N_CHIPS, cfg)
+    swing = float(dc.max() - dc.min())
+    configs = [(_gpu(0.65), _bat(swing, swing)),
+               (_gpu(0.9), _bat(2 * swing, swing))]
+    recs = engine.sweep(workloads, [256, 512], configs, cfg, spec=spec)
+    assert len(recs) == 2 * 2 * 2          # workloads x fleets x configs
+    # record order follows the declared cartesian order despite bucketing
+    assert [r["workload"] for r in recs] == ["short"] * 4 + ["long"] * 4
+    for r in recs:
+        ci, ni = r["config"], r["n_chips"]
+        ref = core.simulate(workloads[r["workload"]], ni, cfg,
+                            device_mitigation=configs[ci][0],
+                            rack_mitigation=configs[ci][1], spec=spec)
+        assert r["spec_ok"] == ref.spec_report.ok
+        np.testing.assert_allclose(r["energy_overhead"], ref.energy_overhead,
+                                   rtol=1e-3, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched design grid
+# ---------------------------------------------------------------------------
+
+def _serial_design_reference(spec, w, dt, n_chips, period_hint_s=2.0):
+    """The pre-engine serial grid search, kept as the parity oracle."""
+    swing = float(w.max() - w.min())
+    mpf_grid = [0.0, 0.5, 0.65, 0.8, 0.9]
+    cap_grid = [0.0] + [swing * period_hint_s * f for f in
+                        (0.125, 0.25, 0.5, 1.0, 2.0)]
+    for mpf in mpf_grid:
+        for cap in cap_grid:
+            gpu = _design_gpu(spec, mpf, n_chips) if mpf > 0 else None
+            bat = (core.RackBattery(capacity_j=cap, max_discharge_w=swing,
+                                    max_charge_w=swing) if cap > 0 else None)
+            if gpu and bat:
+                out, _ = core.CombinedMitigation(gpu, bat, n_chips).apply(w, dt)
+            elif gpu:
+                per_chip, _ = gpu.apply(w / n_chips, dt)
+                out = per_chip * n_chips
+            elif bat:
+                out, _ = bat.apply(w, dt)
+            else:
+                out = w
+            if spec.validate(out, dt).ok:
+                return mpf, cap
+    return None
+
+
+def _design_gpu(spec, mpf, n_chips):
+    return core.GpuPowerSmoothing(
+        mpf_frac=mpf,
+        ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
+        ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
+
+
+def test_design_mitigation_matches_serial_reference():
+    tl = _timeline(period=2.0, comm=0.25)
+    cfg = core.WaveformConfig(dt=0.002, steps=20, jitter_s=0.002)
+    w = core.aggregate(core.chip_waveform(tl, cfg), N_CHIPS, cfg)
+    spec = core.example_specs(job_mw=w.mean() / 1e6)["moderate"]
+    sol = core.design_mitigation(spec, w, cfg.dt, N_CHIPS)
+    assert sol is not None and sol["report"].ok
+    ref = _serial_design_reference(spec, w, cfg.dt, N_CHIPS)
+    assert ref is not None
+    assert (sol["mpf_frac"], sol["battery_capacity_j"]) == pytest.approx(ref)
+
+
+def test_design_grid_vmap_matches_per_candidate():
+    """Each cell of the vmapped (MPF x capacity) grid equals the serial
+    gated evaluation of that candidate."""
+    tl = _timeline(period=2.0, comm=0.25)
+    cfg = core.WaveformConfig(dt=0.002, steps=10, jitter_s=0.002)
+    w = core.aggregate(core.chip_waveform(tl, cfg), N_CHIPS, cfg)
+    spec = core.example_specs(job_mw=w.mean() / 1e6)["moderate"]
+    swing = float(w.max() - w.min())
+    mpf_grid, cap_grid = [0.0, 0.9], [0.0, 2.0 * swing]
+    sol = engine.design_grid(spec, w, cfg.dt, N_CHIPS, mpf_grid, cap_grid,
+                             swing=swing)
+    grid_ok = (sol["grid_ok"] if sol is not None
+               else np.zeros((2, 2), bool))
+    for i, mpf in enumerate(mpf_grid):
+        for j, cap in enumerate(cap_grid):
+            gpu = _design_gpu(spec, mpf, N_CHIPS) if mpf > 0 else None
+            bat = (core.RackBattery(capacity_j=cap, max_discharge_w=swing,
+                                    max_charge_w=swing) if cap > 0 else None)
+            if gpu and bat:
+                out, _ = core.CombinedMitigation(gpu, bat, N_CHIPS).apply(
+                    w, cfg.dt)
+            elif gpu:
+                per, _ = gpu.apply(w / N_CHIPS, cfg.dt)
+                out = per * N_CHIPS
+            elif bat:
+                out, _ = bat.apply(w, cfg.dt)
+            else:
+                out = w
+            assert bool(grid_ok[i, j]) == spec.validate(out, cfg.dt).ok, \
+                (mpf, cap)
+
+
+# ---------------------------------------------------------------------------
+# aggregate jitter: edge padding, no wraparound
+# ---------------------------------------------------------------------------
+
+def test_aggregate_jitter_does_not_wrap_tail_to_head():
+    cfg = core.WaveformConfig(dt=0.001, steps=1, jitter_s=0.02)
+    lo, hi = 100.0, 200.0
+    chip = np.concatenate([np.full(2000, lo), np.full(1000, hi)])
+    agg = core.aggregate(chip, N_CHIPS, cfg, seed=0)
+    scale = N_CHIPS * (1.0 + DEFAULT_HW.topo.distribution_loss)
+    # head must see only the head level: a wrapping shift would leak the
+    # hi tail into t=0 and lift it above lo
+    np.testing.assert_allclose(agg[:100] / scale, lo, rtol=1e-6)
+    # tail likewise holds its boundary level
+    np.testing.assert_allclose(agg[-1] / scale, hi, rtol=1e-6)
+
+
+def test_aggregate_jax_matches_numpy():
+    from repro.core.waveform import aggregate_jax, jitter_shifts
+    cfg = core.WaveformConfig(dt=0.001, steps=3, jitter_s=0.005)
+    chip = core.chip_waveform(_timeline(), cfg)
+    shifts = jitter_shifts(cfg, seed=7)
+    ref = core.aggregate(chip, N_CHIPS, cfg, seed=7)
+    out = np.asarray(aggregate_jax(np.asarray(chip, np.float32),
+                                   float(N_CHIPS), shifts))
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
