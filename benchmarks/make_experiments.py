@@ -92,10 +92,12 @@ def perf_rows(cell_names):
 
 
 def power_sweep_section():
-    """§Power — the batched scenario engine run over (workload x fleet x
-    mitigation config); dry-run timelines when artifacts exist, the
-    calibrated synthetic workloads otherwise.  The whole grid per workload
-    length is ONE jit/vmap call (core/engine.py)."""
+    """§Power — one declarative Study over (workload x config) under the
+    'moderate' spec; dry-run timelines when artifacts exist, the calibrated
+    synthetic workloads otherwise.  The unmitigated baseline batches with
+    the mitigated configs (mixed None rows mask through the engine), and
+    mixed-length workloads fuse into one padded pipeline call
+    (core/study.py)."""
     workloads = {}
     for key, cell in sorted(_load_cells_safe().items()):
         if cell.get("shape") == "train_4k":
@@ -115,8 +117,7 @@ def power_sweep_section():
         core.chip_waveform(next(iter(workloads.values())), cfg), n_chips, cfg)
     swing = float(ref.max() - ref.min())
     spec = core.example_specs(job_mw=ref.mean() / 1e6)["moderate"]
-    configs = [(None, None)]
-    labels = ["none"]
+    configs = {"none": None}
     for mpf in (0.65, 0.9):
         for cap_f in (0.5, 2.0):
             gpu = core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=2000,
@@ -125,28 +126,22 @@ def power_sweep_section():
             bat = core.RackBattery(capacity_j=cap_f * swing,
                                    max_discharge_w=swing, max_charge_w=swing,
                                    target_tau_s=10.0)
-            configs.append((gpu, bat))
-            labels.append(f"mpf{int(mpf*100)}+bat{cap_f}x")
-    # the unmitigated baseline batches separately (no mitigation pytree);
-    # all mitigated configs run through one sweep call per workload length
-    records = []
-    for r in core.sweep(workloads, [n_chips], configs[:1], cfg, spec=spec):
-        r["config"] = labels[0]
-        records.append(r)
-    for r in core.sweep(workloads, [n_chips], configs[1:], cfg, spec=spec):
-        r["config"] = labels[1 + r["config"]]
-        records.append(r)
+            configs[f"mpf{int(mpf*100)}+bat{cap_f}x"] = (gpu, bat)
+    study = core.Study(workloads, fleets=[n_chips], configs=configs,
+                       specs=spec, wave_cfg=cfg, key=0)
+    result = study.run()
     rows = ["| workload | config | swing MW | mitigated MW | overhead | spec |",
             "|---|---|---|---|---|---|"]
-    for r in sorted(records, key=lambda r: (r["workload"], r["config"])):
+    for r in sorted(result, key=lambda r: (r["workload"], r["config"])):
         rows.append("| {} | {} | {} | {} | {} | {} |".format(
             r["workload"], r["config"], f(r["swing_mw"]),
             f(r["swing_mitigated_mw"]), f(r["energy_overhead"], 4),
             "PASS" if r["spec_ok"] else ",".join(r["violations"])))
-    lines = [f"\n## §Power sweep — batched engine over {source}\n",
-             f"{len(records)} scenarios ({len(workloads)} workloads x "
-             f"{len(configs)} mitigation configs x {n_chips} chips), "
-             "'moderate' utility spec.\n", "\n".join(rows)]
+    lines = [f"\n## §Power sweep — one Study over {source}\n",
+             f"{len(result)} scenarios ({len(workloads)} workloads x "
+             f"{len(configs)} mitigation configs x {n_chips} chips, "
+             "baseline batched with mitigated rows), 'moderate' utility "
+             "spec, one padded pipeline call.\n", "\n".join(rows)]
     bench = os.path.join(ROOT, "BENCH_sweep.json")
     if os.path.exists(bench):
         with open(bench) as fh:
@@ -154,9 +149,11 @@ def power_sweep_section():
         lines.append(
             f"\nSweep wall-clock (benchmarks/sweep_bench.py, "
             f"{b['n_scenarios']} scenarios): serial {b['serial_s']}s -> "
-            f"batched {b['batched_warm_s']}s warm "
-            f"(**{b['speedup_warm']}x**; cold incl. compile "
-            f"{b['batched_cold_s']}s, {b['speedup_cold']}x).")
+            f"bucketed {b['bucketed_warm_s']}s / padded single-bucket "
+            f"{b['padded_warm_s']}s warm "
+            f"(**{b['speedup_warm_padded']}x**; cold incl. compile: "
+            f"bucketed {b['bucketed_cold_s']}s vs padded "
+            f"{b['padded_cold_s']}s, {b['padded_vs_bucketed_cold']}x less).")
     return "\n".join(lines)
 
 
@@ -175,6 +172,9 @@ HEADER = """# EXPERIMENTS
 All numbers are machine-generated from committed artifacts:
 `artifacts/dryrun/*` (baseline sweep), `artifacts/dryrun_v2/*` (optimized
 sweep), regenerate with `PYTHONPATH=src python -m benchmarks.make_experiments`.
+The power-matrix sections run through the declarative Study API
+(`repro.api`: declare -> run -> query; see README for the engine-call
+migration table); raw engine functions remain the compile target.
 Hardware target: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI
 (assignment constants). This container is CPU-only: every cell is
 lower+compile (XLA SPMD, 512 host devices), never executed at scale.

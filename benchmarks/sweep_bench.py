@@ -1,24 +1,30 @@
-"""Serial vs batched scenario-sweep wall-clock — writes BENCH_sweep.json.
+"""Serial vs bucketed vs padded scenario-sweep wall-clock — BENCH_sweep.json.
 
 The workload is the operator's pre-dispatch question: across a matrix of
 workloads and (MPF, battery) configurations, which pass the utility spec
-and at what energy overhead?  The serial path answers it one ``simulate``
-call at a time (the pre-engine architecture); the batched path runs each
-workload's 25-config grid as ONE jit/vmap call via ``engine.sweep``.
+and at what energy overhead?  Three ways to answer it:
 
-  PYTHONPATH=src python -m benchmarks.sweep_bench
+  serial    one ``simulate`` call per scenario (the pre-engine architecture);
+  bucketed  ``engine.sweep`` — one jit/vmap call per workload *length*
+            (PR 1's batched engine path, 4 compiled pipelines here);
+  padded    ``Study(padding="pad").run()`` — mixed-length workloads
+            edge-padded + masked into ONE fused pipeline call (the
+            declarative Study API's scale lever), frequency/spec analysis
+            per true length afterwards.
 
-Reported timings: ``serial_s`` is the full Python loop; ``batched_warm_s``
-is a steady-state sweep (compiled functions cached — the regime every
-sweep after the first runs in); ``batched_cold_s`` includes compilation.
+  PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke]
+
+Reported timings: ``*_warm_s`` are steady-state sweeps (compiled functions
+cached — the regime every sweep after the first runs in); ``*_cold_s``
+include compilation.  ``--smoke`` runs a small matrix for CI: it checks
+three-way verdict parity and skips the JSON artifact.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
-
-import numpy as np
 
 import repro.core as core
 from benchmarks.common import emit
@@ -27,8 +33,9 @@ N_CHIPS = 512
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
 
 
-def scenario_matrix():
-    """4 workloads x 25 (MPF x battery) configs — the acceptance grid."""
+def scenario_matrix(smoke: bool = False):
+    """4 workloads x 25 (MPF x battery) configs — the acceptance grid
+    (2 x 4 under ``--smoke``)."""
     workloads = {
         "dense_2s": core.synthetic_timeline(period_s=2.0, comm_frac=0.19),
         "dense_1s": core.synthetic_timeline(period_s=1.0, comm_frac=0.30),
@@ -36,14 +43,19 @@ def scenario_matrix():
                                           moe_notch=True),
         "ckpt_heavy": core.synthetic_timeline(period_s=1.5, comm_frac=0.40),
     }
-    cfg = core.WaveformConfig(dt=0.002, steps=12, jitter_s=0.002)
+    mpfs, caps = (0.5, 0.65, 0.8, 0.85, 0.9), (0.25, 0.5, 1.0, 2.0, 4.0)
+    if smoke:
+        workloads = {k: workloads[k] for k in ("dense_1s", "moe_3s")}
+        mpfs, caps = (0.65, 0.9), (0.5, 2.0)
+    cfg = core.WaveformConfig(dt=0.002, steps=12 if not smoke else 6,
+                              jitter_s=0.002)
     # swing scale for battery sizing: one representative aggregate
-    w = core.aggregate(core.chip_waveform(workloads["dense_2s"], cfg),
+    w = core.aggregate(core.chip_waveform(next(iter(workloads.values())), cfg),
                        N_CHIPS, cfg)
     swing = float(w.max() - w.min())
     configs = []
-    for mpf in (0.5, 0.65, 0.8, 0.85, 0.9):
-        for cap_f in (0.25, 0.5, 1.0, 2.0, 4.0):
+    for mpf in mpfs:
+        for cap_f in caps:
             gpu = core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=2000,
                                          ramp_down_w_per_s=2000,
                                          stop_delay_s=1.0)
@@ -65,58 +77,122 @@ def run_serial(workloads, configs, cfg, spec):
     return records
 
 
-def run_batched(workloads, configs, cfg, spec):
+def run_bucketed(workloads, configs, cfg, spec):
     recs = core.sweep(workloads, [N_CHIPS], configs, cfg, spec=spec)
     return [(r["workload"], r["spec_ok"], r["energy_overhead"]) for r in recs]
 
 
+def make_study(workloads, configs, cfg, spec) -> core.Study:
+    # key=None: the serial reference above has no keyed randomness
+    return core.Study(workloads, fleets=[N_CHIPS], configs=list(configs),
+                      specs=spec, wave_cfg=cfg, key=None, padding="pad")
+
+
+def run_padded(study):
+    res = study.run()
+    return [(r["workload"], r["spec_ok"], r["energy_overhead"])
+            for r in res.records]
+
+
+def _agreement(a, b):
+    return sum(int(x[1] == y[1]) for x, y in zip(a, b))
+
+
 def main() -> None:
-    workloads, configs, cfg, spec = scenario_matrix()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small matrix, parity checks only, no JSON artifact")
+    args = ap.parse_args()
+
+    workloads, configs, cfg, spec = scenario_matrix(args.smoke)
+    study = make_study(workloads, configs, cfg, spec)
     n_scen = len(workloads) * len(configs)
+
+    if args.smoke:
+        serial = run_serial(workloads, configs, cfg, spec)
+        bucketed = run_bucketed(workloads, configs, cfg, spec)
+        padded = run_padded(study)
+        assert _agreement(serial, bucketed) == n_scen, \
+            "bucketed verdicts disagree with serial"
+        assert _agreement(serial, padded) == n_scen, \
+            "padded verdicts disagree with serial"
+        print(f"smoke OK: {n_scen} scenarios, serial == bucketed == padded "
+              "spec verdicts")
+        return
 
     # warm the per-shape scan/FFT caches for EVERY workload length (they
     # compile separately) so the serial loop is measured in its own steady
-    # state, symmetric with the batched warm timing
+    # state, symmetric with the batched warm timings
     run_serial(workloads, configs[:1], cfg, spec)
     t0 = time.perf_counter()
     serial = run_serial(workloads, configs, cfg, spec)
     serial_s = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    batched_first = run_batched(workloads, configs, cfg, spec)
-    cold_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    batched = run_batched(workloads, configs, cfg, spec)
-    warm_s = time.perf_counter() - t0
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        return out, time.perf_counter() - t0
 
-    # verdict parity: same pass/fail for every scenario
-    agree = sum(int(a[1] == b[1]) for a, b in zip(serial, batched))
+    def best_of(fn, n=3):
+        # warm timings are noise-prone at this scale; best-of-n is the
+        # steady-state number (both paths measured identically)
+        out, best = timed(fn)
+        for _ in range(n - 1):
+            out, t = timed(fn)
+            best = min(best, t)
+        return out, best
+
+    _, bucketed_cold_s = timed(
+        lambda: run_bucketed(workloads, configs, cfg, spec))
+    bucketed, bucketed_warm_s = best_of(
+        lambda: run_bucketed(workloads, configs, cfg, spec))
+
+    _, padded_cold_s = timed(lambda: run_padded(study))
+    padded, padded_warm_s = best_of(lambda: run_padded(study))
+
+    # verdict parity: same pass/fail for every scenario, all three paths
+    agree_b = _agreement(serial, bucketed)
+    agree_p = _agreement(serial, padded)
     result = {
         "n_scenarios": n_scen,
         "n_workloads": len(workloads),
         "n_configs": len(configs),
         "serial_s": round(serial_s, 3),
-        "batched_cold_s": round(cold_s, 3),
-        "batched_warm_s": round(warm_s, 3),
-        "speedup_warm": round(serial_s / warm_s, 1),
-        "speedup_cold": round(serial_s / cold_s, 1),
-        "verdict_agreement": f"{agree}/{n_scen}",
-        "passing_configs": sum(int(ok) for _, ok, _ in batched),
+        "bucketed_cold_s": round(bucketed_cold_s, 3),
+        "bucketed_warm_s": round(bucketed_warm_s, 3),
+        "padded_cold_s": round(padded_cold_s, 3),
+        "padded_warm_s": round(padded_warm_s, 3),
+        "speedup_warm_bucketed": round(serial_s / bucketed_warm_s, 1),
+        "speedup_warm_padded": round(serial_s / padded_warm_s, 1),
+        "padded_vs_bucketed_warm": round(bucketed_warm_s / padded_warm_s, 2),
+        "padded_vs_bucketed_cold": round(bucketed_cold_s / padded_cold_s, 2),
+        "verdict_agreement_bucketed": f"{agree_b}/{n_scen}",
+        "verdict_agreement_padded": f"{agree_p}/{n_scen}",
+        "passing_configs": sum(int(ok) for _, ok, _ in padded),
     }
     with open(OUT_PATH, "w") as fh:
         json.dump(result, fh, indent=2)
         fh.write("\n")
     emit("sweep/serial", serial_s * 1e6 / n_scen, {"total_s": round(serial_s, 2)})
-    emit("sweep/batched_warm", warm_s * 1e6 / n_scen,
-         {"total_s": round(warm_s, 2), "speedup": result["speedup_warm"]})
-    emit("sweep/batched_cold", cold_s * 1e6 / n_scen,
-         {"total_s": round(cold_s, 2), "speedup": result["speedup_cold"]})
-    assert agree == n_scen, "serial and batched spec verdicts disagree"
-    # the speedup target is advisory (wall-clock is environment-dependent);
+    emit("sweep/bucketed_warm", bucketed_warm_s * 1e6 / n_scen,
+         {"total_s": round(bucketed_warm_s, 2),
+          "speedup": result["speedup_warm_bucketed"]})
+    emit("sweep/padded_warm", padded_warm_s * 1e6 / n_scen,
+         {"total_s": round(padded_warm_s, 2),
+          "speedup": result["speedup_warm_padded"],
+          "vs_bucketed": result["padded_vs_bucketed_warm"]})
+    assert agree_b == n_scen, "serial and bucketed spec verdicts disagree"
+    assert agree_p == n_scen, "serial and padded spec verdicts disagree"
+    # the speedup targets are advisory (wall-clock is environment-dependent);
     # correctness (verdict parity) is the hard invariant above
-    if serial_s / warm_s < 5.0:
-        print(f"# WARNING: batched sweep only {serial_s / warm_s:.1f}x "
+    if serial_s / padded_warm_s < 5.0:
+        print(f"# WARNING: padded sweep only {serial_s / padded_warm_s:.1f}x "
               "serial on this machine (target >=5x)")
+    if padded_warm_s > 1.1 * bucketed_warm_s:
+        print(f"# WARNING: padded single-bucket path "
+              f"{padded_warm_s / bucketed_warm_s:.2f}x slower than "
+              "per-length buckets on this machine (target: parity; "
+              "the fusion win is compile amortization, see *_cold_s)")
     print("wrote", os.path.abspath(OUT_PATH))
 
 

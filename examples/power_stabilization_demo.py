@@ -1,7 +1,9 @@
-"""The paper end-to-end: dry-run artifact -> waveform -> FFT -> mitigation
-stack -> utility-spec report, plus the batched scenario engine: the
-(MPF x battery) design search and a fleet-size sweep each run as ONE
-jit/vmap call. Pure analysis; runs in seconds.
+"""The paper end-to-end through the Study API: declare -> run -> query.
+
+dry-run artifact -> phase timeline -> one declarative Study (baseline +
+mitigation grid x fleet sizes, noisy telemetry keyed per scenario) -> spec
+verdict table -> the batched (MPF x battery) design search -> a serve-path
+compliance query.  Pure analysis; runs in seconds.
 
   PYTHONPATH=src python examples/power_stabilization_demo.py \
       [--cell artifacts/dryrun/granite-3-8b__train_4k__single.json]
@@ -10,10 +12,8 @@ import argparse
 import os
 import sys
 
-import numpy as np
-
 sys.path.insert(0, "src")
-import repro.core as core
+from repro import api
 
 
 def main():
@@ -23,54 +23,73 @@ def main():
     args = ap.parse_args()
 
     if os.path.exists(args.cell):
-        cell = core.load_cell(args.cell)
-        tl = core.from_dryrun_cell(cell)
+        cell = api.load_cell(args.cell)
+        tl = api.from_dryrun_cell(cell)
         n_chips = cell["n_chips"]
         print(f"cell: {cell['arch']} x {cell['shape']} on {n_chips} chips")
     else:
         print("no dry-run artifact found; using the calibrated Fig.-1 timeline")
-        tl, n_chips = core.synthetic_timeline(2.0, 0.19), 512
+        tl, n_chips = api.synthetic_timeline(2.0, 0.19), 512
     print("phases:", [(p.name, f"{p.duration_s:.3f}s", p.mode) for p in tl.phases])
 
-    cfgw = core.WaveformConfig(dt=0.002, steps=25, jitter_s=0.002)
-    res = core.simulate(tl, n_chips, cfgw)
+    # ---- Fig. 1/3 context: the raw waveform (serial reference, one call)
+    cfgw = api.WaveformConfig(dt=0.002, steps=25, jitter_s=0.002)
+    res = api.simulate(tl, n_chips, cfgw)
     print(f"\nFig.1  swing {res.swing['swing_w']/1e6:.3f} MW on mean "
           f"{res.swing['mean_w']/1e6:.3f} MW")
     print("Fig.3  bands:", {k: round(v, 3) for k, v in res.bands.items()})
 
-    spec = core.example_specs(job_mw=res.dc_raw.mean() / 1e6)["moderate"]
-    print(f"\nraw vs '{spec.name}' spec:",
-          spec.validate(res.dc_raw, cfgw.dt).violations or "PASS")
-
-    # batched design: all 30 (MPF x battery) candidates in one vmapped call
-    sol = core.design_mitigation(spec, res.dc_raw, cfgw.dt, n_chips)
-    if sol is None:
-        print("no passing configuration in the search grid")
-        return
-    n_cand = sol["grid_ok"].size
-    print(f"designed mitigation ({n_cand} candidates, one vmapped call): "
-          f"MPF={sol['mpf_frac']:.0%} TDP, battery "
-          f"{sol['battery_capacity_j']/1e6:.2f} MJ")
-    print(f"  -> spec PASS, energy overhead {sol['energy_overhead']:.2%}; "
-          f"passing grid cells {int(sol['grid_ok'].sum())}/{n_cand}")
-
-    # fleet-size sweep through the same engine: the spec (and the designed
-    # config) stay sized for the ORIGINAL job, so growing the fleet shows
-    # where the fixed design stops passing
-    gpu, bat = sol["device_mitigation"], sol["rack_mitigation"]
+    spec = api.example_specs(job_mw=res.dc_raw.mean() / 1e6)["moderate"]
     swing = float(res.dc_raw.max() - res.dc_raw.min())
-    fleets = [n_chips // 2, n_chips, n_chips * 2]
-    recs = core.sweep({"job": tl}, fleets, [(gpu, bat)], cfgw, spec=spec)
-    print("\nfleet sweep (batched):")
-    for r in recs:
-        verdict = "PASS" if r["spec_ok"] else ",".join(r["violations"])
-        print(f"  {r['n_chips']:>5} chips  mean {r['mean_mw']:7.2f} MW  "
-              f"swing {r['swing_mitigated_mw']:6.3f} MW  "
-              f"overhead {r['energy_overhead']:+.2%}  {verdict}")
+
+    # ---- declare: baseline + mitigation grid x fleet sizes, one Study.
+    # The fleet axis keeps the spec (and configs) sized for the ORIGINAL
+    # job, so growing the fleet shows where the fixed design stops passing.
+    gpu = api.GpuPowerSmoothing(mpf_frac=0.9, ramp_up_w_per_s=2000,
+                                ramp_down_w_per_s=2000, stop_delay_s=1.0)
+    bat = api.RackBattery(capacity_j=2.0 * swing, max_discharge_w=swing,
+                          max_charge_w=swing, target_tau_s=10.0)
+    study = api.Study(
+        {"job": tl},
+        fleets=[n_chips // 2, n_chips, n_chips * 2],
+        configs={"none": None, "mpf90": (gpu, None), "bat2x": (None, bat),
+                 "mpf90+bat2x": (gpu, bat)},
+        specs=spec, wave_cfg=cfgw, key=0)
+    print(f"\n{study.describe()}")
+
+    # ---- run: the whole grid compiles to the batched engine
+    result = study.run()
+    print(result.filter(n_chips=n_chips).table(
+        ["config", "swing_mitigated_mw", "energy_overhead", "spec_ok"]))
+    print("\nfleet sweep (per-config spec verdicts as the job grows):")
+    for cfg_name, row in result.pivot("config", "n_chips").items():
+        cells = "  ".join(f"{n}: {'PASS' if ok else 'fail'}"
+                          for n, ok in row.items())
+        print(f"  {cfg_name:>12}  {cells}")
+
+    # ---- design: all (MPF x battery) candidates in one vmapped call
+    sol = api.design_mitigation(spec, res.dc_raw, cfgw.dt, n_chips)
+    if sol is not None:
+        n_cand = sol["grid_ok"].size
+        print(f"\ndesigned mitigation ({n_cand} candidates, one vmapped "
+              f"call): MPF={sol['mpf_frac']:.0%} TDP, battery "
+              f"{sol['battery_capacity_j']/1e6:.2f} MJ -> spec PASS, "
+              f"overhead {sol['energy_overhead']:.2%}; passing cells "
+              f"{int(sol['grid_ok'].sum())}/{n_cand}")
+
+    # ---- query: the serve-path compliance answer
+    service = api.PowerComplianceService(wave_cfg=cfgw)
+    answer = service.query(tl, n_chips, spec)
+    print(f"\ncompliance query ({answer['n_configs']} catalog configs): "
+          f"compliant={answer['compliant']}, "
+          f"recommended={answer['recommended']}")
+    for p in answer["passing"][:5]:
+        print(f"  {p['config']:>16}  overhead {p['energy_overhead']:+.2%}  "
+              f"swing {p['swing_mitigated_mw']:.3f} MW")
 
     # backstop watches the mitigated feed
-    bs = core.TelemetryBackstop(critical_hz=(0.5, 1.0, 2.0),
-                                amp_threshold_w=0.5 * swing)
+    bs = api.TelemetryBackstop(critical_hz=(0.5, 1.0, 2.0),
+                               amp_threshold_w=0.5 * swing)
     _, aux = bs.apply(res.dc_mitigated, cfgw.dt)
     print(f"\nbackstop: max level {aux['max_level']} (0 = never triggered)")
 

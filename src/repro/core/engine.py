@@ -7,21 +7,31 @@ StratoSim's ``simulate`` runs one scenario at a time; this module runs a
 *grid* of scenarios in a single compiled call:
 
   ``simulate_batch``  vmaps (timeline levels x n_chips x mitigation config
-                      x jitter seed) through synthesis, aggregation,
-                      mitigation scans, swing/band metrics and utility-spec
-                      validation — no host round-trips inside.
+                      x jitter seed x PRNG key) through synthesis,
+                      aggregation, mitigation scans, swing/band metrics and
+                      utility-spec validation — no host round-trips inside.
   ``sweep``           cartesian product over workloads / fleet sizes /
                       configs / seeds, bucketed by waveform length (each
                       bucket is one compiled call), returning flat records.
   ``apply_batch``     one waveform through a stack of mitigation configs
                       (the Fig. 6 MPF sweep in one call).
+  ``analyze_batch``   frequency reports + spec validation for same-length
+                      waveforms (the finalize stage behind ``core.study``).
   ``design_grid``     the batched grid search behind
                       ``smoothing.design_mitigation``.
+
+This module is the *compile target*; the declarative public surface is
+``repro.core.study`` (``Study``/``StudyResult``), which drives it with
+per-scenario PRNG keys, pad-and-mask fusion of mixed-length workloads
+(``pad_to``), and optional sharding of the scenario axis across devices.
 
 Only the timeline -> sample-count expansion (``phase_levels``) and the
 jitter-shift draw stay in numpy: they fix array shapes.  Everything with a
 static shape is traced, so mitigation parameter grids ride through ``vmap``
-as stacked pytree leaves (see ``stack_mitigations``).
+as stacked pytree leaves (see ``stack_mitigations``).  Mixed
+enabled/disabled rows batch too: ``_normalize_mits`` carries disabled rows
+as structural placeholders plus an on/off mask, and the pipeline selects
+the unmitigated waveform for masked-off rows after the vmapped apply.
 """
 from __future__ import annotations
 
@@ -35,8 +45,8 @@ import numpy as np
 
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.phases import IterationTimeline
-from repro.core.smoothing.base import (Mitigation, energy_overhead_jax,
-                                       materialize_aux)
+from repro.core.smoothing.base import (Mitigation, apply_mitigation,
+                                       energy_overhead_jax, materialize_aux)
 from repro.core.smoothing.battery import RackBattery
 from repro.core.smoothing.gpu_floor import GpuPowerSmoothing
 from repro.core.spec import SpecReport, UtilitySpec, report_from_arrays
@@ -77,47 +87,141 @@ def _tile(values, B: int, what: str) -> list:
 
 
 def _normalize_mits(mits, B: int, what: str):
-    """None | Mitigation | sequence -> (batched pytree | None)."""
+    """None | Mitigation | sequence (None rows allowed) ->
+    ``(batched pytree | None, on-mask [B] | None)``.
+
+    Disabled (None) rows batch alongside enabled ones: they ride through
+    the vmapped apply as a structural placeholder (a copy of the first
+    enabled config — its parameters never reach the output) and the
+    returned on-mask selects the *unmitigated* waveform for them
+    afterwards.  The mask is None when every row is enabled.  This is the
+    generalization of the design-grid gpu_on/bat_on masking: one batch can
+    mix baselines and mitigated configs (the Table-I matrix in one call).
+    """
     if mits is None:
-        return None
+        return None, None
     if not isinstance(mits, (list, tuple)):
         mits = [mits]
     mits = _tile(mits, B, what)
-    if all(m is None for m in mits):
+    enabled = [m for m in mits if m is not None]
+    if not enabled:
+        return None, None
+    if len(enabled) == len(mits):
+        return stack_mitigations(mits), None
+    placeholder = enabled[0]
+    on = jnp.asarray([0.0 if m is None else 1.0 for m in mits], jnp.float32)
+    return stack_mitigations([placeholder if m is None else m for m in mits]), on
+
+
+def _normalize_keys(keys, B: int):
+    """None | key | sequence of keys | stacked [B, ...] array -> [B] keys."""
+    if keys is None:
         return None
-    if any(m is None for m in mits):
-        raise ValueError(f"{what}: mixed None/mitigation rows are not "
-                         "batchable — use a disabled config instead")
-    return stack_mitigations(mits)
+    if isinstance(keys, (list, tuple)):
+        rows = list(keys)
+    else:
+        arr = jnp.asarray(keys)
+        rows = [keys] if arr.ndim <= 1 else list(arr)
+    rows = _tile(rows, B, "keys")
+    return jnp.stack([jnp.asarray(k) for k in rows])
 
 
 # ---------------------------------------------------------------------------
 # the compiled pipeline
 # ---------------------------------------------------------------------------
 
-def _simulate_one(levels, shifts, n_chips, dev, rack,
-                  cfg: WaveformConfig, hw: Hardware,
-                  spec: Optional[UtilitySpec]) -> Dict:
-    chip = chip_waveform_jax(levels, cfg.dt, hw, edp_spikes=cfg.edp_spikes,
-                             include_host=cfg.include_host)
-    dc_raw = aggregate_jax(chip, n_chips, shifts, hw)
-    out: Dict = {"chip_raw": chip, "dc_raw": dc_raw}
+def _mask_helpers(n: int, n_valid):
+    """(fill_edge, fill_mean, msum, mask) for pad-and-mask mode; identity
+    functions when ``n_valid`` is None (unpadded)."""
+    if n_valid is None:
+        ident = lambda w: w
+        return ident, ident, jnp.sum, None
+    mask = jnp.arange(n) < n_valid
+    last = jnp.asarray(n_valid, jnp.int32) - 1
+
+    def fill_edge(w):
+        return jnp.where(mask, w, w[last])
+
+    def msum(w):
+        return jnp.sum(jnp.where(mask, w, 0.0))
+
+    def fill_mean(w):
+        return jnp.where(mask, w, msum(w) / n_valid)
+
+    return fill_edge, fill_mean, msum, mask
+
+
+def _synth_one(levels, shifts, n_chips, n_valid, cfg: WaveformConfig,
+               hw: Hardware) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mitigation-independent prefix: levels -> (chip, dc_raw).  Depends
+    only on (workload, fleet, seed) — the Study layer dedupes it across
+    the config axis (``simulate_grid``)."""
+    fill_edge, _, _, _ = _mask_helpers(levels.shape[-1], n_valid)
+    chip = fill_edge(chip_waveform_jax(levels, cfg.dt, hw,
+                                       edp_spikes=cfg.edp_spikes,
+                                       include_host=cfg.include_host))
+    return chip, aggregate_jax(chip, n_chips, shifts, hw)
+
+
+def _mitigate_one(chip, dc_raw, shifts, n_chips, dev, rack, dev_on, rack_on,
+                  key, n_valid, cfg: WaveformConfig, hw: Hardware,
+                  spec: Optional[UtilitySpec], spectra: bool,
+                  chip_outputs: bool = True) -> Dict:
+    """Per-config suffix of one scenario inside vmap.
+
+    ``n_valid`` (traced scalar or None) activates pad-and-mask mode: the
+    row's true waveform occupies the first ``n_valid`` samples of a padded
+    array.  Masking keeps the valid region *exact* against an unpadded run:
+    levels arrive edge-padded, mitigated chip waveforms are re-filled with
+    their boundary sample (so the jittered aggregation gather sees the same
+    clip-to-edge semantics as an unpadded call), mean-sensitive rack
+    stages see the pad region filled with the valid-region mean, and every
+    scalar metric is a masked reduction.  Frequency metrics need the true
+    FFT length, so padded calls defer them to ``analyze_batch``.
+    """
+    n = chip.shape[-1]
+    fill_edge, fill_mean, msum, mask = _mask_helpers(n, n_valid)
+
+    k_dev = k_rack = None
+    if key is not None:
+        k_dev = jax.random.fold_in(key, 0)
+        k_rack = jax.random.fold_in(key, 1)
+
+    out: Dict = {"dc_raw": dc_raw}
+    if chip_outputs:
+        out["chip_raw"] = chip
     aux: Dict = {}
     dc = dc_raw
     if dev is not None:
-        chip_m, aux_d = dev.apply_jax(chip, cfg.dt)
+        chip_m, aux_d = apply_mitigation(dev, chip, cfg.dt, k_dev)
+        chip_m = fill_edge(chip_m)
+        if dev_on is not None:
+            chip_m = jnp.where(dev_on > 0, chip_m, chip)
         aux["device"] = aux_d
-        out["chip_mitigated"] = chip_m
+        if chip_outputs:
+            out["chip_mitigated"] = chip_m
         dc = aggregate_jax(chip_m, n_chips, shifts, hw)
     if rack is not None:
-        dc, aux_r = rack.apply_jax(dc, cfg.dt)
+        rack_in = fill_mean(dc)
+        dc_r, aux_r = apply_mitigation(rack, rack_in, cfg.dt, k_rack)
+        if rack_on is not None:
+            dc_r = jnp.where(rack_on > 0, dc_r, rack_in)
         aux["rack"] = aux_r
+        dc = dc_r
     out["dc_mitigated"] = dc
-    out["energy_overhead"] = energy_overhead_jax(dc_raw, dc)
-    out["swing"] = swing_stats_jax(dc_raw)
-    out["swing_mitigated"] = swing_stats_jax(dc)
-    out["bands"] = critical_band_report_jax(dc_raw, cfg.dt)
-    out["bands_mitigated"] = critical_band_report_jax(dc, cfg.dt)
+
+    if mask is not None:
+        e_in = msum(dc_raw)
+        out["energy_overhead"] = (msum(dc) - e_in) / jnp.maximum(e_in, 1e-12)
+        out["swing"] = _swing_stats_masked(dc_raw, mask, n_valid)
+        out["swing_mitigated"] = _swing_stats_masked(dc, mask, n_valid)
+    else:
+        out["energy_overhead"] = energy_overhead_jax(dc_raw, dc)
+        out["swing"] = swing_stats_jax(dc_raw)
+        out["swing_mitigated"] = swing_stats_jax(dc)
+    if spectra:
+        out["bands"] = critical_band_report_jax(dc_raw, cfg.dt)
+        out["bands_mitigated"] = critical_band_report_jax(dc, cfg.dt)
     if spec is not None:
         ok, flags, metrics = spec.validate_jax(dc, cfg.dt)
         out["spec_ok"] = ok
@@ -127,13 +231,82 @@ def _simulate_one(levels, shifts, n_chips, dev, rack,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "hw", "spec"))
-def _simulate_vmapped(levels, shifts, n_chips, dev, rack, *,
-                      cfg: WaveformConfig, hw: Hardware,
-                      spec: Optional[UtilitySpec]):
+def _swing_stats_masked(w, mask, n_valid) -> Dict[str, jnp.ndarray]:
+    """``swing_stats_jax`` over the valid prefix of a padded waveform."""
+    peak = jnp.max(jnp.where(mask, w, -jnp.inf))
+    trough = jnp.min(jnp.where(mask, w, jnp.inf))
+    return {
+        "peak_w": peak,
+        "trough_w": trough,
+        "swing_w": peak - trough,
+        "mean_w": jnp.sum(jnp.where(mask, w, 0.0)) / n_valid,
+        "swing_frac": (peak - trough) / jnp.maximum(peak, 1e-9),
+    }
+
+
+def _simulate_one(levels, shifts, n_chips, dev, rack, dev_on, rack_on, key,
+                  n_valid, cfg, hw, spec, spectra) -> Dict:
+    chip, dc_raw = _synth_one(levels, shifts, n_chips, n_valid, cfg, hw)
+    return _mitigate_one(chip, dc_raw, shifts, n_chips, dev, rack, dev_on,
+                         rack_on, key, n_valid, cfg, hw, spec, spectra)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "hw", "spec", "spectra"))
+def _simulate_vmapped(levels, shifts, n_chips, dev, rack, dev_on, rack_on,
+                      keys, n_valid, *, cfg: WaveformConfig, hw: Hardware,
+                      spec: Optional[UtilitySpec], spectra: bool):
     return jax.vmap(
-        lambda L, S, N, D, R: _simulate_one(L, S, N, D, R, cfg, hw, spec)
-    )(levels, shifts, n_chips, dev, rack)
+        lambda L, S, N, D, R, Do, Ro, K, V: _simulate_one(
+            L, S, N, D, R, Do, Ro, K, V, cfg, hw, spec, spectra)
+    )(levels, shifts, n_chips, dev, rack, dev_on, rack_on, keys, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "hw"))
+def _synth_vmapped(levels, shifts, n_chips, n_valid, *, cfg: WaveformConfig,
+                   hw: Hardware):
+    return jax.vmap(
+        lambda L, S, N, V: _synth_one(L, S, N, V, cfg, hw)
+    )(levels, shifts, n_chips, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "hw", "spec", "spectra",
+                                             "chip_outputs"))
+def _mitigate_vmapped(chip_u, dcraw_u, u_idx, shifts, n_chips, dev, rack,
+                      dev_on, rack_on, keys, n_valid, *,
+                      cfg: WaveformConfig, hw: Hardware,
+                      spec: Optional[UtilitySpec], spectra: bool,
+                      chip_outputs: bool):
+    """Per-scenario suffix over rows that *share* synthesized prefixes:
+    ``chip_u``/``dcraw_u`` hold one entry per unique (workload, fleet,
+    seed) and ``u_idx`` maps each scenario row to its prefix."""
+    return jax.vmap(
+        lambda U, S, N, D, R, Do, Ro, K, V: _mitigate_one(
+            chip_u[U], dcraw_u[U], S, N, D, R, Do, Ro, K, V, cfg, hw,
+            spec, spectra, chip_outputs)
+    )(u_idx, shifts, n_chips, dev, rack, dev_on, rack_on, keys, n_valid)
+
+
+# ---------------------------------------------------------------------------
+# scenario-axis sharding
+# ---------------------------------------------------------------------------
+
+def _shard_scenario_axis(args, B: int):
+    """Pad the scenario axis to a device multiple (repeating the last row)
+    and commit every batched leaf to a 1-D 'scenario' mesh, so the jitted
+    pipeline partitions across devices.  No-op on single-device hosts.
+    Returns (args, padded_B); callers slice results back to [:B]."""
+    ndev = jax.device_count()
+    if ndev <= 1:
+        return args, B
+    pad = (-B) % ndev
+    if pad:
+        args = jax.tree.map(
+            lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], 0),
+            args)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("scenario",))
+    sh = jax.sharding.NamedSharding(mesh,
+                                    jax.sharding.PartitionSpec("scenario"))
+    return jax.tree.map(lambda a: jax.device_put(a, sh), args), B + pad
 
 
 # ---------------------------------------------------------------------------
@@ -142,24 +315,37 @@ def _simulate_vmapped(levels, shifts, n_chips, dev, rack, *,
 
 @dataclasses.dataclass
 class BatchResult:
-    """One row per scenario; waveforms are [B, n], metrics are [B]."""
+    """One row per scenario; waveforms are [B, n], metrics are [B].
+
+    In pad-and-mask mode (``pad_to``), row ``i``'s true waveform is the
+    first ``n_valid[i]`` samples (the remainder is padding); scalar metrics
+    are already masked, and frequency/spec analysis is deferred to
+    ``analyze_batch`` on the sliced rows.
+    """
     t: np.ndarray
     dc_raw: np.ndarray
     dc_mitigated: np.ndarray
-    chip_raw: np.ndarray
+    chip_raw: Optional[np.ndarray]
     chip_mitigated: Optional[np.ndarray]
     energy_overhead: np.ndarray
     swing: Dict[str, np.ndarray]
     swing_mitigated: Dict[str, np.ndarray]
-    bands: Dict[str, np.ndarray]
-    bands_mitigated: Dict[str, np.ndarray]
+    bands: Optional[Dict[str, np.ndarray]]
+    bands_mitigated: Optional[Dict[str, np.ndarray]]
     spec_ok: Optional[np.ndarray]
     spec_flags: Optional[Dict[str, np.ndarray]]
     spec_metrics: Optional[Dict[str, np.ndarray]]
     aux: Dict
+    n_valid: Optional[np.ndarray] = None
+    dev_on: Optional[np.ndarray] = None
+    rack_on: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return self.dc_raw.shape[0]
+
+    def length(self, i: int) -> int:
+        return (self.dc_raw.shape[1] if self.n_valid is None
+                else int(self.n_valid[i]))
 
     def report(self, i: int) -> Optional[SpecReport]:
         if self.spec_ok is None:
@@ -169,19 +355,32 @@ class BatchResult:
 
     def scenario(self, i: int) -> SimResult:
         """Rebuild the per-scenario ``SimResult`` (API compat with
-        ``stratosim.simulate``) for row ``i``."""
+        ``stratosim.simulate``) for row ``i``; padded rows are sliced back
+        to their true length."""
+        n = self.length(i)
         row = lambda d: {k: float(v[i]) for k, v in d.items()}
+        chip_m = self.chip_mitigated
+        aux_row = jax.tree.map(lambda a: a[i], self.aux)
+        # masked-off rows ran a structural placeholder config whose output
+        # was discarded — drop its aux too, matching the serial reference
+        if self.dev_on is not None and not self.dev_on[i]:
+            chip_m = None
+            aux_row.pop("device", None)
+        if self.rack_on is not None and not self.rack_on[i]:
+            aux_row.pop("rack", None)
         return SimResult(
-            t=self.t,
-            dc_raw=self.dc_raw[i], dc_mitigated=self.dc_mitigated[i],
-            chip_raw=self.chip_raw[i],
-            chip_mitigated=(None if self.chip_mitigated is None
-                            else self.chip_mitigated[i]),
+            t=self.t[:n],
+            dc_raw=self.dc_raw[i, :n], dc_mitigated=self.dc_mitigated[i, :n],
+            chip_raw=(None if self.chip_raw is None
+                      else self.chip_raw[i, :n]),
+            chip_mitigated=(None if chip_m is None else chip_m[i, :n]),
             energy_overhead=float(self.energy_overhead[i]),
             swing=row(self.swing), swing_mitigated=row(self.swing_mitigated),
-            bands=row(self.bands), bands_mitigated=row(self.bands_mitigated),
+            bands=(row(self.bands) if self.bands is not None else {}),
+            bands_mitigated=(row(self.bands_mitigated)
+                             if self.bands_mitigated is not None else {}),
             spec_report=self.report(i),
-            aux=materialize_aux(jax.tree.map(lambda a: a[i], self.aux)))
+            aux=materialize_aux(aux_row))
 
 
 def simulate_batch(
@@ -191,16 +390,37 @@ def simulate_batch(
         *, device_mitigation=None, rack_mitigation=None,
         spec: Optional[UtilitySpec] = None, hw: Hardware = DEFAULT_HW,
         seeds: Union[int, Sequence[int]] = 0,
+        keys=None,
         sample_chips: int = 64,
-        levels: Optional[Sequence[np.ndarray]] = None) -> BatchResult:
+        levels: Optional[Sequence[np.ndarray]] = None,
+        pad_to: Optional[int] = None,
+        spectra: bool = True,
+        shard_devices: bool = False,
+        dedup: bool = False,
+        chip_outputs: bool = True,
+        host_arrays: bool = True) -> BatchResult:
     """Simulate a batch of scenarios in one compiled call.
 
     Each batched argument (timelines, n_chips, device/rack mitigation
-    configs, seeds) is a singleton (broadcast) or a length-B sequence; all
-    timelines in one call must expand to the same sample count (``sweep``
-    buckets mixed-length workloads automatically).  ``levels`` optionally
-    supplies the per-row ``phase_levels`` arrays precomputed (callers like
-    ``sweep`` that already expanded the timelines skip re-expansion).
+    configs, seeds, keys) is a singleton (broadcast) or a length-B
+    sequence.  Mitigation rows may mix None (disabled) and enabled configs
+    — disabled rows produce the unmitigated waveform.  ``keys`` threads a
+    per-scenario PRNG key into mitigations that consume randomness
+    (telemetry noise), so noisy rows get independent draws.
+
+    Without ``pad_to``, all timelines must expand to the same sample count
+    (``sweep`` buckets mixed-length workloads).  With ``pad_to=N``, rows
+    are edge-padded to N and masked — mixed lengths fuse into ONE compiled
+    call; frequency/spec analysis then runs per true length via
+    ``analyze_batch`` (``spec`` must be None and ``spectra`` False).
+
+    ``levels`` optionally supplies per-row ``phase_levels`` arrays
+    precomputed; ``shard_devices`` spreads the scenario axis across all
+    local devices.  ``dedup`` splits the pipeline in two: the mitigation-
+    independent prefix (chip synthesis + raw aggregation) runs once per
+    unique (workload, fleet, seed) and the per-config suffix gathers it —
+    the declarative Study layer enables this because it knows which axes a
+    row's physics actually depends on.
     """
     cfg = wave_cfg or WaveformConfig()
     tls = timelines if isinstance(timelines, (list, tuple)) else [timelines]
@@ -225,32 +445,89 @@ def simulate_batch(
         level_rows = [
             level_cache.setdefault(id(tl), phase_levels(tl, cfg, hw))
             for tl in tls]
+
+    src_ids = [id(r) for r in level_rows]   # pre-padding row identity
+    n_valid_arr = None
+    if pad_to is not None:
+        if spec is not None or spectra:
+            raise ValueError(
+                "pad_to defers frequency/spec analysis to analyze_batch on "
+                "the sliced rows: call with spec=None, spectra=False")
+        lens = [len(r) for r in level_rows]
+        if max(lens) > pad_to:
+            raise ValueError(f"pad_to={pad_to} < longest workload {max(lens)}")
+        n_valid_arr = jnp.asarray(lens, jnp.float32)
+        level_rows = [np.pad(r, (0, pad_to - len(r)), mode="edge")
+                      for r in level_rows]
+    else:
+        n0 = len(level_rows[0])
+        if any(len(r) != n0 for r in level_rows):
+            raise ValueError(
+                "all timelines in one simulate_batch call must expand to the "
+                f"same sample count (got {sorted({len(r) for r in level_rows})}); "
+                "use sweep()/Study to bucket, or pad_to to fuse")
     n = len(level_rows[0])
-    if any(len(r) != n for r in level_rows):
-        raise ValueError(
-            "all timelines in one simulate_batch call must expand to the "
-            f"same sample count (got {sorted({len(r) for r in level_rows})}); "
-            "use sweep() to bucket mixed-length workloads")
-    levels = jnp.asarray(np.stack(level_rows), jnp.float32)
     shifts = jnp.asarray(np.stack(
         [jitter_shifts(cfg, s, sample_chips) for s in seed_list]))
     chips_f = jnp.asarray(np.asarray(chips, np.float32))
-    dev = _normalize_mits(dev_list, B, "device_mitigation")
-    rack = _normalize_mits(rack_list, B, "rack_mitigation")
+    dev, dev_on = _normalize_mits(dev_list, B, "device_mitigation")
+    rack, rack_on = _normalize_mits(rack_list, B, "rack_mitigation")
+    keys_arr = _normalize_keys(keys, B)
 
-    res = _simulate_vmapped(levels, shifts, chips_f, dev, rack,
-                            cfg=cfg, hw=hw, spec=spec)
-    res = jax.tree.map(np.asarray, res)
+    out_B = B
+    if dedup:
+        # synthesis once per unique (workload, fleet, seed); the per-config
+        # suffix gathers its prefix by index
+        uniq: Dict[Tuple, int] = {}
+        u_rows: List[int] = []
+        u_idx: List[int] = []
+        for i, k in enumerate(zip(src_ids, chips, seed_list)):
+            if k not in uniq:
+                uniq[k] = len(u_rows)
+                u_rows.append(i)
+            u_idx.append(uniq[k])
+        sel = np.asarray(u_rows)
+        chip_u, dcraw_u = _synth_vmapped(
+            jnp.asarray(np.stack([level_rows[i] for i in u_rows]),
+                        jnp.float32),
+            shifts[sel], chips_f[sel],
+            None if n_valid_arr is None else n_valid_arr[sel],
+            cfg=cfg, hw=hw)
+        row_args = (jnp.asarray(u_idx, jnp.int32), shifts, chips_f, dev,
+                    rack, dev_on, rack_on, keys_arr, n_valid_arr)
+        if shard_devices:
+            row_args, out_B = _shard_scenario_axis(row_args, B)
+        res = _mitigate_vmapped(chip_u, dcraw_u, *row_args,
+                                cfg=cfg, hw=hw, spec=spec, spectra=spectra,
+                                chip_outputs=chip_outputs)
+    else:
+        args = (jnp.asarray(np.stack(level_rows), jnp.float32), shifts,
+                chips_f, dev, rack, dev_on, rack_on, keys_arr, n_valid_arr)
+        if shard_devices:
+            args, out_B = _shard_scenario_axis(args, B)
+        res = _simulate_vmapped(*args, cfg=cfg, hw=hw, spec=spec,
+                                spectra=spectra)
+    if host_arrays:
+        res = jax.tree.map(
+            np.asarray if out_B == B else lambda a: np.asarray(a)[:B], res)
+    elif out_B != B:
+        # keep waveforms on device (callers like Study slice them straight
+        # into the analysis jit without a host round-trip)
+        res = jax.tree.map(lambda a: a[:B], res)
     return BatchResult(
         t=np.arange(n) * cfg.dt,
         dc_raw=res["dc_raw"], dc_mitigated=res["dc_mitigated"],
-        chip_raw=res["chip_raw"],
+        chip_raw=res.get("chip_raw"),
         chip_mitigated=res.get("chip_mitigated"),
         energy_overhead=res["energy_overhead"],
         swing=res["swing"], swing_mitigated=res["swing_mitigated"],
-        bands=res["bands"], bands_mitigated=res["bands_mitigated"],
+        bands=res.get("bands"), bands_mitigated=res.get("bands_mitigated"),
         spec_ok=res.get("spec_ok"), spec_flags=res.get("spec_flags"),
-        spec_metrics=res.get("spec_metrics"), aux=res["aux"])
+        spec_metrics=res.get("spec_metrics"), aux=res["aux"],
+        n_valid=(None if n_valid_arr is None
+                 else np.asarray(n_valid_arr, np.int64)),
+        dev_on=(None if dev_on is None else np.asarray(dev_on) > 0),
+        rack_on=(None if rack_on is None else np.asarray(rack_on) > 0))
 
 
 # ---------------------------------------------------------------------------
@@ -267,9 +544,10 @@ def sweep(workloads,
 
     ``workloads`` is a dict name -> IterationTimeline (or a sequence, named
     by index); each config is a ``(device_mitigation, rack_mitigation)``
-    pair (either side may be None, consistently across configs).  Workloads
-    are bucketed by sample count; each bucket runs as ONE compiled vmapped
-    call.  Returns one flat record dict per scenario.
+    pair (either side may be None — including per-row, so baselines batch
+    with mitigated configs).  Workloads are bucketed by sample count; each
+    bucket runs as ONE compiled vmapped call.  Returns one flat record dict
+    per scenario.  (The declarative front-end over this is ``core.study``.)
     """
     cfg = wave_cfg or WaveformConfig()
     if isinstance(workloads, dict):
@@ -338,7 +616,7 @@ def apply_batch(mitigations: Sequence, w: np.ndarray, dt: float
 
 
 # ---------------------------------------------------------------------------
-# batched spec validation
+# batched spec validation + frequency reports
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("spec", "dt"))
@@ -361,19 +639,60 @@ def validate_many(ws: np.ndarray, spec: UtilitySpec, dt: float
     return ok, reports
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "dt", "bands"))
+def _analyze_vmapped(raw, mit, *, spec: Optional[UtilitySpec], dt: float,
+                     bands: bool):
+    def one(r, m):
+        out: Dict = {}
+        if bands:
+            if r is not None:
+                out["bands"] = critical_band_report_jax(r, dt)
+            out["bands_mitigated"] = critical_band_report_jax(m, dt)
+        if spec is not None:
+            ok, flags, metrics = spec.validate_jax(m, dt)
+            out["spec_ok"], out["spec_flags"] = ok, flags
+            out["spec_metrics"] = metrics
+        return out
+
+    return jax.vmap(one)(raw, mit)
+
+
+def analyze_batch(dc_raw: Optional[np.ndarray], dc_mitigated: np.ndarray,
+                  dt: float, spec: Optional[UtilitySpec] = None, *,
+                  bands: bool = True) -> Dict:
+    """Frequency reports (on raw + mitigated) and spec validation (on
+    mitigated) for B same-length waveform pairs in one vmapped call — the
+    finalize stage a padded pipeline run defers, grouped by true length.
+    ``dc_raw=None`` skips the raw-waveform band report (callers that only
+    consume mitigated bands, like the Study record table, save one FFT
+    per row)."""
+    res = _analyze_vmapped(
+        None if dc_raw is None else jnp.asarray(dc_raw, jnp.float32),
+        jnp.asarray(dc_mitigated, jnp.float32),
+        spec=spec, dt=dt, bands=bands)
+    return jax.tree.map(np.asarray, res)
+
+
 # ---------------------------------------------------------------------------
 # batched (MPF x battery) design search
 # ---------------------------------------------------------------------------
+
+def _select_on(on, yes, no):
+    """Row-masked select; ``on`` None means the stage is always enabled."""
+    return yes if on is None else jnp.where(on > 0, yes, no)
+
 
 @functools.partial(jax.jit, static_argnames=("spec", "dt"))
 def _design_eval(gpu_b, bat_b, gpu_on, bat_on, w, n_chips, *,
                  spec: UtilitySpec, dt: float):
     def one(gpu, bat, g_on, b_on):
-        per_chip = w / n_chips
-        smoothed, _ = gpu.apply_jax(per_chip, dt)
-        agg = jnp.where(g_on > 0, smoothed, per_chip) * n_chips
-        out_b, _ = bat.apply_jax(agg, dt)
-        out = jnp.where(b_on > 0, out_b, agg)
+        out = w
+        if gpu is not None:
+            smoothed, _ = gpu.apply_jax(w / n_chips, dt)
+            out = _select_on(g_on, smoothed * n_chips, out)
+        if bat is not None:
+            out_b, _ = bat.apply_jax(out, dt)
+            out = _select_on(b_on, out_b, out)
         ok, flags, metrics = spec.validate_jax(out, dt)
         return out, ok, energy_overhead_jax(w, out), flags, metrics
 
@@ -385,22 +704,24 @@ def design_grid(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int,
                 *, swing: float, hw: Hardware = DEFAULT_HW) -> Optional[Dict]:
     """Evaluate every (MPF, capacity) candidate in one vmapped call and
     return the first passing one in grid order (MPF-major ascending — the
-    serial search's minimal-waste-then-minimal-capacity preference)."""
+    serial search's minimal-waste-then-minimal-capacity preference).
+
+    Disabled stages (MPF or capacity 0) ride through ``_normalize_mits``
+    masking, the same path that lets ``simulate_batch`` mix baseline and
+    mitigated rows in one batch.
+    """
     candidates = [(m, c) for m in mpf_grid for c in cap_grid]
-    gpus = stack_mitigations([
-        GpuPowerSmoothing(
+    B = len(candidates)
+    gpus, gpu_on = _normalize_mits(
+        [(GpuPowerSmoothing(
             mpf_frac=m, hw=hw,
             ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
             ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
-        for m, _ in candidates])
-    # a disabled battery still runs through the scan (then gets deselected),
-    # so give it a non-zero capacity to keep the SoC math finite
-    bats = stack_mitigations([
-        RackBattery(capacity_j=(c if c > 0 else 1.0),
-                    max_discharge_w=swing, max_charge_w=swing)
-        for _, c in candidates])
-    gpu_on = jnp.asarray([1.0 if m > 0 else 0.0 for m, _ in candidates])
-    bat_on = jnp.asarray([1.0 if c > 0 else 0.0 for _, c in candidates])
+          if m > 0 else None) for m, _ in candidates], B, "design gpu grid")
+    bats, bat_on = _normalize_mits(
+        [(RackBattery(capacity_j=c, max_discharge_w=swing,
+                      max_charge_w=swing) if c > 0 else None)
+         for _, c in candidates], B, "design battery grid")
 
     outs, ok, overhead, flags, metrics = _design_eval(
         gpus, bats, gpu_on, bat_on, jnp.asarray(w, jnp.float32),

@@ -18,7 +18,8 @@ Mitigations compose with ``Stack`` in load->utility order.
 """
 from __future__ import annotations
 
-from typing import Dict, Protocol, Sequence, Tuple
+import inspect
+from typing import Dict, Optional, Protocol, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,26 @@ class Mitigation(Protocol):
 
     def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
         ...
+
+
+def accepts_key(mit) -> bool:
+    """True when a mitigation's ``apply_jax`` takes a PRNG ``key`` (it
+    consumes randomness — today: telemetry noise).  The check is on the
+    class, so it is static under jit/vmap."""
+    try:
+        return "key" in inspect.signature(type(mit).apply_jax).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def apply_mitigation(mit, w: jnp.ndarray, dt: float,
+                     key: Optional[jax.Array] = None
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """``mit.apply_jax`` with the key threaded iff the mitigation takes one.
+    Mitigations without randomness keep the two-argument contract."""
+    if key is not None and accepts_key(mit):
+        return mit.apply_jax(w, dt, key=key)
+    return mit.apply_jax(w, dt)
 
 
 def register_mitigation(cls, data_fields: Sequence[str],
@@ -60,9 +81,10 @@ def materialize_aux(aux: Dict) -> Dict:
     return out
 
 
-def np_apply(mit, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
+def np_apply(mit, w: np.ndarray, dt: float,
+             key: Optional[jax.Array] = None) -> Tuple[np.ndarray, Dict]:
     """Shared numpy-facing wrapper around a mitigation's ``apply_jax``."""
-    out, aux = mit.apply_jax(jnp.asarray(w, jnp.float32), dt)
+    out, aux = apply_mitigation(mit, jnp.asarray(w, jnp.float32), dt, key)
     return np.asarray(out), materialize_aux(aux)
 
 
@@ -70,15 +92,16 @@ class Stack:
     def __init__(self, stages: Sequence[Mitigation]):
         self.stages = list(stages)
 
-    def apply_jax(self, w: jnp.ndarray, dt: float):
+    def apply_jax(self, w: jnp.ndarray, dt: float, key=None):
         aux_all: Dict = {}
         for i, s in enumerate(self.stages):
-            w, aux = s.apply_jax(w, dt)
+            k = None if key is None else jax.random.fold_in(key, i)
+            w, aux = apply_mitigation(s, w, dt, k)
             aux_all[f"{i}:{type(s).__name__}"] = aux
         return w, aux_all
 
-    def apply(self, w: np.ndarray, dt: float):
-        return np_apply(self, w, dt)
+    def apply(self, w: np.ndarray, dt: float, key=None):
+        return np_apply(self, w, dt, key)
 
 
 def _stack_flatten(s: Stack):

@@ -69,7 +69,7 @@ class RackBattery:
         init = (jnp.asarray(self.initial_soc * cap_j, jnp.float32),
                 jnp.mean(w), jnp.asarray(0.0, jnp.float32),
                 jnp.asarray(0.0, jnp.float32))
-        _, (grid, soc) = jax.lax.scan(step, init, w)
+        _, (grid, soc) = jax.lax.scan(step, init, w, unroll=8)
         aux = {
             "soc_trace": soc,
             "soc_min_frac": soc.min() / cap_j,

@@ -87,8 +87,9 @@ class Firefly:
         }
         return out, aux
 
-    def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
-        return np_apply(self, w, dt)
+    def apply(self, w: np.ndarray, dt: float,
+              key=None) -> Tuple[np.ndarray, Dict]:
+        return np_apply(self, w, dt, key)
 
 
 register_mitigation(

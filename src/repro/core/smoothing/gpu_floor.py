@@ -67,7 +67,8 @@ class GpuPowerSmoothing:
             return (o, idle_n), o
 
         w = jnp.asarray(w, jnp.float32)
-        (_, _), out = jax.lax.scan(step, (w[0], jnp.asarray(0.0, jnp.float32)), w)
+        (_, _), out = jax.lax.scan(step, (w[0], jnp.asarray(0.0, jnp.float32)), w,
+                                 unroll=8)
         aux = {
             "energy_overhead": energy_overhead_jax(w, out),
             "floor_w": jnp.asarray(mpf, jnp.float32),

@@ -123,10 +123,15 @@ class UtilitySpec:
         # ---- dynamic range in sliding window (same strided starts as the
         # numpy path, but as one [windows, n] gather instead of a loop)
         n = max(int(self.time.window_s / dt), 2)
-        starts = np.arange(0, w.shape[-1] - n, max(n // 8, 1))
-        if w.shape[-1] >= n and len(starts):
-            seg = w[starts[:, None] + np.arange(n)[None, :]]
-            rng = (seg.max(axis=1) - seg.min(axis=1)).max()
+        if w.shape[-1] >= n:
+            starts = np.arange(0, w.shape[-1] - n, max(n // 8, 1))
+            if len(starts):
+                seg = w[starts[:, None] + np.arange(n)[None, :]]
+                rng = (seg.max(axis=1) - seg.min(axis=1)).max()
+            else:
+                # exactly one window: the strided loop body never runs and
+                # the numpy path reports 0.0 — mirror that, don't drop the key
+                rng = jnp.asarray(0.0, jnp.float32)
             m["dynamic_range_w"] = rng
             flags["dynamic_range"] = rng > self.time.dynamic_range_w
         else:

@@ -19,11 +19,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.phases import IterationTimeline, from_dryrun_cell, synthetic_timeline
-from repro.core.smoothing.base import Mitigation, energy_overhead
+from repro.core.smoothing.base import Mitigation, energy_overhead, np_apply
 from repro.core.spec import SpecReport, UtilitySpec
 from repro.core.spectrum import critical_band_report
 from repro.core.waveform import WaveformConfig, aggregate, chip_waveform, swing_stats
@@ -50,7 +51,13 @@ def simulate(timeline: IterationTimeline, n_chips: int,
              *, device_mitigation: Optional[Mitigation] = None,
              rack_mitigation: Optional[Mitigation] = None,
              spec: Optional[UtilitySpec] = None,
-             hw: Hardware = DEFAULT_HW, seed: int = 0) -> SimResult:
+             hw: Hardware = DEFAULT_HW, seed: int = 0,
+             key: Optional[jax.Array] = None) -> SimResult:
+    """One scenario, serially.  ``key``, when given, seeds any randomness a
+    mitigation consumes (telemetry noise): the device stage draws from
+    fold_in(key, 0), the rack stage from fold_in(key, 1) — the same split
+    the batched engine uses, so a keyed serial run is the parity reference
+    for a keyed batched row."""
     cfg = wave_cfg or WaveformConfig()
     aux: Dict = {}
 
@@ -59,14 +66,16 @@ def simulate(timeline: IterationTimeline, n_chips: int,
 
     chip_m = None
     if device_mitigation is not None:
-        chip_m, aux_d = device_mitigation.apply(chip, cfg.dt)
+        k = None if key is None else jax.random.fold_in(key, 0)
+        chip_m, aux_d = np_apply(device_mitigation, chip, cfg.dt, k)
         aux["device"] = aux_d
         dc = aggregate(chip_m, n_chips, cfg, hw, seed=seed)
     else:
         dc = dc_raw
 
     if rack_mitigation is not None:
-        dc, aux_r = rack_mitigation.apply(dc, cfg.dt)
+        k = None if key is None else jax.random.fold_in(key, 1)
+        dc, aux_r = np_apply(rack_mitigation, dc, cfg.dt, k)
         aux["rack"] = aux_r
 
     report = spec.validate(dc, cfg.dt) if spec is not None else None
@@ -86,7 +95,8 @@ def simulate_jit(timeline: IterationTimeline, n_chips: int,
                  *, device_mitigation: Optional[Mitigation] = None,
                  rack_mitigation: Optional[Mitigation] = None,
                  spec: Optional[UtilitySpec] = None,
-                 hw: Hardware = DEFAULT_HW, seed: int = 0) -> SimResult:
+                 hw: Hardware = DEFAULT_HW, seed: int = 0,
+                 key: Optional[jax.Array] = None) -> SimResult:
     """``simulate`` with the whole pipeline in ONE compiled call (the
     batched engine at B=1); numerically equivalent to ``simulate`` (parity
     tested in tests/test_engine.py)."""
@@ -94,7 +104,8 @@ def simulate_jit(timeline: IterationTimeline, n_chips: int,
     return simulate_batch(timeline, n_chips, wave_cfg,
                           device_mitigation=device_mitigation,
                           rack_mitigation=rack_mitigation, spec=spec,
-                          hw=hw, seeds=seed).scenario(0)
+                          hw=hw, seeds=seed,
+                          keys=None if key is None else [key]).scenario(0)
 
 
 def simulate_cell(cell: Dict, *, steps: int = 30, dt: float = 0.001,

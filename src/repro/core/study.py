@@ -1,0 +1,562 @@
+"""Declarative Study API: declare scenario axes once, run the grid as a
+handful of compiled calls, query the results.
+
+This is the public surface over the batched engine (``core/engine.py``).
+A ``Study`` declares its axes — workloads (iteration timelines), fleet
+sizes, mitigation configs (disabled/None entries are first-class: the
+unmitigated baseline batches with everything else), utility specs, and
+jitter seeds — and ``run()`` compiles the cartesian grid down to
+``engine.simulate_batch`` + ``engine.analyze_batch``:
+
+  study = Study(
+      workloads={"dense_2s": synthetic_timeline(2.0, 0.19),
+                 "moe_3s": synthetic_timeline(3.0, 0.25, moe_notch=True)},
+      fleets=[256, 512],
+      configs={"none": None, "mpf90+bat": (gpu, battery)},
+      specs=example_specs(job_mw=100.0),
+      seeds=[0, 1],
+      key=0)
+  result = study.run()
+  result.passing().pivot("workload", "config", "energy_overhead")
+
+Three scale levers live in this layer:
+
+* **Keyed randomness** — every pipeline row gets its own PRNG key
+  (``fold_in(root, row)``), threaded into mitigations that consume
+  randomness (telemetry noise), so noisy-telemetry sweeps see independent
+  draws and the same Study with the same root key is bit-reproducible.
+* **Pad-and-mask fusion** — mixed-length workloads fuse into ONE compiled
+  pipeline call per mitigation-structure group (edge-padded + masked,
+  exact in the valid region); the frequency/spec analysis then runs per
+  true length.  ``padding="auto"`` picks this whenever lengths are mixed;
+  ``"bucket"`` keeps the one-call-per-length behavior.
+* **Scenario-axis sharding** — ``shard_devices=True`` spreads the batch
+  across every local device (no-op on single-device hosts).
+
+Results come back as a ``StudyResult``: one flat record per scenario with
+filter / pivot / export helpers, plus per-row ``SimResult`` access.  The
+spec axis is deduplicated against the pipeline: physics runs once per
+(workload, fleet, config, seed) row, each spec then judges every row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+from typing import (Dict, Iterator, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+import jax
+import numpy as np
+
+from repro.core.engine import BatchResult, analyze_batch, simulate_batch
+from repro.core.hardware import DEFAULT_HW, Hardware
+from repro.core.phases import IterationTimeline
+from repro.core.smoothing.base import Mitigation
+from repro.core.spec import UtilitySpec, report_from_arrays
+from repro.core.stratosim import SimResult
+from repro.core.waveform import WaveformConfig, phase_levels
+
+PADDING_MODES = ("auto", "pad", "bucket")
+
+
+# ---------------------------------------------------------------------------
+# axis declarations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MitigationConfig:
+    """One named point on the mitigation axis.  Either stage may be None;
+    the fully-disabled config is the unmitigated baseline."""
+    name: str
+    device: Optional[Mitigation] = None
+    rack: Optional[Mitigation] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.device is not None or self.rack is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fully-resolved cell of the study grid (records align by
+    ``index``; ``row`` is the pipeline row — shared across the spec axis,
+    and the input to ``Study.scenario_key``)."""
+    index: int
+    row: int
+    workload: str
+    n_chips: int
+    config: MitigationConfig
+    spec_name: Optional[str]
+    spec: Optional[UtilitySpec]
+    seed: int
+
+
+def _one_config(name: str, entry) -> MitigationConfig:
+    if entry is None:
+        return MitigationConfig(name)
+    if isinstance(entry, MitigationConfig):
+        return entry if entry.name == name else dataclasses.replace(entry,
+                                                                    name=name)
+    if isinstance(entry, (tuple, list)) and len(entry) == 2:
+        return MitigationConfig(name, device=entry[0], rack=entry[1])
+    raise TypeError(
+        f"config {name!r}: expected None, MitigationConfig, or a "
+        f"(device_mitigation, rack_mitigation) pair, got {type(entry).__name__}"
+        " — a bare mitigation is ambiguous between the per-chip device stage"
+        " and the aggregate rack stage")
+
+
+def _as_configs(configs) -> List[MitigationConfig]:
+    if configs is None:
+        return [MitigationConfig("none")]
+    if isinstance(configs, MitigationConfig):
+        return [configs]
+    if isinstance(configs, Mapping):
+        return [_one_config(name, entry) for name, entry in configs.items()]
+    out = []
+    for i, entry in enumerate(configs):
+        default = "none" if entry is None else f"config{i}"
+        name = entry.name if isinstance(entry, MitigationConfig) else default
+        out.append(_one_config(name, entry))
+    return out
+
+
+def _as_workloads(workloads) -> Dict[str, IterationTimeline]:
+    if isinstance(workloads, IterationTimeline):
+        return {"workload0": workloads}
+    if isinstance(workloads, Mapping):
+        return dict(workloads)
+    return {f"workload{i}": tl for i, tl in enumerate(workloads)}
+
+
+def _as_specs(specs) -> List[Tuple[Optional[str], Optional[UtilitySpec]]]:
+    if specs is None:
+        return [(None, None)]
+    if isinstance(specs, UtilitySpec):
+        return [(specs.name, specs)]
+    if isinstance(specs, Mapping):
+        return [(name, s) for name, s in specs.items()]
+    return [(s.name, s) for s in specs]
+
+
+def _as_seq(x) -> list:
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+# ---------------------------------------------------------------------------
+# the study
+# ---------------------------------------------------------------------------
+
+class Study:
+    """A declared scenario grid; ``run()`` compiles it to the engine.
+
+    Axes (each a singleton or a collection):
+      workloads  name -> IterationTimeline (dict, sequence, or one timeline)
+      fleets     chip counts
+      configs    name -> None | MitigationConfig | (device, rack) pair
+      specs      None | UtilitySpec | dict name -> spec | sequence
+      seeds      jitter seeds (numpy side: per-chip phase jitter draws)
+
+    ``key`` is the PRNG root for mitigation randomness (telemetry noise):
+    pipeline row ``r`` draws from ``fold_in(PRNGKey(key), r)``.  ``None``
+    reverts to the legacy shared-draw behavior.  ``padding`` and
+    ``shard_devices`` select the scale levers (see module docstring).
+    """
+
+    def __init__(self, workloads, *,
+                 fleets: Union[int, Sequence[int]] = (512,),
+                 configs=None, specs=None,
+                 seeds: Union[int, Sequence[int]] = (0,),
+                 wave_cfg: Optional[WaveformConfig] = None,
+                 hw: Hardware = DEFAULT_HW,
+                 key: Union[int, jax.Array, None] = 0,
+                 padding: str = "auto",
+                 shard_devices: bool = False,
+                 sample_chips: int = 64,
+                 keep_waveforms: bool = False):
+        if padding not in PADDING_MODES:
+            raise ValueError(f"padding must be one of {PADDING_MODES}")
+        self.workloads = _as_workloads(workloads)
+        self.fleets = [int(n) for n in _as_seq(fleets)]
+        self.configs = _as_configs(configs)
+        self.specs = _as_specs(specs)
+        self.seeds = [int(s) for s in _as_seq(seeds)]
+        self.wave_cfg = wave_cfg or WaveformConfig()
+        self.hw = hw
+        self.key = key
+        self.padding = padding
+        self.shard_devices = shard_devices
+        self.sample_chips = sample_chips
+        self.keep_waveforms = keep_waveforms
+        names = [c.name for c in self.configs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate config names: {names}")
+
+    # -- declaration accessors ----------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        """Pipeline rows: the grid without the (physics-free) spec axis."""
+        return (len(self.workloads) * len(self.fleets) * len(self.configs)
+                * len(self.seeds))
+
+    def __len__(self) -> int:
+        return self.n_rows * len(self.specs)
+
+    def rows(self) -> List[Tuple[str, int, MitigationConfig, int]]:
+        """Pipeline rows in study order: workload-major, then fleet,
+        config, seed."""
+        return [(w, n, c, s)
+                for w in self.workloads for n in self.fleets
+                for c in self.configs for s in self.seeds]
+
+    def scenarios(self) -> List[Scenario]:
+        out = []
+        for r, (w, n, c, s) in enumerate(self.rows()):
+            for sn, sp in self.specs:
+                out.append(Scenario(index=len(out), row=r, workload=w,
+                                    n_chips=n, config=c, spec_name=sn,
+                                    spec=sp, seed=s))
+        return out
+
+    def scenario_key(self, row: int) -> Optional[jax.Array]:
+        """The PRNG key pipeline row ``row`` draws mitigation randomness
+        from (the serial parity reference passes this to ``simulate``)."""
+        if self.key is None:
+            return None
+        root = (self.key if isinstance(self.key, jax.Array)
+                else jax.random.PRNGKey(int(self.key)))
+        return jax.random.fold_in(root, row)
+
+    def describe(self) -> str:
+        lens = sorted({len(phase_levels(tl, self.wave_cfg, self.hw))
+                       for tl in self.workloads.values()})
+        return (f"Study: {len(self.workloads)} workloads x "
+                f"{len(self.fleets)} fleets x {len(self.configs)} configs x "
+                f"{len(self.seeds)} seeds = {self.n_rows} scenarios "
+                f"({len(self.specs)} specs -> {len(self)} records); "
+                f"waveform lengths {lens}, padding={self.padding}")
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, *, padding: Optional[str] = None) -> "StudyResult":
+        """Run the whole grid: one fused pipeline call per mitigation
+        *structure* group (padded) — or one per (structure, length) when
+        bucketed — then one analysis call per (length, spec) group."""
+        cfg, hw = self.wave_cfg, self.hw
+        mode = padding or self.padding
+        if mode not in PADDING_MODES:
+            raise ValueError(f"padding must be one of {PADDING_MODES}")
+        levels = {w: phase_levels(tl, cfg, hw)
+                  for w, tl in self.workloads.items()}
+        rows = self.rows()
+        row_len = [len(levels[w]) for w, _, _, _ in rows]
+        if mode == "auto":
+            mode = "pad" if len(set(row_len)) > 1 else "bucket"
+        keys = ([self.scenario_key(r) for r in range(len(rows))]
+                if self.key is not None else None)
+
+        # pipeline: rowdata[r] = (BatchResult, index within it).  Rows are
+        # first grouped by mitigation *structure* (a GPU-floor grid and a
+        # Firefly grid cannot stack into one batched pytree; disabled rows
+        # join any group), then pad mode fuses each structure group's
+        # mixed lengths into one call while bucket mode adds a call per
+        # length.  Waveforms stay on device (host_arrays=False) — the
+        # analysis stage slices them straight into its own jit without a
+        # host round-trip; only the small per-row metric arrays are
+        # materialized here.
+        rowdata: List[Tuple[BatchResult, int]] = [None] * len(rows)
+        for sg_rows in self._structure_groups(rows):
+            if mode == "pad":
+                calls = [sg_rows]
+            else:
+                by_len: Dict[int, List[int]] = {}
+                for r in sg_rows:
+                    by_len.setdefault(row_len[r], []).append(r)
+                calls = [idx for _, idx in sorted(by_len.items())]
+            for idx in calls:
+                lens = {row_len[r] for r in idx}
+                res = self._simulate(
+                    [rows[r] for r in idx], levels,
+                    None if keys is None else [keys[r] for r in idx],
+                    pad_to=max(lens) if len(lens) > 1 else None)
+                self._materialize_metrics(res)
+                for b, r in enumerate(idx):
+                    rowdata[r] = (res, b)
+
+        # analysis: one vmapped call per (pipeline call, length, spec)
+        # group, on the rows sliced back to their true length.  Bands are
+        # spec-independent, so only the first spec of each group computes
+        # them.
+        analysis = [[None] * len(self.specs) for _ in rows]
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for r, L in enumerate(row_len):
+            groups.setdefault((id(rowdata[r][0]), L), []).append(r)
+        for (_, L), idx in sorted(groups.items()):
+            res = rowdata[idx[0]][0]
+            sel = np.asarray([rowdata[r][1] for r in idx])
+            mit = res.dc_mitigated[sel][:, :L]
+            for si, (_, sp) in enumerate(self.specs):
+                # records only consume mitigated bands -> dc_raw=None skips
+                # the raw-band FFT per row
+                a = analyze_batch(None, mit, cfg.dt, sp, bands=(si == 0))
+                for b, r in enumerate(idx):
+                    analysis[r][si] = jax.tree.map(lambda v: v[b], a)
+
+        return self._assemble(rows, row_len, rowdata, analysis)
+
+    @staticmethod
+    def _structure_groups(rows) -> List[List[int]]:
+        """Row indices grouped by (device, rack) pytree structure.  A None
+        stage is a wildcard: baseline rows batch with the first concrete
+        structure (the engine masks them off row-wise)."""
+        def struct(m):
+            return None if m is None else jax.tree.structure(m)
+
+        dev_first = next((struct(c.device) for _, _, c, _ in rows
+                          if c.device is not None), None)
+        rack_first = next((struct(c.rack) for _, _, c, _ in rows
+                           if c.rack is not None), None)
+        groups: Dict[Tuple, List[int]] = {}
+        for r, (_, _, c, _) in enumerate(rows):
+            k = (struct(c.device) if c.device is not None else dev_first,
+                 struct(c.rack) if c.rack is not None else rack_first)
+            groups.setdefault(k, []).append(r)
+        return list(groups.values())
+
+    def _simulate(self, rows, levels, keys, pad_to=None) -> BatchResult:
+        return simulate_batch(
+            [self.workloads[w] for w, _, _, _ in rows],
+            [n for _, n, _, _ in rows],
+            self.wave_cfg,
+            device_mitigation=[c.device for _, _, c, _ in rows],
+            rack_mitigation=[c.rack for _, _, c, _ in rows],
+            spec=None, hw=self.hw,
+            seeds=[s for _, _, _, s in rows],
+            keys=keys, sample_chips=self.sample_chips,
+            levels=[levels[w] for w, _, _, _ in rows],
+            pad_to=pad_to, spectra=False,
+            shard_devices=self.shard_devices, dedup=True,
+            # chip-level outputs stay on (the default) even though records
+            # never read them: dropping them measured consistently SLOWER
+            # on CPU XLA (returning chip_m pins a layout the aggregation
+            # reuses).  chip_outputs=False remains available for
+            # memory-bound grids where O(B*n) waveforms dominate.
+            host_arrays=False)
+
+    @staticmethod
+    def _materialize_metrics(res: BatchResult) -> None:
+        """Pull the small [B]-sized metric arrays to host in one pass (the
+        waveforms stay on device for the analysis stage)."""
+        res.energy_overhead = np.asarray(res.energy_overhead)
+        res.swing = {k: np.asarray(v) for k, v in res.swing.items()}
+        res.swing_mitigated = {k: np.asarray(v)
+                               for k, v in res.swing_mitigated.items()}
+
+    def _assemble(self, rows, row_len, rowdata, analysis) -> "StudyResult":
+        records: List[Dict] = []
+        waveforms = [] if self.keep_waveforms else None
+        for r, (wname, n_chips, config, seed) in enumerate(rows):
+            res, b = rowdata[r]
+            L = row_len[r]
+            first = analysis[r][0]
+            for si, (spec_name, spec) in enumerate(self.specs):
+                a = analysis[r][si]
+                rec = {
+                    "index": len(records),
+                    "row": r,
+                    "workload": wname,
+                    "n_chips": n_chips,
+                    "config": config.name,
+                    "spec": spec_name,
+                    "seed": seed,
+                    "period_s": float(self.workloads[wname].period_s),
+                    "n_samples": L,
+                    "mean_mw": float(res.swing["mean_w"][b]) / 1e6,
+                    "swing_mw": float(res.swing["swing_w"][b]) / 1e6,
+                    "swing_mitigated_mw":
+                        float(res.swing_mitigated["swing_w"][b]) / 1e6,
+                    "energy_overhead": float(res.energy_overhead[b]),
+                    "paper_band_frac":
+                        float(first["bands_mitigated"]["paper_band_0p2_3hz"]),
+                }
+                if spec is not None:
+                    report = report_from_arrays(
+                        a["spec_ok"], a["spec_flags"], a["spec_metrics"])
+                    rec["spec_ok"] = report.ok
+                    rec["violations"] = report.violations
+                    rec["metrics"] = report.metrics
+                else:
+                    rec["spec_ok"] = None
+                    rec["violations"] = ()
+                    rec["metrics"] = {}
+                records.append(rec)
+            if waveforms is not None:
+                waveforms.append({
+                    "t": np.asarray(res.t[:L]),
+                    "dc_raw": np.asarray(res.dc_raw[b, :L]),
+                    "dc_mitigated": np.asarray(res.dc_mitigated[b, :L]),
+                })
+        return StudyResult(records=records, waveforms=waveforms)
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StudyResult:
+    """Flat scenario records with query helpers.
+
+    Each record is one (workload, fleet, config, seed, spec) cell:
+    identity fields, swing/overhead/band metrics, and — when a spec was
+    declared — ``spec_ok`` / ``violations`` / the spec's metric dict.
+    ``waveforms`` (when the study kept them) is indexed by ``record["row"]``.
+    """
+    records: List[Dict]
+    waveforms: Optional[List[Dict]] = None
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self) -> Iterator[Dict]:
+        return iter(self.records)
+
+    def __getitem__(self, i: int) -> Dict:
+        return self.records[i]
+
+    # -- querying -----------------------------------------------------------
+
+    def filter(self, **where) -> "StudyResult":
+        """Records whose field equals the given value (or is contained in
+        it, when a list/tuple/set is given): ``filter(workload="moe_3s",
+        config=["none", "mpf90"])``."""
+        def match(r):
+            for k, v in where.items():
+                got = r.get(k)
+                if isinstance(v, (list, tuple, set, frozenset)):
+                    if got not in v:
+                        return False
+                elif got != v:
+                    return False
+            return True
+
+        return StudyResult([r for r in self.records if match(r)],
+                           self.waveforms)
+
+    def passing(self) -> "StudyResult":
+        return StudyResult([r for r in self.records if r["spec_ok"]],
+                           self.waveforms)
+
+    def failing(self) -> "StudyResult":
+        return StudyResult([r for r in self.records
+                            if r["spec_ok"] is False], self.waveforms)
+
+    def unique(self, field: str) -> List:
+        seen: Dict = {}
+        for r in self.records:
+            seen.setdefault(r.get(field), None)
+        return list(seen)
+
+    def best(self, by: str = "energy_overhead",
+             among_passing: bool = True) -> Optional[Dict]:
+        """The minimal-``by`` record (among spec-passing ones by default)."""
+        pool = self.passing().records if among_passing else self.records
+        return min(pool, key=lambda r: r[by]) if pool else None
+
+    def passing_configs(self, **where) -> List[str]:
+        """Config names every matching scenario of which passes its spec,
+        ordered by worst-case energy overhead (the serve-path answer)."""
+        sub = self.filter(**where)
+        worst: Dict[str, float] = {}
+        ok: Dict[str, bool] = {}
+        for r in sub.records:
+            c = r["config"]
+            ok[c] = ok.get(c, True) and bool(r["spec_ok"])
+            worst[c] = max(worst.get(c, -np.inf), r["energy_overhead"])
+        return sorted((c for c, good in ok.items() if good),
+                      key=lambda c: worst[c])
+
+    def pivot(self, index: str, columns: str,
+              values: str = "spec_ok") -> Dict:
+        """Nested dict table: ``pivot("workload", "config",
+        "energy_overhead")[w][c]``.  Cells with several matching records
+        keep the first (slice with ``filter`` for one record per cell)."""
+        out: Dict = {}
+        for r in self.records:
+            out.setdefault(r[index], {}).setdefault(r[columns], r[values])
+        return out
+
+    # -- export -------------------------------------------------------------
+
+    def table(self, columns: Optional[Sequence[str]] = None) -> str:
+        """Records as a markdown table (spec verdicts rendered PASS/fail)."""
+        if not self.records:
+            return "(no records)"
+        columns = list(columns or [
+            "workload", "n_chips", "config", "spec", "seed", "swing_mw",
+            "swing_mitigated_mw", "energy_overhead", "spec_ok"])
+
+        def cell(r, c):
+            v = r.get(c)
+            if c == "spec_ok" and v is not None:
+                return "PASS" if v else ",".join(r["violations"]) or "FAIL"
+            if isinstance(v, float):
+                return f"{v:.4g}"
+            return str(v)
+
+        lines = ["| " + " | ".join(columns) + " |",
+                 "|" + "---|" * len(columns)]
+        lines += ["| " + " | ".join(cell(r, c) for c in columns) + " |"
+                  for r in self.records]
+        return "\n".join(lines)
+
+    def to_records(self) -> List[Dict]:
+        """JSON-safe copies (tuples -> lists) of every record."""
+        return json.loads(self.to_json())
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.records, indent=2, default=list)
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(text + "\n")
+        return text
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        """Scalar record fields as CSV (nested metric dicts are flattened
+        with a ``metrics.`` prefix)."""
+        import csv
+
+        rows = []
+        for r in self.records:
+            flat = {k: v for k, v in r.items()
+                    if not isinstance(v, (dict, tuple, list))}
+            flat["violations"] = ";".join(r.get("violations", ()))
+            for k, v in r.get("metrics", {}).items():
+                flat[f"metrics.{k}"] = v
+            rows.append(flat)
+        fields = list(dict.fromkeys(k for row in rows for k in row))
+        buf = io.StringIO()
+        writer = csv.DictWriter(buf, fieldnames=fields)
+        writer.writeheader()
+        writer.writerows(rows)
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(text)
+        return text
+
+    def sim_result(self, row: int) -> SimResult:
+        """Rebuild the per-row ``SimResult`` waveform view (requires the
+        study to have been run with ``keep_waveforms=True``)."""
+        if self.waveforms is None:
+            raise ValueError("run the Study with keep_waveforms=True")
+        w = self.waveforms[row]
+        rec = next(r for r in self.records if r["row"] == row)
+        return SimResult(
+            t=w["t"], dc_raw=w["dc_raw"], dc_mitigated=w["dc_mitigated"],
+            chip_raw=None, chip_mitigated=None,
+            energy_overhead=rec["energy_overhead"],
+            swing={}, swing_mitigated={}, bands={}, bands_mitigated={},
+            spec_report=None, aux={})

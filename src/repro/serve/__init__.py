@@ -1,1 +1,10 @@
 from repro.serve.engine import ServeEngine
+
+
+def __getattr__(name):
+    # lazy: keeps `python -m repro.serve.power` from importing the module
+    # twice (once here, once as __main__)
+    if name in ("PowerComplianceService", "default_catalog"):
+        from repro.serve import power
+        return getattr(power, name)
+    raise AttributeError(name)

@@ -1,0 +1,208 @@
+"""Spec-compliance query service: (workload, fleet, spec) -> passing configs.
+
+The operator-facing question behind the paper's evaluation matrix (and the
+pre-dispatch screening framing of EasyRider / resonance-safety-criterion
+work): *before* dispatching a training job, which transient-mitigation
+configurations keep it inside the utility spec, and at what energy cost?
+
+``PowerComplianceService`` answers it through the Study API: a query
+builds the candidate catalog (baseline + MPF floors + batteries + their
+pairings, sized off the job's raw swing), declares a one-workload Study,
+runs it as one compiled call per length, and returns the passing configs
+ranked by worst-case energy overhead.  Answers are cached per
+(workload, fleet, spec) so repeated queries are dictionary lookups.
+
+``handle`` is the JSON boundary (dict in, JSON-safe dict out) a service
+framework would mount; the module is also a CLI:
+
+  PYTHONPATH=src python -m repro.serve.power \
+      --period-s 2.0 --comm-frac 0.25 --n-chips 512 --spec moderate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.hardware import DEFAULT_HW, Hardware
+from repro.core.phases import (IterationTimeline, from_dryrun_cell,
+                               load_cell, synthetic_timeline)
+from repro.core.smoothing.battery import RackBattery
+from repro.core.smoothing.gpu_floor import GpuPowerSmoothing
+from repro.core.spec import UtilitySpec, example_specs
+from repro.core.study import MitigationConfig, Study, StudyResult
+from repro.core.waveform import WaveformConfig, aggregate, chip_waveform
+
+
+def default_catalog(swing_w: float, *,
+                    mpf_grid: Sequence[float] = (0.5, 0.65, 0.8, 0.9),
+                    cap_fracs: Sequence[float] = (0.5, 1.0, 2.0),
+                    ramp_w_per_s: float = 2000.0,
+                    stop_delay_s: float = 1.0,
+                    target_tau_s: float = 10.0,
+                    hw: Hardware = DEFAULT_HW) -> List[MitigationConfig]:
+    """The candidate mitigation catalog for a job whose raw datacenter
+    swing is ``swing_w``: the unmitigated baseline, each MPF floor alone,
+    each battery sizing alone, and every pairing."""
+    gpus = {f"mpf{int(m * 100)}": GpuPowerSmoothing(
+        mpf_frac=m, hw=hw, ramp_up_w_per_s=ramp_w_per_s,
+        ramp_down_w_per_s=ramp_w_per_s, stop_delay_s=stop_delay_s)
+        for m in mpf_grid}
+    bats = {f"bat{f:g}x": RackBattery(
+        capacity_j=f * swing_w, max_discharge_w=swing_w,
+        max_charge_w=swing_w, target_tau_s=target_tau_s)
+        for f in cap_fracs}
+    catalog = [MitigationConfig("none")]
+    catalog += [MitigationConfig(n, device=g) for n, g in gpus.items()]
+    catalog += [MitigationConfig(n, rack=b) for n, b in bats.items()]
+    catalog += [MitigationConfig(f"{gn}+{bn}", device=g, rack=b)
+                for gn, g in gpus.items() for bn, b in bats.items()]
+    return catalog
+
+
+class PowerComplianceService:
+    """Serve-path wrapper: compliance queries over a mitigation catalog.
+
+    One instance holds the waveform/telemetry configuration, the catalog
+    knobs, the PRNG root, and the answer cache; ``query`` takes the
+    (workload, fleet, spec) triple.
+    """
+
+    def __init__(self, *, wave_cfg: Optional[WaveformConfig] = None,
+                 hw: Hardware = DEFAULT_HW,
+                 mpf_grid: Sequence[float] = (0.5, 0.65, 0.8, 0.9),
+                 cap_fracs: Sequence[float] = (0.5, 1.0, 2.0),
+                 seeds: Sequence[int] = (0,),
+                 key: Optional[int] = 0,
+                 cache_size: int = 128):
+        self.wave_cfg = wave_cfg or WaveformConfig(dt=0.002, steps=10,
+                                                   jitter_s=0.002)
+        self.hw = hw
+        self.mpf_grid = tuple(mpf_grid)
+        self.cap_fracs = tuple(cap_fracs)
+        self.seeds = tuple(seeds)
+        self.key = key
+        self.cache_size = cache_size
+        self._cache: Dict[Tuple, Dict] = {}
+        self.last_result: Optional[StudyResult] = None
+
+    # -- the query ----------------------------------------------------------
+
+    def query(self, workload: IterationTimeline, n_chips: int,
+              spec: Union[str, UtilitySpec] = "moderate", *,
+              workload_name: str = "workload",
+              padding: str = "auto") -> Dict:
+        """(workload, fleet, spec) -> which catalog configs pass, ranked by
+        worst-case (over seeds) energy overhead."""
+        cache_key = self._cache_key(workload, n_chips, spec, padding)
+        if cache_key in self._cache:
+            return self._cache[cache_key]
+
+        cfg, hw = self.wave_cfg, self.hw
+        w = aggregate(chip_waveform(workload, cfg, hw), n_chips, cfg, hw)
+        swing = float(w.max() - w.min())
+        mean_mw = float(w.mean()) / 1e6
+        if isinstance(spec, str):
+            spec = example_specs(job_mw=mean_mw)[spec]
+
+        study = Study({workload_name: workload}, fleets=[n_chips],
+                      configs=default_catalog(swing, mpf_grid=self.mpf_grid,
+                                              cap_fracs=self.cap_fracs,
+                                              hw=hw),
+                      specs=spec, seeds=self.seeds, wave_cfg=cfg, hw=hw,
+                      key=self.key, padding=padding)
+        result = study.run()
+        self.last_result = result
+
+        passing_names = result.passing_configs()
+        by_config = {c: result.filter(config=c) for c in passing_names}
+        passing = [{
+            "config": c,
+            "energy_overhead":
+                max(r["energy_overhead"] for r in by_config[c]),
+            "swing_mitigated_mw":
+                max(r["swing_mitigated_mw"] for r in by_config[c]),
+        } for c in passing_names]
+        answer = {
+            "workload": workload_name,
+            "n_chips": int(n_chips),
+            "spec": spec.name,
+            "mean_mw": round(mean_mw, 4),
+            "raw_swing_mw": round(swing / 1e6, 4),
+            "n_configs": len(study.configs),
+            "n_scenarios": study.n_rows,
+            "compliant": bool(passing),
+            "recommended": passing[0]["config"] if passing else None,
+            "passing": passing,
+        }
+        if len(self._cache) >= self.cache_size:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[cache_key] = answer
+        return answer
+
+    def _cache_key(self, workload, n_chips, spec, padding) -> Tuple:
+        try:
+            wk = hash(workload)
+        except TypeError:
+            wk = repr(workload)
+        sk = spec if isinstance(spec, str) else (spec.name, repr(spec))
+        return (wk, int(n_chips), sk, padding, self.wave_cfg, self.seeds)
+
+    # -- JSON boundary ------------------------------------------------------
+
+    def handle(self, request: Dict) -> Dict:
+        """One request dict -> one JSON-safe answer dict.
+
+        ``{"workload": {"period_s": 2.0, "comm_frac": 0.25,
+                        "moe_notch": false} | {"cell": "<dryrun json>"},
+           "n_chips": 512, "spec": "lenient|moderate|tight"}``
+        """
+        try:
+            wl = request["workload"]
+            if isinstance(wl, dict) and "cell" in wl:
+                cell = load_cell(wl["cell"])
+                tl = from_dryrun_cell(cell, self.hw)
+                name = f"{cell.get('arch', 'cell')}"
+            elif isinstance(wl, dict):
+                tl = synthetic_timeline(
+                    period_s=float(wl.get("period_s", 1.0)),
+                    comm_frac=float(wl.get("comm_frac", 0.25)),
+                    moe_notch=bool(wl.get("moe_notch", False)))
+                name = wl.get("name", "synthetic")
+            else:
+                raise TypeError(f"unsupported workload request: {wl!r}")
+            answer = self.query(tl, int(request["n_chips"]),
+                                request.get("spec", "moderate"),
+                                workload_name=name)
+            return json.loads(json.dumps(answer, default=float))
+        except (KeyError, TypeError, ValueError, OSError) as e:
+            # OSError: a bad --cell path must come back as an error dict,
+            # not escape the dict-in/dict-out service boundary
+            return {"error": f"{type(e).__name__}: {e}"}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="power-spec compliance query (Study API serve path)")
+    ap.add_argument("--period-s", type=float, default=2.0)
+    ap.add_argument("--comm-frac", type=float, default=0.25)
+    ap.add_argument("--moe-notch", action="store_true")
+    ap.add_argument("--cell", default=None,
+                    help="dry-run artifact JSON (overrides the synthetic "
+                         "workload flags)")
+    ap.add_argument("--n-chips", type=int, default=512)
+    ap.add_argument("--spec", default="moderate",
+                    choices=("lenient", "moderate", "tight"))
+    args = ap.parse_args(argv)
+
+    workload: Dict = ({"cell": args.cell} if args.cell else
+                      {"period_s": args.period_s, "comm_frac": args.comm_frac,
+                       "moe_notch": args.moe_notch})
+    service = PowerComplianceService()
+    answer = service.handle({"workload": workload, "n_chips": args.n_chips,
+                             "spec": args.spec})
+    print(json.dumps(answer, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -169,10 +169,33 @@ def test_simulate_batch_broadcasts_fleet_and_seeds():
                                    rtol=1e-4, atol=1e-3)
 
 
-def test_simulate_batch_rejects_mixed_none_configs():
-    with pytest.raises(ValueError):
-        engine.simulate_batch(_timeline(), N_CHIPS, _cfg(),
-                              device_mitigation=[_gpu(0.5), None])
+def test_simulate_batch_mixes_enabled_and_disabled_rows():
+    """Disabled (None) rows batch alongside enabled configs: the masked-off
+    row reproduces the unmitigated serial run exactly."""
+    tl = _timeline()
+    cfg = _cfg(jitter_s=0.002)
+    dc = _dc_wave()
+    swing = float(dc.max() - dc.min())
+    spec = core.example_specs(job_mw=0.1)["moderate"]
+    dev = [_gpu(0.5), None, _gpu(0.9), None]
+    rack = [_bat(swing, swing), _bat(2 * swing, swing), None, None]
+    res = engine.simulate_batch(tl, N_CHIPS, cfg, device_mitigation=dev,
+                                rack_mitigation=rack, spec=spec, seeds=3)
+    for i in range(4):
+        ref = core.simulate(tl, N_CHIPS, cfg, device_mitigation=dev[i],
+                            rack_mitigation=rack[i], spec=spec, seed=3)
+        np.testing.assert_allclose(res.dc_mitigated[i], ref.dc_mitigated,
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.energy_overhead[i],
+                                   ref.energy_overhead, rtol=1e-3, atol=1e-6)
+        assert bool(res.spec_ok[i]) == ref.spec_report.ok
+        assert res.report(i).violations == ref.spec_report.violations
+        # scenario() reflects the mask: no chip_mitigated and no
+        # placeholder aux on disabled rows (the serial reference has none)
+        sc = res.scenario(i)
+        assert (sc.chip_mitigated is None) == (dev[i] is None)
+        assert ("device" in sc.aux) == (dev[i] is not None)
+        assert ("rack" in sc.aux) == (rack[i] is not None)
 
 
 def test_simulate_batch_rejects_mixed_lengths():

@@ -45,6 +45,25 @@ def test_spec_validate_flags_violations():
     assert "band_energy" in rep.violations
 
 
+def test_validate_jax_reports_zero_dynamic_range_on_one_window():
+    """A waveform exactly one sliding window long: the numpy path's strided
+    loop never runs and reports dynamic_range_w=0.0 — the traced mirror
+    must report the same metric instead of dropping it."""
+    import jax.numpy as jnp
+    spec = core.example_specs(job_mw=1.0)["moderate"]
+    dt = 0.001
+    n = int(spec.time.window_s / dt)     # exactly one window
+    w = 1e6 + 1e5 * np.sin(2 * np.pi * 5.0 * np.arange(n) * dt)
+    rep = spec.validate(w, dt)
+    assert rep.metrics["dynamic_range_w"] == 0.0
+    ok, flags, metrics = spec.validate_jax(jnp.asarray(w, jnp.float32), dt)
+    assert "dynamic_range_w" in metrics
+    assert float(metrics["dynamic_range_w"]) == 0.0
+    assert not bool(flags["dynamic_range"])
+    assert set(metrics) == set(rep.metrics)
+    assert bool(ok) == rep.ok
+
+
 def test_spec_validate_passes_smooth_load():
     n = 60000
     w = 1e6 + 1e3 * np.sin(2 * np.pi * 0.01 * np.arange(n) * 0.001)

@@ -1,0 +1,340 @@
+"""Declarative Study API: parity with the serial path, keyed randomness,
+pad-and-mask fusion, result helpers, and the serve-path compliance query.
+
+The acceptance contract (ISSUE 2): a single Study declaring >=2 workload
+lengths, >=1 disabled-mitigation baseline, and noisy telemetry with
+per-scenario keys runs in one ``Study.run()`` call with spec verdicts
+matching the equivalent serial ``simulate()`` loop.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import engine
+from repro.core.study import MitigationConfig
+
+DT = 0.002
+N_CHIPS = 256
+
+
+def _tl(period=1.0, comm=0.3, moe=False):
+    return core.synthetic_timeline(period_s=period, comm_frac=comm,
+                                   moe_notch=moe)
+
+
+def _cfg(**kw):
+    kw.setdefault("dt", DT)
+    kw.setdefault("steps", 4)
+    return core.WaveformConfig(**kw)
+
+
+def _gpu(mpf):
+    return core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=2000,
+                                  ramp_down_w_per_s=2000, stop_delay_s=1.0)
+
+
+def _noisy_firefly():
+    return core.Firefly(telemetry=core.TelemetrySource(
+        period_s=0.002, latency_s=0.002, noise_w=20.0))
+
+
+def _swing(tl, cfg):
+    dc = core.aggregate(core.chip_waveform(tl, cfg), N_CHIPS, cfg)
+    return float(dc.max() - dc.min()), dc
+
+
+def _acceptance_study(**kw):
+    """>=2 workload lengths, a disabled baseline, noisy telemetry."""
+    cfg = _cfg(jitter_s=0.002)
+    tl_short, tl_long = _tl(1.0), _tl(2.0, moe=True)
+    swing, dc = _swing(tl_short, cfg)
+    bat = core.RackBattery(capacity_j=swing, max_discharge_w=swing,
+                           max_charge_w=swing, target_tau_s=5.0)
+    spec = core.example_specs(job_mw=dc.mean() / 1e6)["moderate"]
+    return core.Study(
+        {"short": tl_short, "long": tl_long},
+        fleets=[N_CHIPS],
+        configs={"none": None,
+                 "mpf80+bat": (_gpu(0.8), bat),
+                 "noisy_ff": (_noisy_firefly(), None)},
+        specs=spec, seeds=[0, 1], wave_cfg=cfg, key=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one padded run == the serial loop
+# ---------------------------------------------------------------------------
+
+def test_study_padded_run_matches_serial_loop():
+    study = _acceptance_study()
+    res = study.run(padding="pad")       # ONE fused pipeline call
+    assert len(res) == 12
+    for sc in study.scenarios():
+        ref = core.simulate(
+            study.workloads[sc.workload], sc.n_chips, study.wave_cfg,
+            device_mitigation=sc.config.device,
+            rack_mitigation=sc.config.rack, spec=sc.spec, seed=sc.seed,
+            key=study.scenario_key(sc.row))
+        rec = res[sc.index]
+        # spec verdicts + violation sets match for every scenario
+        assert rec["spec_ok"] == ref.spec_report.ok, sc
+        assert rec["violations"] == ref.spec_report.violations, sc
+        if sc.config.name != "noisy_ff":
+            # noise-free rows are numerically exact (noise draws are
+            # length-dependent, so noisy rows are verdict-level only)
+            np.testing.assert_allclose(rec["energy_overhead"],
+                                       ref.energy_overhead,
+                                       rtol=1e-3, atol=1e-6)
+            np.testing.assert_allclose(
+                rec["swing_mitigated_mw"],
+                ref.swing_mitigated["swing_w"] / 1e6, rtol=1e-4, atol=1e-6)
+            for k, v in ref.spec_report.metrics.items():
+                np.testing.assert_allclose(rec["metrics"][k], v,
+                                           rtol=5e-3, atol=2e-3, err_msg=k)
+
+
+def test_study_bucket_mode_matches_serial_exactly():
+    """Bucket mode runs each length unpadded, so even the noisy rows are
+    bit-compatible with the keyed serial reference."""
+    study = _acceptance_study(keep_waveforms=True)
+    res = study.run(padding="bucket")
+    for sc in study.scenarios():
+        ref = core.simulate(
+            study.workloads[sc.workload], sc.n_chips, study.wave_cfg,
+            device_mitigation=sc.config.device,
+            rack_mitigation=sc.config.rack, spec=sc.spec, seed=sc.seed,
+            key=study.scenario_key(sc.row))
+        np.testing.assert_allclose(res.waveforms[sc.row]["dc_mitigated"],
+                                   ref.dc_mitigated, rtol=1e-4, atol=1e-2)
+        assert res[sc.index]["spec_ok"] == ref.spec_report.ok
+
+
+def test_study_padding_modes_agree():
+    study = _acceptance_study()
+    pad = study.run(padding="pad")
+    bucket = study.run(padding="bucket")
+    for a, b in zip(pad.records, bucket.records):
+        assert a["spec_ok"] == b["spec_ok"]
+        if a["config"] != "noisy_ff":
+            np.testing.assert_allclose(a["energy_overhead"],
+                                       b["energy_overhead"],
+                                       rtol=1e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# keyed randomness
+# ---------------------------------------------------------------------------
+
+def test_keyed_noise_draws_are_independent_per_scenario():
+    cfg = _cfg(jitter_s=0.0)
+    study = core.Study({"w": _tl()}, fleets=[64],
+                       configs={"ff": (_noisy_firefly(), None)},
+                       seeds=[0, 1], wave_cfg=cfg, key=0,
+                       keep_waveforms=True)
+    res = study.run()
+    # jitter off + same config: the ONLY difference between the rows is
+    # the per-scenario PRNG key, so the waveforms must differ
+    assert not np.array_equal(res.waveforms[0]["dc_mitigated"],
+                              res.waveforms[1]["dc_mitigated"])
+
+    legacy = core.Study({"w": _tl()}, fleets=[64],
+                        configs={"ff": (_noisy_firefly(), None)},
+                        seeds=[0, 1], wave_cfg=cfg, key=None,
+                        keep_waveforms=True)
+    lres = legacy.run()
+    # key=None reverts to the legacy shared draw: rows are identical
+    np.testing.assert_array_equal(lres.waveforms[0]["dc_mitigated"],
+                                  lres.waveforms[1]["dc_mitigated"])
+
+
+def test_same_root_key_is_bit_reproducible():
+    a = _acceptance_study(keep_waveforms=True).run()
+    b = _acceptance_study(keep_waveforms=True).run()
+    assert a.records == b.records
+    for wa, wb in zip(a.waveforms, b.waveforms):
+        np.testing.assert_array_equal(wa["dc_mitigated"], wb["dc_mitigated"])
+
+
+# ---------------------------------------------------------------------------
+# declaration + result helpers
+# ---------------------------------------------------------------------------
+
+def test_study_axes_and_spec_dedup():
+    cfg = _cfg()
+    specs = core.example_specs(job_mw=0.05)
+    study = core.Study({"w": _tl()}, fleets=[128, 256],
+                       configs={"none": None, "mpf80": (_gpu(0.8), None)},
+                       specs={"moderate": specs["moderate"],
+                              "tight": specs["tight"]},
+                       wave_cfg=cfg, key=0)
+    assert study.n_rows == 4 and len(study) == 8
+    res = study.run()
+    # the spec axis shares physics: same row metrics under both specs
+    by_row = {}
+    for r in res:
+        by_row.setdefault(r["row"], []).append(r)
+    for rows in by_row.values():
+        assert len(rows) == 2
+        assert rows[0]["energy_overhead"] == rows[1]["energy_overhead"]
+        assert {rows[0]["spec"], rows[1]["spec"]} == {"moderate", "tight"}
+
+
+def test_study_rejects_bad_declarations():
+    with pytest.raises(ValueError):
+        core.Study({"w": _tl()}, padding="fuse")
+    with pytest.raises(TypeError):
+        core.Study({"w": _tl()}, configs={"bare": _gpu(0.8)})
+    with pytest.raises(ValueError):
+        core.Study({"w": _tl()},
+                   configs=[MitigationConfig("dup"), MitigationConfig("dup")])
+
+
+def test_result_helpers_filter_pivot_export(tmp_path):
+    study = _acceptance_study()
+    res = study.run()
+    sub = res.filter(workload="short", config=["none", "mpf80+bat"])
+    assert len(sub) == 4 and set(sub.unique("config")) == {"none",
+                                                          "mpf80+bat"}
+    assert len(res.passing()) + len(res.failing()) == len(res)
+    piv = res.filter(seed=0).pivot("workload", "config", "spec_ok")
+    assert set(piv) == {"short", "long"}
+    assert set(piv["short"]) == {"none", "mpf80+bat", "noisy_ff"}
+    best = res.best()
+    if best is not None:
+        assert best["spec_ok"]
+    # exports round-trip and are JSON/CSV-safe
+    j = json.loads(res.to_json(os.path.join(tmp_path, "r.json")))
+    assert len(j) == len(res) and isinstance(j[0]["violations"], list)
+    csv_text = res.to_csv(os.path.join(tmp_path, "r.csv"))
+    assert csv_text.count("\n") == len(res) + 1
+    assert "| workload |" in res.table().splitlines()[0]
+
+
+def test_passing_configs_orders_by_worst_overhead():
+    study = _acceptance_study()
+    res = study.run()
+    names = res.passing_configs()
+    assert "none" not in names           # raw waveform violates the spec
+    worst = [max(r["energy_overhead"] for r in res.filter(config=c))
+             for c in names]
+    assert worst == sorted(worst)
+
+
+# ---------------------------------------------------------------------------
+# engine-level pad-and-mask (the lever Study drives)
+# ---------------------------------------------------------------------------
+
+def test_simulate_batch_pad_to_is_exact_in_valid_region():
+    cfg = _cfg(jitter_s=0.002)
+    tls = [_tl(1.0), _tl(2.0, moe=True)]
+    swing, _ = _swing(tls[0], cfg)
+    bat = core.RackBattery(capacity_j=swing, max_discharge_w=swing,
+                           max_charge_w=swing, target_tau_s=5.0)
+    lens = [len(core.chip_waveform(t, cfg)) for t in tls]
+    res = engine.simulate_batch(tls, N_CHIPS, cfg,
+                                device_mitigation=[_gpu(0.8), None],
+                                rack_mitigation=bat, seeds=3,
+                                pad_to=max(lens), spectra=False)
+    assert list(res.n_valid) == lens
+    for i, tl in enumerate(tls):
+        ref = core.simulate(tl, N_CHIPS, cfg,
+                            device_mitigation=_gpu(0.8) if i == 0 else None,
+                            rack_mitigation=bat, seed=3)
+        n = res.length(i)
+        np.testing.assert_allclose(res.dc_mitigated[i, :n], ref.dc_mitigated,
+                                   rtol=1e-5, atol=1e-2)
+        np.testing.assert_allclose(res.energy_overhead[i],
+                                   ref.energy_overhead, rtol=1e-3, atol=1e-6)
+        for k, v in ref.swing_mitigated.items():
+            np.testing.assert_allclose(res.swing_mitigated[k][i], v,
+                                       rtol=1e-4, atol=1e-3, err_msg=k)
+
+
+def test_simulate_batch_pad_to_rejects_spec_and_spectra():
+    with pytest.raises(ValueError):
+        engine.simulate_batch(_tl(), N_CHIPS, _cfg(), pad_to=99999,
+                              spec=core.example_specs(0.1)["moderate"],
+                              spectra=False)
+
+
+# ---------------------------------------------------------------------------
+# scenario-axis sharding (forced multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+SHARD_SCRIPT = r"""
+import numpy as np
+import repro.core as core
+tl = core.synthetic_timeline(1.0, 0.3)
+cfg = core.WaveformConfig(dt=0.002, steps=3, jitter_s=0.002)
+gpu = lambda m: core.GpuPowerSmoothing(mpf_frac=m, ramp_up_w_per_s=2000,
+                                       ramp_down_w_per_s=2000,
+                                       stop_delay_s=1.0)
+spec = core.example_specs(job_mw=0.05)["moderate"]
+kw = dict(workloads={"w": tl}, fleets=[128, 256],
+          configs={"none": None, "a": (gpu(0.8), None), "b": (gpu(0.65), None)},
+          specs=spec, wave_cfg=cfg, key=0)
+sh = core.Study(**kw, shard_devices=True).run()   # 6 rows over 2 devices
+ns = core.Study(**kw).run()
+assert len(sh) == len(ns) == 6
+for a, b in zip(sh.records, ns.records):
+    assert a["spec_ok"] == b["spec_ok"]
+    np.testing.assert_allclose(a["energy_overhead"], b["energy_overhead"],
+                               rtol=1e-5, atol=1e-8)
+print("SHARD_OK")
+"""
+
+
+def test_shard_devices_matches_unsharded():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# serve path: the compliance query service
+# ---------------------------------------------------------------------------
+
+def _service():
+    from repro.serve.power import PowerComplianceService
+    return PowerComplianceService(
+        wave_cfg=_cfg(steps=4, jitter_s=0.002),
+        mpf_grid=(0.8,), cap_fracs=(1.0,))
+
+
+def test_compliance_query_answer_matches_serial_verdicts():
+    svc = _service()
+    tl = _tl()
+    answer = svc.query(tl, N_CHIPS, "moderate")
+    assert answer["n_configs"] == 4      # none, mpf80, bat1x, mpf80+bat1x
+    assert set(p["config"] for p in answer["passing"]).isdisjoint({"none"})
+    # every claimed-passing config really passes the spec serially
+    result = svc.last_result
+    for p in answer["passing"]:
+        for rec in result.filter(config=p["config"]):
+            assert rec["spec_ok"], p
+    # ... and the answer is cached
+    assert svc.query(tl, N_CHIPS, "moderate") is answer
+
+
+def test_compliance_handle_is_json_safe():
+    svc = _service()
+    ans = svc.handle({"workload": {"period_s": 1.0, "comm_frac": 0.3},
+                      "n_chips": N_CHIPS, "spec": "lenient"})
+    assert "error" not in ans
+    json.dumps(ans)                      # fully serializable
+    assert ans["spec"] == "lenient" and isinstance(ans["passing"], list)
+    err = svc.handle({"workload": 42, "n_chips": N_CHIPS})
+    assert "error" in err
+    err = svc.handle({"workload": {"cell": "/no/such/cell.json"},
+                      "n_chips": N_CHIPS})
+    assert "error" in err                # bad path stays inside the boundary
