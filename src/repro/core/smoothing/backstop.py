@@ -13,22 +13,45 @@ bin's amplitude stays above threshold:
 De-escalation happens after the bin amplitude stays below threshold for
 ``cooldown_s``.
 
+The spectral monitor runs on the streaming Pallas sliding-Goertzel
+kernel by default (compiled on TPU backends, interpret mode elsewhere
+so CPU CI and the batched engine's vmap path keep working);
+``use_pallas=False`` falls back to the corrected pure-jnp oracle
+(``sliding_bin_power_jnp``).  Both remove the trace mean before
+accumulating — without that, MW-scale DC offsets bury the ~1e5 W
+oscillations this monitor exists to catch (see kernels/goertzel/ref.py).
+
+Escalation is gated until one full window has streamed: partial-window
+amplitude estimates during warm-up are dominated by whatever transient
+happens to sit in the first samples (a spike at t=0 used to escalate the
+response before a single window of evidence existed).  A trace shorter
+than one window therefore never escalates.
+
 The escalation state machine runs as a lax.scan, so the whole monitor is
 jit/vmap-able; thresholds and response gains are pytree leaves, while the
-monitored bins and window/sustain/cooldown durations fix shapes and counter
-constants and stay static.
+monitored bins, window/sustain/cooldown durations and the kernel switch
+fix shapes and counter constants and stay static.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import functools
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.smoothing.base import np_apply, register_mitigation
+from repro.kernels.goertzel.ops import sliding_bin_power
 from repro.kernels.goertzel.ref import sliding_bin_power_jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _interpret_default() -> bool:
+    """Compile the sliding kernel only on real TPU backends; everywhere
+    else (CPU CI, tests, the vmapped engine) it runs in interpret mode."""
+    return jax.default_backend() != "tpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +64,7 @@ class TelemetryBackstop:
     alpha1: float = 0.5                     # level-1 AC attenuation
     shed_frac: float = 0.7                  # level-2 cap (fraction of mean)
     idle_frac: float = 0.2                  # level-3 floor
+    use_pallas: bool = True                 # structure-static kernel switch
 
     def __post_init__(self):
         object.__setattr__(self, "critical_hz", tuple(self.critical_hz))
@@ -49,7 +73,11 @@ class TelemetryBackstop:
         w = jnp.asarray(w, jnp.float32)
         n = w.shape[-1]
         win = max(int(self.window_s / dt), 8)
-        amps = sliding_bin_power_jnp(w, dt, self.critical_hz, win)
+        if self.use_pallas:
+            amps = sliding_bin_power(w, float(dt), tuple(self.critical_hz),
+                                     win=win, interpret=_interpret_default())
+        else:
+            amps = sliding_bin_power_jnp(w, dt, self.critical_hz, win)
         worst = amps.max(axis=1)  # [n]
 
         sustain_n = max(int(self.sustain_s / dt), 1)
@@ -58,7 +86,8 @@ class TelemetryBackstop:
         def step(carry, inp):
             level, above, below, detect = carry
             worst_i, i = inp
-            hit = worst_i > self.amp_threshold_w
+            # warm-up gate: no triggering off partial-window estimates
+            hit = (worst_i > self.amp_threshold_w) & (i >= win - 1)
             above = jnp.where(hit, above + 1, 0)
             below = jnp.where(hit, 0, below + 1)
             esc = hit & (above >= sustain_n) & (level < 3)
@@ -94,4 +123,5 @@ class TelemetryBackstop:
 register_mitigation(
     TelemetryBackstop,
     data_fields=("amp_threshold_w", "alpha1", "shed_frac", "idle_frac"),
-    meta_fields=("critical_hz", "window_s", "sustain_s", "cooldown_s"))
+    meta_fields=("critical_hz", "window_s", "sustain_s", "cooldown_s",
+                 "use_pallas"))

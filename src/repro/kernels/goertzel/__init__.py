@@ -1,1 +1,1 @@
-from repro.kernels.goertzel.ops import bin_power
+from repro.kernels.goertzel.ops import bin_power, sliding_bin_power

@@ -1,13 +1,39 @@
-"""Goertzel FFT-bin power kernel (telemetry backstop hot path, Sec. IV-E).
+"""Goertzel FFT-bin power kernels (telemetry backstop hot path, Sec. IV-E).
 
-Input: power telemetry reshaped into non-overlapping windows [W, win].
-Each grid cell loads a block of windows into VMEM and runs K Goertzel
-resonators (one per critical frequency) across the window with a single
-fori_loop — O(win*K) multiply-adds per window vs O(win log win) for a full
-FFT, and only K bins of output. On TPU the [Bw, K] state vectors live in
-VREGs; the window block is the only VMEM traffic.
+Two kernels over power telemetry:
 
-Outputs per-window bin amplitudes [W, K] (volts/watts units of the input).
+``goertzel_pallas`` — non-overlapping windows [W, win]: each grid cell
+loads a block of windows into VMEM and runs K Goertzel resonators (one
+per critical frequency) across the window with a single fori_loop —
+O(win*K) multiply-adds per window vs O(win log win) for a full FFT, and
+only K bins of output.  The [Bw, K] resonator states live in VREGs; the
+window block is the only VMEM traffic.
+
+``sliding_goertzel_pallas`` — every-sample sliding window (the
+backstop's streaming granularity): the trace is processed in
+window-sized segments with *hop-and-overlap* state.  Each grid cell
+computes modulated within-segment prefix sums
+
+    P_b = sum_{p<=b} x[p] * e^{-j*omega*p}        (restarted per segment)
+
+and assembles the window ending at segment offset ``b`` from the head of
+the current segment plus the suffix of the previous one:
+
+    |window DFT| = |P_b + e^{j*omega*win} * (P^{prev}_{win-1} - P^{prev}_b)|
+
+The per-segment restart is the numerics fix: every partial sum is
+bounded by win*max|x| (oscillation scale once the wrapper removes the
+trace mean), instead of the O(n*mean) global cumulative sums whose f32
+rounding buries the ~1e5 W signals the backstop guards against.  The
+previous segment's prefix state is carried across grid cells in VMEM
+scratch (grid dims are sequential by default), so the trace streams
+through VMEM exactly once.  The phase tables (cos/sin of omega*p) and
+the segment rotation e^{j*omega*win} are small [win, K]/[2, K] operands
+precomputed in float64 on the host — these are the *real* phase factors
+that replaced the dead cos(coef)/sin(coef) placeholder operands the
+non-sliding kernel used to carry.
+
+Outputs are bin amplitudes in the volts/watts units of the input.
 """
 from __future__ import annotations
 
@@ -16,9 +42,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _goertzel_kernel(x_ref, coef_ref, cw_ref, sw_ref, o_ref, *, win: int):
+def _goertzel_kernel(x_ref, coef_ref, o_ref, *, win: int):
     x = x_ref[...].astype(jnp.float32)          # [Bw, win]
     coef = coef_ref[...].astype(jnp.float32)    # [K]  2*cos(w)
     Bw = x.shape[0]
@@ -44,18 +71,80 @@ def goertzel_pallas(windows: jax.Array, coef: jax.Array,
     W, win = windows.shape
     K = coef.shape[0]
     assert W % block_w == 0, (W, block_w)
-    cw = jnp.cos(coef)  # placeholders to keep operand count stable
-    sw = jnp.sin(coef)
     return pl.pallas_call(
         functools.partial(_goertzel_kernel, win=win),
         grid=(W // block_w,),
         in_specs=[
             pl.BlockSpec((block_w, win), lambda i: (i, 0)),
             pl.BlockSpec((K,), lambda i: (0,)),
-            pl.BlockSpec((K,), lambda i: (0,)),
-            pl.BlockSpec((K,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block_w, K), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((W, K), jnp.float32),
         interpret=interpret,
-    )(windows.astype(jnp.float32), coef.astype(jnp.float32), cw, sw)
+    )(windows.astype(jnp.float32), coef.astype(jnp.float32))
+
+
+def _sliding_kernel(x_ref, cosp_ref, sinp_ref, rot_ref, o_ref,
+                    pre_re, pre_im, *, win: int):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _():
+        pre_re[...] = jnp.zeros_like(pre_re)
+        pre_im[...] = jnp.zeros_like(pre_im)
+
+    x = x_ref[...].astype(jnp.float32)           # [Bs, win]
+    cosp = cosp_ref[...]                          # [win, K]  cos(omega*p)
+    sinp = sinp_ref[...]                          # [win, K]  sin(omega*p)
+    # hop-and-overlap state: modulated prefix sums restarted every segment
+    pr = jnp.cumsum(x[:, :, None] * cosp[None], axis=1)      # [Bs, win, K]
+    pi = jnp.cumsum(x[:, :, None] * (-sinp[None]), axis=1)
+    # previous segment's prefix state: within the block it is the row
+    # above; the first row streams in from the previous grid cell's carry
+    prev_r = jnp.concatenate([pre_re[...][None], pr[:-1]], axis=0)
+    prev_i = jnp.concatenate([pre_im[...][None], pi[:-1]], axis=0)
+    # suffix of the previous segment = its total minus its prefix
+    dr = prev_r[:, -1:, :] - prev_r
+    di = prev_i[:, -1:, :] - prev_i
+    rr = rot_ref[0:1, :]                          # [1, K]  cos(omega*win)
+    ri = rot_ref[1:2, :]                          # [1, K]  sin(omega*win)
+    mr = pr + rr[None] * dr - ri[None] * di
+    mi = pi + rr[None] * di + ri[None] * dr
+    o_ref[...] = (2.0 / win) * jnp.sqrt(mr * mr + mi * mi)
+    pre_re[...] = pr[-1]
+    pre_im[...] = pi[-1]
+
+
+def sliding_goertzel_pallas(xseg: jax.Array, cosp: jax.Array,
+                            sinp: jax.Array, rot: jax.Array,
+                            *, block_s: int = 1,
+                            interpret: bool = False) -> jax.Array:
+    """Streaming sliding-window Goertzel.
+
+    xseg: [S, win] — the (mean-removed, zero-padded) trace reshaped into
+    window-sized segments; cosp/sinp: [win, K] phase tables cos/sin of
+    omega_k * p; rot: [2, K] = [cos, sin] of omega_k * win (the segment
+    rotation).  Returns [S, win, K]: the sliding bin amplitude ending at
+    every sample, normalized by 2/win (the wrapper rescales the warm-up
+    ramp).  ``block_s`` segments are processed per grid cell; the
+    cross-segment prefix state is carried in VMEM scratch, which relies
+    on the (default) sequential grid execution order.
+    """
+    S, win = xseg.shape
+    K = cosp.shape[1]
+    assert S % block_s == 0, (S, block_s)
+    return pl.pallas_call(
+        functools.partial(_sliding_kernel, win=win),
+        grid=(S // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, win), lambda i: (i, 0)),
+            pl.BlockSpec((win, K), lambda i: (0, 0)),
+            pl.BlockSpec((win, K), lambda i: (0, 0)),
+            pl.BlockSpec((2, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, win, K), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, win, K), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((win, K), jnp.float32),
+                        pltpu.VMEM((win, K), jnp.float32)],
+        interpret=interpret,
+    )(xseg.astype(jnp.float32), cosp, sinp, rot)

@@ -1,30 +1,99 @@
-"""Jit'd wrapper: telemetry trace -> per-window critical-bin amplitudes."""
+"""Jit'd wrappers: telemetry trace -> critical-bin amplitudes.
+
+``bin_power`` — non-overlapping windows (coarse streaming granularity).
+``sliding_bin_power`` — every-sample sliding window on the streaming
+Pallas kernel: the telemetry backstop's product hot path.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.goertzel.goertzel import goertzel_pallas
+from repro.kernels.goertzel.goertzel import (goertzel_pallas,
+                                             sliding_goertzel_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("win", "block_w", "interpret"))
 def bin_power(x: jax.Array, dt: float, freqs: jax.Array, *, win: int,
               block_w: int = 8, interpret: bool = False) -> jax.Array:
-    """x: [n] power samples -> [n//win, K] bin amplitudes (non-overlapping
-    windows; the backstop's streaming granularity)."""
+    """x: [n] power samples -> [ceil(n/win), K] bin amplitudes
+    (non-overlapping windows).  The trailing partial window (``n % win``
+    samples) is zero-padded after its own DC removal and normalized by
+    its true sample count, so the tail of the trace is monitored too
+    instead of being silently dropped."""
     n = x.shape[0]
-    W = n // win
-    windows = x[: W * win].reshape(W, win)
+    W = -(-n // win)
+    pad_n = W * win - n
+    if pad_n:
+        x = jnp.concatenate([x, jnp.zeros((pad_n,), x.dtype)])
+    windows = x.reshape(W, win)
+    counts = np.full((W,), float(win), np.float32)
+    if pad_n:
+        counts[-1] = float(win - pad_n)
+    counts = jnp.asarray(counts)
+    valid = jnp.arange(win)[None, :] < counts[:, None]
     # remove the per-window DC component: near-DC resonator states otherwise
     # grow to win*mean and the terminal power formula cancels catastrophically
-    # in f32 (the bins of interest are >= 0.1 Hz, unaffected by this)
-    windows = windows - jnp.mean(windows, axis=1, keepdims=True)
+    # in f32 (the bins of interest are >= 0.1 Hz, unaffected by this).
+    # Means use the true sample counts; pad samples stay exactly zero.
+    means = (jnp.sum(jnp.where(valid, windows, 0.0), axis=1, keepdims=True)
+             / counts[:, None])
+    windows = jnp.where(valid, windows - means, 0.0)
     pad = (-W) % block_w
     if pad:
         windows = jnp.concatenate(
             [windows, jnp.zeros((pad, win), windows.dtype)], axis=0)
     coef = 2.0 * jnp.cos(2 * jnp.pi * jnp.asarray(freqs) * dt)
     out = goertzel_pallas(windows, coef, block_w=block_w, interpret=interpret)
-    return out[:W]
+    # the kernel normalizes by 2/win; partial windows rescale to 2/count
+    return out[:W] * (float(win) / counts)[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dt", "freqs", "win", "block_s",
+                                    "interpret"))
+def sliding_bin_power(x: jax.Array, dt: float, freqs, *, win: int,
+                      block_s: int = 0,
+                      interpret: bool = False) -> jax.Array:
+    """x: [n] power samples -> [n, K] every-sample sliding-window bin
+    amplitudes via the streaming Pallas kernel (``freqs`` must be a
+    hashable static sequence of Hz; ``dt``/``win`` static).
+
+    Semantics match the corrected float64 oracle
+    (``ref.sliding_bin_power_ref``): the trace mean is removed before
+    accumulation — see ``ref.py`` for the numerics rationale — and the
+    first ``win - 1`` outputs are partial-window estimates normalized by
+    the true sample count.  The phase tables are built in float64 on the
+    host, so bin phases stay exact at any trace length.  ``block_s=0``
+    picks a segment block size automatically.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    xc = x - jnp.mean(x)
+    S = -(-n // win)
+    if block_s <= 0:
+        # a few segments per grid cell amortizes cell overhead while the
+        # [block_s, win, K] intermediates stay VMEM-sized
+        block_s = max(1, min(8, S))
+    S_pad = S + ((-S) % block_s)
+    pad_n = S_pad * win - n
+    if pad_n:
+        xc = jnp.concatenate([xc, jnp.zeros((pad_n,), jnp.float32)])
+    xseg = xc.reshape(S_pad, win)
+
+    omega = 2.0 * np.pi * np.asarray(freqs, np.float64) * dt
+    p = np.arange(win, dtype=np.float64)[:, None]
+    cosp = jnp.asarray(np.cos(omega[None, :] * p), jnp.float32)
+    sinp = jnp.asarray(np.sin(omega[None, :] * p), jnp.float32)
+    rot = jnp.asarray(np.stack([np.cos(omega * win), np.sin(omega * win)]),
+                      jnp.float32)
+    out = sliding_goertzel_pallas(xseg, cosp, sinp, rot, block_s=block_s,
+                                  interpret=interpret)
+    out = out.reshape(S_pad * win, -1)[:n]
+    # warm-up ramp: the kernel normalizes every output by 2/win; partial
+    # windows (i < win-1) renormalize to their true sample count
+    denom = jnp.minimum(jnp.arange(n, dtype=jnp.float32) + 1.0, float(win))
+    return out * (float(win) / denom)[:, None]

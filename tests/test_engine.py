@@ -65,6 +65,10 @@ def _grids():
         "backstop": (dc, [core.TelemetryBackstop(
             critical_hz=(0.5, 1.0), window_s=2.0, sustain_s=0.5,
             amp_threshold_w=a * swing_d) for a in (0.05, 10.0)]),
+        "backstop_jnp": (dc, [core.TelemetryBackstop(
+            critical_hz=(0.5, 1.0), window_s=2.0, sustain_s=0.5,
+            amp_threshold_w=a * swing_d, use_pallas=False)
+            for a in (0.05, 10.0)]),
         "combined": (dc, [core.CombinedMitigation(
             _gpu(m), _bat(swing_d, swing_d), N_CHIPS) for m in (0.5, 0.9)]),
         "stack": (chip, [core.Stack([_gpu(m), _bat(2 * swing_c, swing_c)])
@@ -73,7 +77,8 @@ def _grids():
 
 
 @pytest.mark.parametrize("name", ["gpu_floor", "battery", "firefly",
-                                  "backstop", "combined", "stack"])
+                                  "backstop", "backstop_jnp", "combined",
+                                  "stack"])
 def test_apply_batch_matches_serial(name):
     w, mits = _grids()[name]
     outs, aux = core.apply_batch(mits, w, DT)
@@ -106,6 +111,10 @@ def _scenarios():
         "rack_backstop": (None, [core.TelemetryBackstop(
             critical_hz=(0.5, 1.0), window_s=2.0, sustain_s=0.5,
             amp_threshold_w=a * swing) for a in (0.05, 10.0)]),
+        "rack_backstop_jnp": (None, [core.TelemetryBackstop(
+            critical_hz=(0.5, 1.0), window_s=2.0, sustain_s=0.5,
+            amp_threshold_w=a * swing, use_pallas=False)
+            for a in (0.05, 10.0)]),
         "gpu_plus_battery": ([_gpu(m) for m in (0.5, 0.9)],
                              [_bat(f * swing, swing) for f in (0.5, 2.0)]),
     }
@@ -113,6 +122,7 @@ def _scenarios():
 
 @pytest.mark.parametrize("name", ["device_gpu", "device_firefly",
                                   "rack_battery", "rack_backstop",
+                                  "rack_backstop_jnp",
                                   "gpu_plus_battery"])
 def test_simulate_batch_matches_simulate(name):
     dev, rack = _scenarios()[name]

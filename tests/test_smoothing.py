@@ -1,4 +1,6 @@
 """Mitigation-stack behaviour tests (paper Sec. IV)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -183,6 +185,82 @@ def test_backstop_quiet_load_untouched():
     out, aux = bs.apply(w, DT)
     assert aux["max_level"] == 0
     np.testing.assert_array_equal(out, w)
+
+
+def _prefix_backstop_max_level(w, dt, freqs, window_s, thr, sustain_s):
+    """PRE-FIX monitor replica (estimator without DC removal + state
+    machine without the warm-up gate), kept inline to lock the regression."""
+    import jax.numpy as jnp
+    w32 = jnp.asarray(w, jnp.float32)
+    n = len(w)
+    win = max(int(window_s / dt), 8)
+    f = jnp.asarray(freqs, jnp.float32)
+    t = jnp.arange(n, dtype=jnp.float32) * dt
+    ph = jnp.exp(-2j * jnp.pi * t[:, None] * f[None, :])
+    cs = jnp.cumsum(w32[:, None] * ph, axis=0)
+    acc = jnp.concatenate([cs[:win], cs[win:] - cs[:-win]]) if n > win else cs
+    denom = np.minimum(np.arange(n) + 1, win)
+    worst = np.asarray(2.0 * jnp.abs(acc)).max(axis=1) / denom
+    sustain_n = max(int(sustain_s / dt), 1)
+    level = above = 0
+    for hit in worst > thr:
+        above = above + 1 if hit else 0
+        if hit and above >= sustain_n and level < 3:
+            level, above = level + 1, 0
+    return level
+
+
+def test_backstop_detects_mw_scale_oscillation():
+    """Acceptance regression: a 1e5 W oscillation riding on a 5e8 W DC
+    offset over a 10-minute f32 trace.  The fixed backstop (both the jnp
+    oracle and the Pallas kernel path) stays quiet on the DC-only trace
+    and detects the oscillation with the right latency.  The pre-fix
+    sliding path provably misses it: its partial warm-up windows read
+    ~2*DC at every usable threshold, so the monitor escalates on the
+    QUIET trace — no threshold both rejects a quiet MW trace and sees a
+    1e5 W line."""
+    dt = 0.002
+    n = int(600.0 / dt)
+    t = np.arange(n) * dt
+    quiet = np.full(n, 5e8, np.float32)
+    onset = 300.0
+    signal = (5e8 + np.where(t >= onset,
+                             1e5 * np.sin(2 * np.pi * 2.0 * t), 0.0))
+    freqs = (0.5, 1.0, 2.0, 9.0)
+    for use_pallas in (False, True):
+        bs = core.TelemetryBackstop(critical_hz=freqs, window_s=8.0,
+                                    amp_threshold_w=5e4, sustain_s=1.5,
+                                    use_pallas=use_pallas)
+        _, aux_q = bs.apply(quiet, dt)
+        assert aux_q["max_level"] == 0, f"false positive (pallas={use_pallas})"
+        _, aux_s = bs.apply(signal, dt)
+        assert aux_s["max_level"] >= 1, f"missed signal (pallas={use_pallas})"
+        # detection after onset + window fill + sustain, not at warm-up
+        assert onset < aux_s["detect_latency_s"] < onset + 15.0
+    # the pre-fix monitor escalates on the quiet trace => provably cannot
+    # separate the 1e5 W signal from a quiet MW trace at this threshold
+    assert _prefix_backstop_max_level(quiet, dt, freqs, 8.0, 5e4, 1.5) >= 1
+
+
+def test_backstop_warmup_spike_does_not_escalate():
+    """A spike at t=0 must not trigger escalation off partial-window
+    amplitude estimates: no level change before one full window has
+    streamed (and none at all — the spike's full-window amplitude is
+    small)."""
+    dt = 0.002
+    n = int(30.0 / dt)
+    w = np.full(n, 50e6, np.float32)
+    w[:25] += 4e7                            # hard spike at t=0
+    bs = core.TelemetryBackstop(window_s=8.0, amp_threshold_w=1e6,
+                                sustain_s=0.2, use_pallas=False)
+    win = int(8.0 / dt)
+    for use_pallas in (False, True):
+        bs = dataclasses.replace(bs, use_pallas=use_pallas)
+        out, aux = bs.apply(w, dt)
+        assert aux["levels"][:win].max() == 0, \
+            f"escalated during warm-up (pallas={use_pallas})"
+        assert aux["max_level"] == 0
+        np.testing.assert_array_equal(out, w)
 
 
 def test_design_mitigation_finds_passing_combo():

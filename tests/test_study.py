@@ -183,6 +183,32 @@ def test_study_axes_and_spec_dedup():
         assert {rows[0]["spec"], rows[1]["spec"]} == {"moderate", "tight"}
 
 
+def test_study_composes_with_pallas_backstop():
+    """The kernel-enabled backstop (use_pallas meta field) rides through
+    the declarative layer — mixed-length fusion, baseline masking and the
+    vmapped pipeline — with serial verdict parity."""
+    cfg = _cfg(jitter_s=0.002)
+    tl_short, tl_long = _tl(1.0), _tl(2.0, moe=True)
+    swing, dc = _swing(tl_short, cfg)
+    bs = core.TelemetryBackstop(critical_hz=(0.5, 1.0), window_s=2.0,
+                                sustain_s=0.5, amp_threshold_w=0.05 * swing,
+                                use_pallas=True)
+    spec = core.example_specs(job_mw=dc.mean() / 1e6)["moderate"]
+    study = core.Study({"short": tl_short, "long": tl_long},
+                       fleets=[N_CHIPS],
+                       configs={"none": None, "backstop": (None, bs)},
+                       specs=spec, wave_cfg=cfg, key=None)
+    res = study.run(padding="pad")
+    assert len(res) == 4
+    for sc in study.scenarios():
+        ref = core.simulate(study.workloads[sc.workload], sc.n_chips,
+                            study.wave_cfg, device_mitigation=sc.config.device,
+                            rack_mitigation=sc.config.rack, spec=sc.spec,
+                            seed=sc.seed)
+        assert res[sc.index]["spec_ok"] == ref.spec_report.ok, sc
+        assert res[sc.index]["violations"] == ref.spec_report.violations, sc
+
+
 def test_study_rejects_bad_declarations():
     with pytest.raises(ValueError):
         core.Study({"w": _tl()}, padding="fuse")
