@@ -8,8 +8,8 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fig1_waveform, fig2_breakdown, fig3_fft,
-                        fig5_squarewave, fig6_mpf, fig7_battery,
+from benchmarks import (design_bench, fig1_waveform, fig2_breakdown,
+                        fig3_fft, fig5_squarewave, fig6_mpf, fig7_battery,
                         kernels_bench, roofline, sweep_bench, table1_matrix)
 
 MODULES = [
@@ -21,6 +21,7 @@ MODULES = [
     ("fig7", fig7_battery),
     ("table1", table1_matrix),
     ("sweep", sweep_bench),
+    ("design", design_bench),
     ("kernels", kernels_bench),
     ("roofline", roofline),
 ]

@@ -24,6 +24,7 @@ for direct use; the Study layer is the supported surface.
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.phases import (IterationTimeline, Phase, from_dryrun_cell,
                                load_cell, synthetic_timeline)
+from repro.core.engine import design, design_gradient, design_grid
 from repro.core.smoothing import (CombinedMitigation, Firefly,
                                   GpuPowerSmoothing, RackBattery, Stack,
                                   TelemetryBackstop, design_mitigation)
@@ -47,6 +48,7 @@ __all__ = [
     # mitigations
     "GpuPowerSmoothing", "RackBattery", "Firefly", "TelemetryBackstop",
     "CombinedMitigation", "Stack", "design_mitigation",
+    "design", "design_gradient", "design_grid",
     # specs + serial reference
     "UtilitySpec", "TimeDomainSpec", "FrequencyDomainSpec", "SpecReport",
     "example_specs", "SimResult", "simulate", "simulate_jit",

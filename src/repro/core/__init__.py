@@ -20,8 +20,9 @@ from repro.core.smoothing import (CombinedMitigation, Firefly, GpuPowerSmoothing
                                   RackBattery, Stack, TelemetryBackstop,
                                   design_mitigation, energy_overhead)
 from repro.core.engine import (BatchResult, analyze_batch, apply_batch,
-                               design_grid, simulate_batch,
-                               stack_mitigations, sweep, validate_many)
+                               design, design_gradient, design_grid,
+                               simulate_batch, stack_mitigations, sweep,
+                               validate_many)
 from repro.core.study import MitigationConfig, Scenario, Study, StudyResult
 from repro.core.ballast_inject import attach_ballast, ballast_gflops_for_cell
 from repro.core.stagger import StaggerSchedule, max_ramp, plan_stagger, ramp_waveform

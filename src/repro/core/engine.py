@@ -19,6 +19,13 @@ StratoSim's ``simulate`` runs one scenario at a time; this module runs a
                       waveforms (the finalize stage behind ``core.study``).
   ``design_grid``     the batched grid search behind
                       ``smoothing.design_mitigation``.
+  ``design_gradient`` jitted gradient descent on (MPF, capacity): Adam via
+                      ``lax.scan`` through the smooth-relaxed mitigations
+                      (``smooth_tau``) and the spec's hinge loss
+                      (``UtilitySpec.loss_jax``), vmapped multi-start,
+                      hard re-validation of every candidate.
+  ``design``          the one design entry point:
+                      method="grid" | "gradient" | "hybrid".
 
 This module is the *compile target*; the declarative public surface is
 ``repro.core.study`` (``Study``/``StudyResult``), which drives it with
@@ -44,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hardware import DEFAULT_HW, Hardware
+from repro.core.optim import adam_init, adam_update, clip_by_global_norm
 from repro.core.phases import IterationTimeline
 from repro.core.smoothing.base import (Mitigation, apply_mitigation,
                                        energy_overhead_jax, materialize_aux)
@@ -699,9 +707,59 @@ def _design_eval(gpu_b, bat_b, gpu_on, bat_on, w, n_chips, *,
     return jax.vmap(one)(gpu_b, bat_b, gpu_on, bat_on)
 
 
+def _rank_feasible(ok: np.ndarray, overhead: np.ndarray,
+                   candidates: Sequence[Tuple[float, float]]) -> np.ndarray:
+    """Feasible candidate indices ranked by (energy overhead, capacity,
+    MPF) — minimal waste first, then minimal capacity (cost / embodied
+    carbon), the serial solver's preference order."""
+    feasible = np.flatnonzero(np.asarray(ok))
+    caps = np.asarray([candidates[i][1] for i in feasible])
+    mpfs = np.asarray([candidates[i][0] for i in feasible])
+    # round overhead so float noise cannot outrank a smaller battery
+    oh = np.round(np.asarray(overhead)[feasible], 6)
+    return feasible[np.lexsort((mpfs, caps, oh))]
+
+
+def _design_pair(spec: UtilitySpec, mpf: float, cap: float, n_chips: int,
+                 swing: float, hw: Hardware
+                 ) -> Tuple[Optional[GpuPowerSmoothing],
+                            Optional[RackBattery]]:
+    """The concrete (device, rack) mitigation objects a design candidate
+    stands for — the single construction point shared by the grid search,
+    the gradient refiner's hard re-validation, and the winner handed back
+    to callers.  ``mpf`` / ``cap`` of 0 mean the stage is off."""
+    gpu = (GpuPowerSmoothing(
+        mpf_frac=mpf, hw=hw,
+        ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
+        ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
+        if mpf > 0 else None)
+    bat = (RackBattery(capacity_j=cap, max_discharge_w=swing,
+                       max_charge_w=swing) if cap > 0 else None)
+    return gpu, bat
+
+
+def _eval_candidates(spec: UtilitySpec, w: np.ndarray, dt: float,
+                     n_chips: int, candidates: Sequence[Tuple[float, float]],
+                     *, swing: float, hw: Hardware):
+    """Hard (exact-semantics) evaluation of ``(mpf, cap)`` candidates in
+    one vmapped call: ``(outs, ok, overhead, flags, metrics)``."""
+    B = len(candidates)
+    pairs = [_design_pair(spec, m, c, n_chips, swing, hw)
+             for m, c in candidates]
+    gpus, gpu_on = _normalize_mits([g for g, _ in pairs], B,
+                                   "design gpu candidates")
+    bats, bat_on = _normalize_mits([b for _, b in pairs], B,
+                                   "design battery candidates")
+    return _design_eval(gpus, bats, gpu_on, bat_on,
+                        jnp.asarray(w, jnp.float32),
+                        jnp.asarray(float(n_chips), jnp.float32),
+                        spec=spec, dt=dt)
+
+
 def design_grid(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int,
                 mpf_grid: Sequence[float], cap_grid: Sequence[float],
-                *, swing: float, hw: Hardware = DEFAULT_HW) -> Optional[Dict]:
+                *, swing: float, hw: Hardware = DEFAULT_HW,
+                top_k: int = 1) -> Optional[Dict]:
     """Evaluate every (MPF, capacity) candidate in one vmapped call and
     return the first passing one in grid order (MPF-major ascending — the
     serial search's minimal-waste-then-minimal-capacity preference).
@@ -709,46 +767,300 @@ def design_grid(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int,
     Disabled stages (MPF or capacity 0) ride through ``_normalize_mits``
     masking, the same path that lets ``simulate_batch`` mix baseline and
     mitigated rows in one batch.
+
+    ``top_k`` > 1 additionally ranks the feasible candidates by energy
+    overhead and returns the best ``top_k`` under ``"alternatives"`` —
+    the seeds for ``design_gradient`` multi-start and the ranked answer
+    list the compliance service serves.  The winner stays the grid-order
+    pick regardless of ``top_k``.
     """
     candidates = [(m, c) for m in mpf_grid for c in cap_grid]
-    B = len(candidates)
-    gpus, gpu_on = _normalize_mits(
-        [(GpuPowerSmoothing(
-            mpf_frac=m, hw=hw,
-            ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
-            ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
-          if m > 0 else None) for m, _ in candidates], B, "design gpu grid")
-    bats, bat_on = _normalize_mits(
-        [(RackBattery(capacity_j=c, max_discharge_w=swing,
-                      max_charge_w=swing) if c > 0 else None)
-         for _, c in candidates], B, "design battery grid")
-
-    outs, ok, overhead, flags, metrics = _design_eval(
-        gpus, bats, gpu_on, bat_on, jnp.asarray(w, jnp.float32),
-        jnp.asarray(float(n_chips), jnp.float32), spec=spec, dt=dt)
+    outs, ok, overhead, flags, metrics = _eval_candidates(
+        spec, w, dt, n_chips, candidates, swing=swing, hw=hw)
     ok = np.asarray(ok)
     if not ok.any():
         return None
     idx = int(np.argmax(ok))
     mpf, cap = candidates[idx]
+    overhead = np.asarray(overhead)
+    ranked = _rank_feasible(ok, overhead, candidates)[:top_k]
+    alternatives = [{
+        "mpf_frac": candidates[i][0],
+        "battery_capacity_j": candidates[i][1],
+        "energy_overhead": float(overhead[i]),
+    } for i in ranked]
     row = jax.tree.map(lambda a: np.asarray(a)[idx], (flags, metrics))
     # the winner as concrete mitigation objects — the single construction
     # point callers (design_mitigation, demos) reuse instead of rebuilding
-    gpu_sel = (GpuPowerSmoothing(
-        mpf_frac=mpf, hw=hw,
-        ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
-        ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
-        if mpf > 0 else None)
-    bat_sel = (RackBattery(capacity_j=cap, max_discharge_w=swing,
-                           max_charge_w=swing) if cap > 0 else None)
+    gpu_sel, bat_sel = _design_pair(spec, mpf, cap, n_chips, swing, hw)
     return {
         "mpf_frac": mpf,
         "battery_capacity_j": cap,
-        "energy_overhead": float(np.asarray(overhead)[idx]),
+        "energy_overhead": float(overhead[idx]),
         "report": report_from_arrays(ok[idx], row[0], row[1]),
         "device_mitigation": gpu_sel,
         "rack_mitigation": bat_sel,
         "mitigated": np.asarray(outs)[idx],
         "grid_ok": ok.reshape(len(mpf_grid), len(cap_grid)),
+        "alternatives": alternatives,
+        "method": "grid",
         "aux": {},
     }
+
+
+# ---------------------------------------------------------------------------
+# gradient-based (MPF x battery) design
+# ---------------------------------------------------------------------------
+
+# below this fraction of mpf_max the relaxed device stage is (mostly)
+# gated off and the hard re-validation snaps mpf to exactly 0 (stage off)
+_GPU_GATE_PIVOT = 0.15
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "dt", "steps"))
+def _design_descend(x0, gpu_t, bat_t, w, n_chips, lo, hi, hyper, *,
+                    spec: UtilitySpec, dt: float, steps: int):
+    """Vmapped multi-start Adam descent on the smooth design objective.
+
+    ``x0`` is ``{"mpf": [S], "cap": [S]}`` (capacity in units of
+    ``hyper["cap_scale"]`` joules so both coordinates are O(1) and one
+    learning rate conditions both); ``gpu_t``/``bat_t`` are smooth-relaxed
+    (``smooth_tau`` > 0) templates whose (mpf_frac, capacity_j) leaves get
+    replaced by the iterate each step.  The objective is the spec's hinge
+    loss (margin-shrunk limits) plus an energy-overhead regularizer and an
+    L1 sizing regularizer; each Adam step is followed by a projection onto
+    the physical box ``[lo, hi]``.  Returns (final iterates [S], loss
+    history [S, steps]).
+
+    The grid search treats mpf=0 as "device stage off"; the relaxation
+    mirrors that with a sigmoid on-gate driven by mpf itself (pivot at
+    ``_GPU_GATE_PIVOT`` of mpf_max), so the battery-only design is inside
+    the search space — without it the spec-derived per-chip ramp limiter
+    flattens the waveform at *any* mpf and the landscape plateaus.  The
+    battery's off-limit (cap -> 0 => passthrough) is already natural.
+    """
+    mpf_max = gpu_t.hw.chip.mpf_max
+    tau = gpu_t.smooth_tau
+
+    def objective(x):
+        gpu = dataclasses.replace(gpu_t, mpf_frac=x["mpf"])
+        bat = dataclasses.replace(bat_t,
+                                  capacity_j=x["cap"] * hyper["cap_scale"])
+        per_chip = w / n_chips
+        smoothed, _ = gpu.apply_jax(per_chip, dt)
+        g_on = jax.nn.sigmoid((x["mpf"] - _GPU_GATE_PIVOT * mpf_max)
+                              / (tau * mpf_max))
+        chip_out = g_on * smoothed + (1.0 - g_on) * per_chip
+        out, _ = bat.apply_jax(chip_out * n_chips, dt)
+        viol, _ = spec.loss_jax(out, dt, margin=hyper["margin"])
+        overhead = energy_overhead_jax(w, out)
+        return (viol + hyper["overhead_weight"] * jnp.maximum(overhead, 0.0)
+                + hyper["size_weight"] * (x["cap"] + 0.25 * x["mpf"]))
+
+    value_and_grad = jax.value_and_grad(objective)
+
+    def one_start(x0_row):
+        def step(carry, _):
+            x, st = carry
+            loss, g = value_and_grad(x)
+            g, _ = clip_by_global_norm(g, 100.0)      # blowup hygiene
+            x2, st2 = adam_update(x, g, st, hyper["lr"])
+            x2 = jax.tree.map(jnp.clip, x2, lo, hi)   # box projection
+            return (x2, st2), loss
+
+        (xf, _), losses = jax.lax.scan(step, (x0_row, adam_init(x0_row)),
+                                       None, length=steps)
+        return xf, losses
+
+    return jax.vmap(one_start)(x0)
+
+
+def design_gradient(spec: UtilitySpec, w: np.ndarray, dt: float,
+                    n_chips: int, *, swing: Optional[float] = None,
+                    hw: Hardware = DEFAULT_HW,
+                    seeds: Optional[Sequence[Tuple[float, float]]] = None,
+                    steps: int = 120, lr: float = 0.08,
+                    smooth_tau: float = 0.05, margin: float = 0.05,
+                    overhead_weight: float = 0.5,
+                    size_weight: float = 0.02,
+                    period_hint_s: float = 2.0,
+                    top_k: int = 4,
+                    cap_scale: Optional[float] = None,
+                    mpf_bounds: Optional[Tuple[float, float]] = None,
+                    cap_bounds_j: Optional[Tuple[float, float]] = None
+                    ) -> Optional[Dict]:
+    """Jitted gradient descent on (MPF fraction, battery capacity).
+
+    The forward model is the same gated gpu->battery stack the grid search
+    evaluates, but run through the mitigations' ``smooth_tau`` relaxation
+    so every step gate carries a gradient; the objective is
+    ``UtilitySpec.loss_jax`` (smooth hinge compliance, margin-shrunk) plus
+    an energy-overhead regularizer.  ``seeds`` are (mpf_frac, capacity_j)
+    starts — pass a coarse grid's ``alternatives`` to refine it (the
+    ``design(method="hybrid")`` path); default is a fixed 6-point lattice
+    over the box.  All starts descend in one vmapped ``lax.scan``.
+
+    The *answer* is still exact: every final iterate (plus a small
+    escalation ladder above it, plus the seeds) is re-validated under the
+    hard tau=0 semantics in one vmapped call, and the minimal-overhead
+    passing candidate wins.  Returns the same solution dict shape as
+    ``design_grid`` (plus ``loss_history`` [S, steps]), or None when no
+    candidate passes the hard spec.
+    """
+    w = np.asarray(w, np.float32)
+    swing = float(w.max() - w.min()) if swing is None else float(swing)
+    cap_scale = float(cap_scale or swing * period_hint_s)
+    mpf_lo, mpf_hi = mpf_bounds or (0.0, hw.chip.mpf_max)
+    cap_lo_j, cap_hi_j = cap_bounds_j or (0.0, 4.0 * cap_scale)
+    # caller seeds (e.g. the grid's top-k) are augmented with a fixed
+    # lattice over the box: a degenerate seed set — say, only MPF-only
+    # configs with cap ~ 0, where the saturated battery's capacity
+    # gradient vanishes — cannot climb out on its own, and extra vmapped
+    # lanes are nearly free
+    lattice = [(m, f * cap_scale) for m in (0.3, 0.6, 0.85)
+               for f in (0.25, 1.0)]
+    seeds = lattice if seeds is None else list(seeds) + lattice
+    seeds = list(dict.fromkeys(
+        (float(np.clip(m, mpf_lo, mpf_hi)),
+         float(np.clip(c, cap_lo_j, cap_hi_j))) for m, c in seeds))
+    # the descent itself stays above a small capacity floor: at cap -> 0
+    # the SoC fraction's reverse-mode terms scale like 1/cap^2 and
+    # overflow f32 (NaN-poisoning the lane).  A 0.1%-of-scale battery is
+    # physically a passthrough, and the raw (possibly cap=0) seeds are
+    # still hard-validated verbatim below.
+    cap_floor_j = max(cap_lo_j, 1e-3 * cap_scale)
+
+    gpu_t = GpuPowerSmoothing(
+        mpf_frac=0.5, hw=hw,
+        ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
+        ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips,
+        smooth_tau=smooth_tau)
+    bat_t = RackBattery(capacity_j=cap_scale, max_discharge_w=swing,
+                        max_charge_w=swing, smooth_tau=smooth_tau)
+    x0 = {"mpf": jnp.asarray([m for m, _ in seeds], jnp.float32),
+          "cap": jnp.asarray([max(c, cap_floor_j) / cap_scale
+                              for _, c in seeds], jnp.float32)}
+    lo = {"mpf": jnp.asarray(mpf_lo, jnp.float32),
+          "cap": jnp.asarray(cap_floor_j / cap_scale, jnp.float32)}
+    hi = {"mpf": jnp.asarray(mpf_hi, jnp.float32),
+          "cap": jnp.asarray(cap_hi_j / cap_scale, jnp.float32)}
+    hyper = {"lr": jnp.asarray(lr, jnp.float32),
+             "margin": jnp.asarray(margin, jnp.float32),
+             "overhead_weight": jnp.asarray(overhead_weight, jnp.float32),
+             "size_weight": jnp.asarray(size_weight, jnp.float32),
+             "cap_scale": jnp.asarray(cap_scale, jnp.float32)}
+    xf, losses = _design_descend(
+        x0, gpu_t, bat_t, jnp.asarray(w), jnp.asarray(float(n_chips),
+                                                      jnp.float32),
+        lo, hi, hyper, spec=spec, dt=dt, steps=steps)
+
+    # hard re-validation: each final iterate with a geometric capacity
+    # ladder around it (the margin leaves the iterate a little above the
+    # true feasibility boundary — the sub-1.0 rungs walk back down to it
+    # at ~7% resolution; the >1.0 rungs cover a too-thin margin), its
+    # battery-only variant (the relaxed on-gate may sit between hard on
+    # and off), and the seeds themselves (so a refined answer can never
+    # be worse than its grid seed)
+    finals = list(zip(np.asarray(xf["mpf"]).tolist(),
+                      (np.asarray(xf["cap"]) * cap_scale).tolist()))
+    candidates: List[Tuple[float, float]] = []
+    for m, c in finals:
+        for f in (0.75, 0.8, 0.87, 0.93, 1.0, 1.08, 1.25, 1.6):
+            ck = float(np.clip(c * f, cap_lo_j, cap_hi_j))
+            candidates.append((m, ck))
+            candidates.append((0.0, ck))
+    candidates += seeds
+    # snap a mostly-gated-off device stage to an exactly-off one (the
+    # same pivot the descent's on-gate uses, in hw units — not mpf_hi,
+    # which a caller may have narrowed)
+    candidates = [(0.0 if m < _GPU_GATE_PIVOT * hw.chip.mpf_max else m,
+                   0.0 if c < 1e-6 * cap_scale else c)
+                  for m, c in candidates]
+    candidates = list(dict.fromkeys(candidates))
+    outs, ok, overhead, flags, metrics = _eval_candidates(
+        spec, w, dt, n_chips, candidates, swing=swing, hw=hw)
+    ok = np.asarray(ok)
+    if not ok.any():
+        return None
+    overhead = np.asarray(overhead)
+    ranked = _rank_feasible(ok, overhead, candidates)
+    idx = int(ranked[0])
+    mpf, cap = candidates[idx]
+    row = jax.tree.map(lambda a: np.asarray(a)[idx], (flags, metrics))
+    gpu_sel, bat_sel = _design_pair(spec, mpf, cap, n_chips, swing, hw)
+    return {
+        "mpf_frac": mpf,
+        "battery_capacity_j": cap,
+        "energy_overhead": float(overhead[idx]),
+        "report": report_from_arrays(ok[idx], row[0], row[1]),
+        "device_mitigation": gpu_sel,
+        "rack_mitigation": bat_sel,
+        "mitigated": np.asarray(outs)[idx],
+        "alternatives": [{
+            "mpf_frac": candidates[i][0],
+            "battery_capacity_j": candidates[i][1],
+            "energy_overhead": float(overhead[i]),
+        } for i in ranked[:top_k]],
+        "loss_history": np.asarray(losses),
+        "method": "gradient",
+        "aux": {},
+    }
+
+
+def design(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int, *,
+           method: str = "hybrid", hw: Hardware = DEFAULT_HW,
+           period_hint_s: float = 2.0,
+           mpf_grid: Optional[Sequence[float]] = None,
+           cap_grid: Optional[Sequence[float]] = None,
+           top_k: int = 4, **gradient_kwargs) -> Optional[Dict]:
+    """The one (MPF, battery-capacity) design entry point.
+
+    method="grid"      the batched coarse grid search (``design_grid``);
+    method="gradient"  jitted Adam through the smooth-relaxed pipeline
+                       (``design_gradient``), lattice-seeded;
+    method="hybrid"    coarse grid first, gradient refinement seeded from
+                       its top-k feasible configs — never worse than the
+                       grid (the seeds are re-validated candidates), and
+                       finds the compliance frontier *between* grid points.
+
+    ``smoothing.design_mitigation`` remains the public face over this.
+    """
+    w = np.asarray(w, np.float32)
+    swing = float(w.max() - w.min())
+    if mpf_grid is None:
+        # the hardware caps how high a floor is programmable
+        mpf_grid = [m for m in (0.0, 0.5, 0.65, 0.8, 0.9)
+                    if m <= hw.chip.mpf_max + 1e-9]
+    if cap_grid is None:
+        cap_grid = [0.0] + [swing * period_hint_s * f for f in
+                            (0.125, 0.25, 0.5, 1.0, 2.0)]
+    if method == "grid":
+        return design_grid(spec, w, dt, n_chips, mpf_grid, cap_grid,
+                           swing=swing, hw=hw, top_k=top_k)
+    if method == "gradient":
+        return design_gradient(spec, w, dt, n_chips, swing=swing, hw=hw,
+                               period_hint_s=period_hint_s, top_k=top_k,
+                               **gradient_kwargs)
+    if method != "hybrid":
+        raise ValueError(f"method must be grid|gradient|hybrid, got {method!r}")
+    grid_sol = design_grid(spec, w, dt, n_chips, mpf_grid, cap_grid,
+                           swing=swing, hw=hw, top_k=top_k)
+    seeds = None
+    if grid_sol is not None:
+        seeds = [(a["mpf_frac"], a["battery_capacity_j"])
+                 for a in grid_sol["alternatives"]]
+        seeds.append((grid_sol["mpf_frac"], grid_sol["battery_capacity_j"]))
+    grad_sol = design_gradient(spec, w, dt, n_chips, swing=swing, hw=hw,
+                               period_hint_s=period_hint_s, seeds=seeds,
+                               top_k=top_k, **gradient_kwargs)
+    sols = [s for s in (grad_sol, grid_sol) if s is not None]
+    if not sols:
+        return None
+    # the same rounded (overhead, capacity, mpf) preference _rank_feasible
+    # applies within a solver — raw-float overhead comparison would let
+    # ~1e-7 noise hand the win back to the grid's bigger battery
+    best = min(sols, key=lambda s: (round(s["energy_overhead"], 6),
+                                    s["battery_capacity_j"], s["mpf_frac"]))
+    best = dict(best)
+    best["method"] = "hybrid"
+    return best

@@ -1,0 +1,81 @@
+"""Shared pure-JAX Adam core.
+
+One moment-update kernel serves two very different callers:
+
+* ``train/optimizer.py`` — the model-training AdamW (per-path weight-decay
+  masks, bf16 moment storage, warmup+cosine schedule) wraps ``adam_leaf``
+  per parameter leaf;
+* ``core/engine.py`` ``design_gradient`` — the mitigation-design loop runs
+  the tree-level ``adam_init``/``adam_update`` inside a ``lax.scan``,
+  optimizing a handful of physical parameters (MPF fraction, battery
+  capacity) instead of model weights.
+
+Everything here is functional and trace-safe: no host sync, no Python
+state, f32 update math with cast-back to the parameter dtype.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(
+        lambda x: (x.astype(F32) * scale).astype(x.dtype), grads), g
+
+
+def adam_leaf(p, g, m, v, count_f32, *, lr, b1, b2, eps,
+              weight_decay=0.0) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray]:
+    """One Adam(W) moment update on a single leaf: returns
+    ``(new_param, new_m, new_v)``.  Math in f32, results cast back to the
+    input dtypes; ``count_f32`` is the 1-indexed step as f32 (bias
+    correction).  ``weight_decay=0.0`` (exactly) skips the decoupled-decay
+    term entirely, so decay-exempt leaves stay bit-identical to plain Adam.
+    """
+    gf = g.astype(F32)
+    m2 = b1 * m.astype(F32) + (1 - b1) * gf
+    v2 = b2 * v.astype(F32) + (1 - b2) * gf * gf
+    mh = m2 / (1.0 - b1 ** count_f32)
+    vh = v2 / (1.0 - b2 ** count_f32)
+    step = mh / (jnp.sqrt(vh) + eps)
+    if not (isinstance(weight_decay, (int, float)) and weight_decay == 0.0):
+        step = step + weight_decay * p.astype(F32)
+    p2 = p.astype(F32) - lr * step
+    return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+
+def adam_init(params) -> Dict:
+    """Optimizer state for ``adam_update`` (f32 moments, scalar count)."""
+    zeros = lambda p: jnp.zeros(jnp.shape(p), F32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, *, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0) -> Tuple[object, Dict]:
+    """Tree-level Adam step (no per-leaf decay masks — the training-side
+    AdamW handles those): ``(new_params, new_state)``."""
+    count = state["count"] + 1
+    c = count.astype(F32)
+    flat = jax.tree.map(
+        lambda p, g, m, v: adam_leaf(p, g, m, v, c, lr=lr, b1=b1, b2=b2,
+                                     eps=eps, weight_decay=weight_decay),
+        params, grads, state["m"], state["v"])
+    outer = jax.tree.structure(params)
+    inner = jax.tree.structure((0, 0, 0))
+    new_params, new_m, new_v = jax.tree.transpose(outer, inner, flat)
+    return new_params, {"m": new_m, "v": new_v, "count": count}

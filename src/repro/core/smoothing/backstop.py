@@ -31,6 +31,14 @@ The escalation state machine runs as a lax.scan, so the whole monitor is
 jit/vmap-able; thresholds and response gains are pytree leaves, while the
 monitored bins, window/sustain/cooldown durations and the kernel switch
 fix shapes and counter constants and stay static.
+
+``smooth_tau`` (structure-static meta field) selects the gradient-design
+relaxation: 0 is the exact hard path below.  Escalation is physically
+discrete (level 3 is a coordinated breaker action), so tau > 0 keeps the
+hard levels in the *forward* pass and attaches a straight-through sigmoid
+engagement gate in the backward pass — ``amp_threshold_w`` and the
+response gains (``alpha1``/``shed_frac``/``idle_frac``) become
+differentiable without ever faking a fractional disconnect.
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.smoothing.base import np_apply, register_mitigation
+from repro.core.smoothing.relax import sigmoid_gate
 from repro.kernels.goertzel.ops import sliding_bin_power
 from repro.kernels.goertzel.ref import sliding_bin_power_jnp
 
@@ -65,6 +74,8 @@ class TelemetryBackstop:
     shed_frac: float = 0.7                  # level-2 cap (fraction of mean)
     idle_frac: float = 0.2                  # level-3 floor
     use_pallas: bool = True                 # structure-static kernel switch
+    # 0 = exact hard semantics; > 0 = straight-through gradient relaxation
+    smooth_tau: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "critical_hz", tuple(self.critical_hz))
@@ -105,9 +116,23 @@ class TelemetryBackstop:
             step, init, (worst, jnp.arange(n, dtype=jnp.int32)))
 
         mean = w.mean()
-        out = jnp.where(levels == 1, mean + self.alpha1 * (w - mean), w)
-        out = jnp.where(levels == 2, jnp.minimum(w, self.shed_frac * mean), out)
+        r1 = mean + self.alpha1 * (w - mean)
+        out = jnp.where(levels == 1, r1, w)
+        out = jnp.where(levels == 2, jnp.minimum(w, self.shed_frac * mean),
+                        out)
         out = jnp.where(levels == 3, self.idle_frac * mean, out)
+        if self.smooth_tau:
+            # forward: exactly the hard response above — the added term is
+            # identically zero (soft - stop_gradient(soft)).  backward: the
+            # sigmoid supplies d/d(amp_threshold_w) through the engagement
+            # margin; the response gains already get theirs through the
+            # selected jnp.where branches.  Off-path samples use the
+            # level-1 soft throttle as the response proxy (the first
+            # escalation any hit would trigger).
+            resp = jnp.where(levels > 0, out, r1)
+            soft = sigmoid_gate(worst - self.amp_threshold_w, self.smooth_tau,
+                                jnp.maximum(self.amp_threshold_w, 1.0))
+            out = out + (soft - jax.lax.stop_gradient(soft)) * (resp - w)
         aux = {
             "max_level": levels.max(),
             "detect_latency_s": jnp.where(detect >= 0, detect * dt, -1.0),
@@ -124,4 +149,4 @@ register_mitigation(
     TelemetryBackstop,
     data_fields=("amp_threshold_w", "alpha1", "shed_frac", "idle_frac"),
     meta_fields=("critical_hz", "window_s", "sustain_s", "cooldown_s",
-                 "use_pallas"))
+                 "use_pallas", "smooth_tau"))

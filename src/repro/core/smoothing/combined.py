@@ -55,24 +55,24 @@ register_mitigation(
 
 def design_mitigation(spec: UtilitySpec, w: np.ndarray, dt: float,
                       n_chips: int, hw: Hardware = DEFAULT_HW,
-                      period_hint_s: float = 2.0) -> Optional[Dict]:
+                      period_hint_s: float = 2.0, method: str = "grid",
+                      **design_kwargs) -> Optional[Dict]:
     """Smallest-overhead (MPF, battery) combo that passes ``spec``.
 
-    The candidate grid — MPF fraction (0 = off) ascending, battery capacity
-    (0 = off) geometric — is evaluated in ONE vmapped call; the selected
-    configuration is the first passing one in (MPF, capacity) order, which
-    preserves the serial solver's guarantee: minimal energy waste first,
-    then minimal capacity (cost / embodied carbon, the paper's Sec. IV-C
-    concern).
+    ``method`` selects the solver (the public face over
+    ``engine.design``): "grid" evaluates the coarse candidate grid — MPF
+    fraction (0 = off) ascending, battery capacity (0 = off) geometric —
+    in ONE vmapped call and picks the first passing configuration in
+    (MPF, capacity) order, preserving the serial solver's guarantee:
+    minimal energy waste first, then minimal capacity (cost / embodied
+    carbon, the paper's Sec. IV-C concern).  "gradient" descends on the
+    smooth-relaxed pipeline instead of the grid; "hybrid" refines the
+    grid's top-k feasible configs by gradient (never worse than the grid).
     """
-    from repro.core.engine import design_grid  # lazy: engine imports smoothing
+    from repro.core.engine import design  # lazy: engine imports smoothing
 
-    swing = float(w.max() - w.min())
-    mpf_grid = [0.0, 0.5, 0.65, 0.8, 0.9]
-    cap_grid = [0.0] + [swing * period_hint_s * f for f in
-                        (0.125, 0.25, 0.5, 1.0, 2.0)]
-    sol = design_grid(spec, w, dt, n_chips, mpf_grid, cap_grid,
-                      swing=swing, hw=hw)
+    sol = design(spec, w, dt, n_chips, method=method, hw=hw,
+                 period_hint_s=period_hint_s, **design_kwargs)
     if sol is None:
         return None
     # serial confirmation of the winner: exact aux traces for the caller

@@ -21,6 +21,13 @@ StratoSim and the Table-I comparison.
 The engage/threshold/interference knobs are pytree leaves (vmappable);
 telemetry timing and back-off cadence fix sampling indices, so they are
 static metadata.
+
+``smooth_tau`` (structure-static meta field) selects the gradient-design
+relaxation: 0 is the exact hard controller below; > 0 replaces the engage
+threshold's hard gate with a sigmoid and routes the ballast quantizer
+through a straight-through ceil (the GEMM burner's intensity steps are
+physically discrete, so the forward stays quantized and only the backward
+pass is relaxed).
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ import numpy as np
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.smoothing.base import (energy_overhead_jax, np_apply,
                                        register_mitigation)
+from repro.core.smoothing.relax import sigmoid_gate, ste_ceil
 from repro.core.telemetry import TelemetrySource
 
 
@@ -47,6 +55,9 @@ class Firefly:
     ballast_steps: int = 8               # intensity quantization levels
     interference: float = 0.04           # primary slowdown while co-running
     hw: Hardware = DEFAULT_HW
+    # 0 = exact hard semantics; > 0 = gradient-design relaxation (static
+    # so hard and smooth configs never stack into one vmapped grid)
+    smooth_tau: float = 0.0
 
     def apply_jax(self, w: jnp.ndarray, dt: float,
                   key=None) -> Tuple[jnp.ndarray, Dict]:
@@ -63,8 +74,15 @@ class Firefly:
 
         raw = jnp.clip(target - meas, 0.0, None)
         step_w = target / self.ballast_steps
-        ballast = jnp.ceil(raw / step_w - 1e-9) * step_w
-        ballast = jnp.where(meas < thresh, ballast, 0.0)
+        if self.smooth_tau:
+            # forward stays quantized (straight-through ceil); the engage
+            # gate relaxes to a sigmoid at temperature smooth_tau
+            ballast = ste_ceil(raw / step_w) * step_w
+            ballast = ballast * sigmoid_gate(thresh - meas,
+                                             self.smooth_tau, tdp)
+        else:
+            ballast = jnp.ceil(raw / step_w - 1e-9) * step_w
+            ballast = jnp.where(meas < thresh, ballast, 0.0)
         ballast = jnp.where(jnp.asarray(phase), 0.0, ballast)
         out = jnp.minimum(w + ballast, tdp)
 
@@ -96,4 +114,4 @@ register_mitigation(
     Firefly,
     data_fields=("engage_frac", "threshold_frac", "interference"),
     meta_fields=("telemetry", "backoff_every_s", "backoff_dur_s",
-                 "ballast_steps", "hw"))
+                 "ballast_steps", "hw", "smooth_tau"))

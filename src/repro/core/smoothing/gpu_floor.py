@@ -14,6 +14,14 @@ Energy-overhead accounting reproduces the paper's Fig. 6 experiment
 
 All continuous parameters are pytree leaves, so an (MPF x ramp) grid vmaps
 through ``apply_jax`` in one compiled call (see core/engine.py).
+
+``smooth_tau`` (structure-static meta field) selects the gradient-design
+relaxation: 0 runs the exact hard semantics below; > 0 replaces the idle
+counter's step gates and the floor/cap selects with sigmoid gates and a
+logaddexp max at temperature tau, so ``jax.grad`` through ``apply_jax``
+sees useful sensitivities for every leaf (the hard path zeroes the
+gradient of ``stop_delay_s`` and ``activity_threshold_frac`` entirely and
+leaves ``mpf_frac`` with a measure-zero subgradient at the kinks).
 """
 from __future__ import annotations
 
@@ -27,6 +35,7 @@ import numpy as np
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.smoothing.base import (energy_overhead_jax, np_apply,
                                        register_mitigation)
+from repro.core.smoothing.relax import sigmoid_gate, smooth_max
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +49,10 @@ class GpuPowerSmoothing:
     # rack PSUs the EDP must be programmed down — 1.0 clamps output at TDP
     edp_cap_frac: float = 1.0
     hw: Hardware = DEFAULT_HW
+    # 0 = exact hard semantics (the forward-engine path); > 0 = the
+    # gradient-design relaxation temperature.  Static so hard and smooth
+    # configs never stack into one vmapped grid.
+    smooth_tau: float = 0.0
 
     def __post_init__(self):
         # only enforceable on concrete params; traced/batched leaves are
@@ -49,6 +62,8 @@ class GpuPowerSmoothing:
                 f"GB200 feature caps MPF at {self.hw.chip.mpf_max:.0%} TDP")
 
     def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
+        if self.smooth_tau:
+            return self._apply_smooth(w, dt)
         tdp = self.hw.chip.tdp_w
         mpf = self.mpf_frac * tdp
         thresh = self.activity_threshold_frac * tdp
@@ -75,6 +90,39 @@ class GpuPowerSmoothing:
         }
         return out, aux
 
+    def _apply_smooth(self, w: jnp.ndarray, dt: float
+                      ) -> Tuple[jnp.ndarray, Dict]:
+        """Relaxed semantics at temperature ``smooth_tau``: the activity
+        gate, idle-counter reset, stop-delay gate, and floor/cap selects
+        become sigmoid blends; the ramp clip stays hard (piecewise linear
+        already carries a subgradient everywhere)."""
+        tau = self.smooth_tau
+        tdp = self.hw.chip.tdp_w
+        mpf = self.mpf_frac * tdp
+        thresh = self.activity_threshold_frac * tdp
+        ru, rd = self.ramp_up_w_per_s * dt, self.ramp_down_w_per_s * dt
+        stop_n = self.stop_delay_s / dt
+        cap = tdp * jnp.minimum(self.edp_cap_frac, self.hw.chip.edp_factor)
+
+        def step(carry, p):
+            o_prev, idle_n = carry
+            active = sigmoid_gate(p - thresh, tau, tdp)
+            idle_n = (1.0 - active) * (idle_n + 1.0)   # soft counter reset
+            floor = mpf * sigmoid_gate(stop_n - idle_n, tau, stop_n + 1.0)
+            target = smooth_max(p, floor, tau, tdp)
+            target = -smooth_max(-target, -cap, tau, tdp)  # smooth min
+            o = jnp.clip(target, o_prev - rd, o_prev + ru)
+            return (o, idle_n), o
+
+        w = jnp.asarray(w, jnp.float32)
+        (_, _), out = jax.lax.scan(step, (w[0], jnp.asarray(0.0, jnp.float32)),
+                                   w, unroll=8)
+        aux = {
+            "energy_overhead": energy_overhead_jax(w, out),
+            "floor_w": jnp.asarray(mpf, jnp.float32),
+        }
+        return out, aux
+
     def apply(self, w: np.ndarray, dt: float) -> Tuple[np.ndarray, Dict]:
         return np_apply(self, w, dt)
 
@@ -83,4 +131,4 @@ register_mitigation(
     GpuPowerSmoothing,
     data_fields=("mpf_frac", "ramp_up_w_per_s", "ramp_down_w_per_s",
                  "stop_delay_s", "activity_threshold_frac", "edp_cap_frac"),
-    meta_fields=("hw",))
+    meta_fields=("hw", "smooth_tau"))

@@ -1,0 +1,70 @@
+"""Temperature-parameterized smooth relaxations of discrete mitigation
+semantics, for gradient-based design (core/engine.py ``design_gradient``).
+
+Every mitigation carries a structure-static ``smooth_tau`` meta field:
+
+  tau == 0   the exact hard semantics — bit-identical to the pre-gradient
+             code path (parity-tested), and the ONLY path the forward
+             scenario engine / Study / serve layers ever run;
+  tau  > 0   the design-time relaxation: hard gates become sigmoids and
+             hard switches become tanh blends at temperature ``tau``, so
+             ``jax.grad`` sees a useful loss landscape instead of the
+             zero-measure subgradients of step functions.
+
+``tau`` is dimensionless; each call site scales it by the natural scale of
+its comparison (TDP for power gates, a counter horizon for timers), so one
+temperature knob relaxes a whole mitigation coherently and annealing
+tau -> 0 recovers the hard behavior continuously.
+
+Where a relaxation would change *forward* behavior that is physically
+discrete (the Firefly ballast quantizer: the GEMM burner really does run
+at one of N intensities; the backstop's breaker escalation), the forward
+stays hard and only the backward pass is relaxed — a straight-through
+estimator via ``jax.custom_vjp`` (``ste_ceil``) or the stop-gradient
+identity ``hard + (soft - stop_gradient(soft)) * surrogate`` (see
+``TelemetryBackstop._apply_smooth``'s engagement gate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sigmoid_gate(x: jnp.ndarray, tau: float, scale: float) -> jnp.ndarray:
+    """Smooth 0/1 gate: ``sigmoid(x / (tau * scale))`` — approaches
+    ``(x > 0)`` as ``tau -> 0``.  ``scale`` is the natural magnitude of
+    ``x`` (TDP for power comparisons, counts for timers), so ``tau`` stays
+    a dimensionless temperature."""
+    return jax.nn.sigmoid(x / (tau * scale))
+
+
+def soft_sign(x: jnp.ndarray, tau: float, scale: float) -> jnp.ndarray:
+    """Smooth ``jnp.sign``: ``tanh(x / (tau * scale))``."""
+    return jnp.tanh(x / (tau * scale))
+
+
+def smooth_max(a: jnp.ndarray, b: jnp.ndarray, tau: float,
+               scale: float) -> jnp.ndarray:
+    """Smooth elementwise maximum via logaddexp at temperature
+    ``tau * scale``; upper-bounds the hard max by ``tau*scale*log 2``."""
+    t = tau * scale
+    return t * jnp.logaddexp(a / t, b / t)
+
+
+@jax.custom_vjp
+def ste_ceil(x: jnp.ndarray) -> jnp.ndarray:
+    """``jnp.ceil(x - 1e-9)`` forward, identity backward (straight-through
+    quantizer — the Firefly ballast's intensity steps are physically
+    discrete, so the relaxation lives only in the VJP)."""
+    return jnp.ceil(x - 1e-9)
+
+
+def _ste_ceil_fwd(x):
+    return ste_ceil(x), None
+
+
+def _ste_ceil_bwd(_, g):
+    return (g,)
+
+
+ste_ceil.defvjp(_ste_ceil_fwd, _ste_ceil_bwd)

@@ -8,12 +8,21 @@ a critical band and a cap on the fraction of AC spectral energy inside it.
 pure traced mirror the batched scenario engine jits/vmaps (spec thresholds
 are static, the waveform is the traced input), returning per-violation
 boolean flags instead of a string list so verdicts vectorize.
+
+``loss_jax`` turns the same metrics into a *smooth scalar objective* for
+gradient-based mitigation design (core/engine.py ``design_gradient``):
+each hard threshold comparison becomes a quadratic hinge on the
+normalized excess, so the loss is zero on (margin-shrunk) compliant
+waveforms, positive and differentiable outside them, and its components
+line up one-to-one with the violation flags.  Both paths share
+``_metrics_jax`` so the objective can never drift from the verdict.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -95,19 +104,14 @@ class UtilitySpec:
                 v.append("band_amplitude")
         return SpecReport(ok=not v, violations=tuple(v), metrics=m)
 
-    def validate_jax(self, w: jnp.ndarray, dt: float
-                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray],
-                                Dict[str, jnp.ndarray]]:
-        """Traced mirror of ``validate``: (ok, violation flags, metrics).
-
-        Waveform length and dt are static (they fix window/bin shapes);
-        thresholds come from this (static) spec.  Use ``report_from_arrays``
-        to rebuild a ``SpecReport`` from one row of vmapped outputs.
-        """
+    def _metrics_jax(self, w: jnp.ndarray, dt: float
+                     ) -> Dict[str, jnp.ndarray]:
+        """The traced metric set shared by ``validate_jax`` (hard flags)
+        and ``loss_jax`` (smooth hinges).  Keys are present iff the
+        waveform is long enough to measure them — lengths are static, so
+        the key set is too."""
         w = jnp.asarray(w, jnp.float32)
-        flags: Dict[str, jnp.ndarray] = {}
         m: Dict[str, jnp.ndarray] = {}
-        false = jnp.asarray(False)
         # ---- ramps (averaged over the metering window)
         k = max(int(self.time.ramp_window_s / dt), 1)
         if w.shape[-1] > k:
@@ -115,11 +119,6 @@ class UtilitySpec:
             dp = jnp.diff(box) / dt
             m["max_ramp_up_w_per_s"] = jnp.maximum(dp.max(), 0.0)
             m["max_ramp_down_w_per_s"] = jnp.maximum(-dp.min(), 0.0)
-            flags["ramp_up"] = m["max_ramp_up_w_per_s"] > self.time.ramp_up_w_per_s
-            flags["ramp_down"] = (m["max_ramp_down_w_per_s"]
-                                  > self.time.ramp_down_w_per_s)
-        else:
-            flags["ramp_up"] = flags["ramp_down"] = false
         # ---- dynamic range in sliding window (same strided starts as the
         # numpy path, but as one [windows, n] gather instead of a loop)
         n = max(int(self.time.window_s / dt), 2)
@@ -133,25 +132,95 @@ class UtilitySpec:
                 # the numpy path reports 0.0 — mirror that, don't drop the key
                 rng = jnp.asarray(0.0, jnp.float32)
             m["dynamic_range_w"] = rng
-            flags["dynamic_range"] = rng > self.time.dynamic_range_w
-        else:
-            flags["dynamic_range"] = false
         # ---- frequency domain
         f_lo, f_hi = self.freq.band_hz
-        frac = band_energy_fraction_jax(w, dt, f_lo, f_hi)
-        m["band_energy_fraction"] = frac
+        m["band_energy_fraction"] = band_energy_fraction_jax(w, dt, f_lo, f_hi)
         m["ac_rms_frac"] = jnp.std(w) / jnp.maximum(jnp.mean(w), 1e-9)
-        material = m["ac_rms_frac"] >= self.freq.min_ac_rms_frac
-        flags["band_energy"] = material & (frac > self.freq.max_energy_fraction)
         if self.freq.max_bin_amplitude_w is not None:
-            amp = band_amplitude_w_jax(w, dt, f_lo, f_hi)
-            m["band_bin_amplitude_w"] = amp
-            flags["band_amplitude"] = amp > self.freq.max_bin_amplitude_w
+            m["band_bin_amplitude_w"] = band_amplitude_w_jax(w, dt, f_lo, f_hi)
+        return m
+
+    def validate_jax(self, w: jnp.ndarray, dt: float
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray],
+                                Dict[str, jnp.ndarray]]:
+        """Traced mirror of ``validate``: (ok, violation flags, metrics).
+
+        Waveform length and dt are static (they fix window/bin shapes);
+        thresholds come from this (static) spec.  Use ``report_from_arrays``
+        to rebuild a ``SpecReport`` from one row of vmapped outputs.
+        """
+        m = self._metrics_jax(w, dt)
+        flags: Dict[str, jnp.ndarray] = {}
+        false = jnp.asarray(False)
+        if "max_ramp_up_w_per_s" in m:
+            flags["ramp_up"] = m["max_ramp_up_w_per_s"] > self.time.ramp_up_w_per_s
+            flags["ramp_down"] = (m["max_ramp_down_w_per_s"]
+                                  > self.time.ramp_down_w_per_s)
+        else:
+            flags["ramp_up"] = flags["ramp_down"] = false
+        if "dynamic_range_w" in m:
+            flags["dynamic_range"] = (m["dynamic_range_w"]
+                                      > self.time.dynamic_range_w)
+        else:
+            flags["dynamic_range"] = false
+        material = m["ac_rms_frac"] >= self.freq.min_ac_rms_frac
+        flags["band_energy"] = material & (m["band_energy_fraction"]
+                                           > self.freq.max_energy_fraction)
+        if "band_bin_amplitude_w" in m:
+            flags["band_amplitude"] = (m["band_bin_amplitude_w"]
+                                       > self.freq.max_bin_amplitude_w)
         else:
             flags["band_amplitude"] = false
         ok = ~(flags["ramp_up"] | flags["ramp_down"] | flags["dynamic_range"]
                | flags["band_energy"] | flags["band_amplitude"])
         return ok, flags, m
+
+    def loss_jax(self, w: jnp.ndarray, dt: float, *, margin: float = 0.0
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Smooth scalar compliance objective: ``(total, components)``.
+
+        Each component is the squared hinge of a ``validate_jax`` metric's
+        normalized excess over its ``(1 - margin)``-shrunk limit — zero on
+        (margin-)compliant waveforms, positive and differentiable outside,
+        keyed like the violation flags.  ``margin`` gives a gradient
+        optimizer strictly-interior targets so the final *hard* validation
+        of its solution has slack.  The band-energy materiality gate
+        relaxes to a sigmoid (the hard ``>=`` would zero the gradient at
+        the gate); everything upstream uses hard max/min reductions, whose
+        subgradients are exact on the active window.
+        """
+        m = self._metrics_jax(w, dt)
+        zero = jnp.asarray(0.0, jnp.float32)
+
+        def hinge(metric, limit):
+            lim = jnp.maximum(jnp.asarray(limit, jnp.float32), 1e-30)
+            return jnp.square(jnp.maximum(metric / lim - (1.0 - margin), 0.0))
+
+        comps: Dict[str, jnp.ndarray] = {
+            "ramp_up": (hinge(m["max_ramp_up_w_per_s"],
+                              self.time.ramp_up_w_per_s)
+                        if "max_ramp_up_w_per_s" in m else zero),
+            "ramp_down": (hinge(m["max_ramp_down_w_per_s"],
+                                self.time.ramp_down_w_per_s)
+                          if "max_ramp_down_w_per_s" in m else zero),
+            "dynamic_range": (hinge(m["dynamic_range_w"],
+                                    self.time.dynamic_range_w)
+                              if "dynamic_range_w" in m else zero),
+        }
+        min_frac = max(self.freq.min_ac_rms_frac, 1e-9)
+        material = jax.nn.sigmoid((m["ac_rms_frac"] / min_frac - 1.0) / 0.25)
+        # far below materiality the sigmoid tail would still leak a loss
+        # on numerically-flat waveforms (whose band fraction is noise);
+        # hard-zero it there — the gradient only matters near the gate
+        material = jnp.where(m["ac_rms_frac"] < 0.5 * min_frac, 0.0,
+                             material)
+        comps["band_energy"] = material * hinge(m["band_energy_fraction"],
+                                                self.freq.max_energy_fraction)
+        comps["band_amplitude"] = (hinge(m["band_bin_amplitude_w"],
+                                         self.freq.max_bin_amplitude_w)
+                                   if "band_bin_amplitude_w" in m else zero)
+        total = sum(comps[v] for v in VIOLATION_ORDER)
+        return total, comps
 
 
 def report_from_arrays(ok, flags: Dict, metrics: Dict) -> "SpecReport":

@@ -37,6 +37,11 @@ Results come back as a ``StudyResult``: one flat record per scenario with
 filter / pivot / export helpers, plus per-row ``SimResult`` access.  The
 spec axis is deduplicated against the pipeline: physics runs once per
 (workload, fleet, config, seed) row, each spec then judges every row.
+
+Beyond judging *declared* configs, ``Study.optimize()`` runs the engine's
+``design`` solver (grid / gradient / hybrid) per (workload, fleet, spec)
+cell and returns the solved configurations as ``designed=True`` records
+in the same schema — ``result.filter(designed=True)`` separates them.
 """
 from __future__ import annotations
 
@@ -49,13 +54,16 @@ from typing import (Dict, Iterator, List, Mapping, Optional, Sequence,
 import jax
 import numpy as np
 
-from repro.core.engine import BatchResult, analyze_batch, simulate_batch
+from repro.core.engine import (BatchResult, analyze_batch, design,
+                               simulate_batch)
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.phases import IterationTimeline
 from repro.core.smoothing.base import Mitigation
 from repro.core.spec import UtilitySpec, report_from_arrays
+from repro.core.spectrum import critical_band_report
+from repro.core.waveform import (WaveformConfig, aggregate, chip_waveform,
+                                 phase_levels)
 from repro.core.stratosim import SimResult
-from repro.core.waveform import WaveformConfig, phase_levels
 
 PADDING_MODES = ("auto", "pad", "bucket")
 
@@ -306,6 +314,80 @@ class Study:
 
         return self._assemble(rows, row_len, rowdata, analysis)
 
+    def optimize(self, *, method: str = "hybrid",
+                 seed: Optional[int] = None,
+                 **design_kwargs) -> "StudyResult":
+        """Run a mitigation *design* per (workload, fleet, spec) cell.
+
+        Where ``run()`` judges the study's declared configs, ``optimize()``
+        asks the engine's ``design`` solver (method = "grid" | "gradient" |
+        "hybrid") for a minimal-overhead (MPF, battery) configuration that
+        passes each declared spec, and returns one record per cell with
+        ``designed=True`` — the same record schema as ``run()`` (so
+        designed rows query/pivot/export alongside declared ones via
+        ``filter(designed=True)``) plus the solved ``mpf_frac`` /
+        ``battery_capacity_j``.  Cells with no feasible design come back
+        as ``spec_ok=False`` with ``violations=("infeasible",)``.
+
+        ``seed`` picks the jitter draw the design waveform uses (default:
+        the study's first seed).  Extra keyword arguments flow to
+        ``engine.design`` (``steps``, ``smooth_tau``, ``top_k``, ...).
+        """
+        cfg, hw = self.wave_cfg, self.hw
+        seed = self.seeds[0] if seed is None else int(seed)
+        records: List[Dict] = []
+        for wname, tl in self.workloads.items():
+            chip = chip_waveform(tl, cfg, hw)
+            for n_chips in self.fleets:
+                w = aggregate(chip, n_chips, cfg, hw, seed=seed,
+                              sample_chips=self.sample_chips)
+                for spec_name, spec in self.specs:
+                    if spec is None:
+                        continue
+                    sol = design(spec, w, cfg.dt, n_chips, method=method,
+                                 hw=hw, **design_kwargs)
+                    rec = {
+                        "index": len(records),
+                        "row": -1,           # no pipeline row backs a design
+                        "workload": wname,
+                        "n_chips": n_chips,
+                        "config": f"designed[{method}]",
+                        "spec": spec_name,
+                        "seed": seed,
+                        "period_s": float(tl.period_s),
+                        "n_samples": len(w),
+                        "mean_mw": float(np.mean(w)) / 1e6,
+                        "swing_mw": float(w.max() - w.min()) / 1e6,
+                        "designed": True,
+                    }
+                    if sol is None:
+                        rec.update({
+                            "swing_mitigated_mw": rec["swing_mw"],
+                            "energy_overhead": 0.0,
+                            "paper_band_frac": None,
+                            "spec_ok": False,
+                            "violations": ("infeasible",),
+                            "metrics": {},
+                            "mpf_frac": None,
+                            "battery_capacity_j": None,
+                        })
+                    else:
+                        mit = np.asarray(sol["mitigated"])
+                        rec.update({
+                            "swing_mitigated_mw":
+                                float(mit.max() - mit.min()) / 1e6,
+                            "energy_overhead": float(sol["energy_overhead"]),
+                            "paper_band_frac": float(critical_band_report(
+                                mit, cfg.dt)["paper_band_0p2_3hz"]),
+                            "spec_ok": sol["report"].ok,
+                            "violations": sol["report"].violations,
+                            "metrics": sol["report"].metrics,
+                            "mpf_frac": sol["mpf_frac"],
+                            "battery_capacity_j": sol["battery_capacity_j"],
+                        })
+                    records.append(rec)
+        return StudyResult(records=records)
+
     @staticmethod
     def _structure_groups(rows) -> List[List[int]]:
         """Row indices grouped by (device, rack) pytree structure.  A None
@@ -380,6 +462,7 @@ class Study:
                     "energy_overhead": float(res.energy_overhead[b]),
                     "paper_band_frac":
                         float(first["bands_mitigated"]["paper_band_0p2_3hz"]),
+                    "designed": False,
                 }
                 if spec is not None:
                     report = report_from_arrays(
@@ -412,7 +495,11 @@ class StudyResult:
     Each record is one (workload, fleet, config, seed, spec) cell:
     identity fields, swing/overhead/band metrics, and — when a spec was
     declared — ``spec_ok`` / ``violations`` / the spec's metric dict.
-    ``waveforms`` (when the study kept them) is indexed by ``record["row"]``.
+    ``designed`` distinguishes ``Study.optimize()`` records (solved
+    configurations, carrying ``mpf_frac``/``battery_capacity_j``) from
+    ``run()`` records (declared configurations); ``filter(designed=True)``
+    selects them.  ``waveforms`` (when the study kept them) is indexed by
+    ``record["row"]``.
     """
     records: List[Dict]
     waveforms: Optional[List[Dict]] = None

@@ -1,10 +1,21 @@
 """Pure-JAX AdamW with decoupled weight decay, global-norm clipping, and a
 warmup+cosine schedule. Moments are stored in ``moment_dtype`` (bf16 for the
->=100B dry-run configs) with f32 update math."""
+>=100B dry-run configs) with f32 update math.
+
+The moment math and norm clipping live in ``repro.core.optim`` (shared
+with the mitigation-design gradient loop in ``core/engine.py``); this
+module keeps the training-specific pieces: the schedule, bf16 moment
+storage, and the per-path weight-decay mask.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.optim import adam_leaf, clip_by_global_norm, global_norm
+
+__all__ = ["init_opt_state", "lr_schedule", "global_norm",
+           "clip_by_global_norm", "adamw_update"]
 
 F32 = jnp.float32
 
@@ -26,17 +37,6 @@ def lr_schedule(step, tcfg):
     return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
 
 
-def global_norm(tree):
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
-                        for x in jax.tree.leaves(tree)))
-
-
-def clip_by_global_norm(grads, max_norm):
-    g = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
-    return jax.tree.map(lambda x: (x.astype(F32) * scale).astype(x.dtype), grads), g
-
-
 _DECAY_EXEMPT = ("norm", "bias", "gate", "mu", "w0", "u", "dt_bias", "gn_",
                  "A_log", "D")
 
@@ -49,21 +49,13 @@ def _decay_mask(path_names) -> bool:
 def adamw_update(params, grads, opt_state, tcfg, lr):
     count = opt_state["count"] + 1
     c = count.astype(F32)
-    bc1 = 1.0 - tcfg.b1 ** c
-    bc2 = 1.0 - tcfg.b2 ** c
 
     def upd(keypath, p, g, m, v):
-        gf = g.astype(F32)
-        m2 = tcfg.b1 * m.astype(F32) + (1 - tcfg.b1) * gf
-        v2 = tcfg.b2 * v.astype(F32) + (1 - tcfg.b2) * gf * gf
-        mh = m2 / bc1
-        vh = v2 / bc2
-        step = mh / (jnp.sqrt(vh) + tcfg.eps)
-        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
-        if _decay_mask(names):
-            step = step + tcfg.weight_decay * p.astype(F32)
-        p2 = p.astype(F32) - lr * step
-        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in keypath)
+        wd = tcfg.weight_decay if _decay_mask(names) else 0.0
+        return adam_leaf(p, g, m, v, c, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+                         eps=tcfg.eps, weight_decay=wd)
 
     flat = jax.tree_util.tree_map_with_path(
         upd, params, grads, opt_state["m"], opt_state["v"])

@@ -1,0 +1,436 @@
+"""Differentiable mitigation design: smooth relaxations, the spec hinge
+loss, and the gradient/hybrid design solvers.
+
+Three layers under test:
+
+* each mitigation's ``smooth_tau`` relaxation — finite-difference gradient
+  checks at tau > 0, and tau -> 0 forward parity with the hard semantics
+  (tau = 0 runs the *same code path* as before this feature existed, so
+  the engine/Study/serve layers are bit-unaffected);
+* ``UtilitySpec.loss_jax`` — zero iff compliant, components aligned with
+  the violation flags, differentiable w.r.t. the waveform;
+* ``engine.design`` — gradient descent produces a spec-compliant config
+  whose energy overhead is never worse than the best grid-search config,
+  top-k alternatives, ``Study.optimize`` records, and the serve fallback.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import engine
+from repro.core.hardware import DEFAULT_HW
+
+DT = 0.002
+TDP = DEFAULT_HW.chip.tdp_w
+
+
+def chip_square(period=2.0, duty=0.75, secs=10.0, dt=DT):
+    lo = DEFAULT_HW.chip.comm_w
+    t = np.arange(int(secs / dt)) * dt
+    return np.where((t % period) < duty * period, TDP, lo).astype(np.float32)
+
+
+def central_diff(f, x, eps):
+    return (f(x + eps) - f(x - eps)) / (2.0 * eps)
+
+
+# ---------------------------------------------------------------------------
+# finite-difference gradient checks (smooth_tau > 0)
+# ---------------------------------------------------------------------------
+
+def test_gpu_floor_smooth_gradient_matches_fd():
+    w = jnp.asarray(chip_square())
+    gf = core.GpuPowerSmoothing(mpf_frac=0.7, ramp_up_w_per_s=2000,
+                                ramp_down_w_per_s=2000, stop_delay_s=1.0,
+                                smooth_tau=0.05)
+
+    def loss(mpf):
+        out, _ = dataclasses.replace(gf, mpf_frac=mpf).apply_jax(w, DT)
+        return jnp.mean(out) / TDP
+
+    g = float(jax.grad(loss)(0.7))
+    fd = float(central_diff(loss, 0.7, 0.01))
+    assert g == pytest.approx(fd, rel=0.05)
+    assert g > 0  # a higher floor burns more energy
+
+
+def test_battery_smooth_gradient_matches_fd():
+    w = jnp.asarray(chip_square() * 512)
+    swing = float(w.max() - w.min())
+    bat = core.RackBattery(capacity_j=0.2 * swing, max_discharge_w=swing,
+                           max_charge_w=swing, target_tau_s=10.0,
+                           smooth_tau=0.05)
+
+    def loss(cap_frac):
+        b = dataclasses.replace(bat, capacity_j=cap_frac * swing)
+        out, _ = b.apply_jax(w, DT)
+        return jnp.mean(jnp.square((out - out.mean()) / w.mean()))
+
+    # capacity binding at 0.2x swing: more capacity -> smoother output
+    g = float(jax.grad(loss)(0.2))
+    fd = float(central_diff(loss, 0.2, 0.02))
+    assert g == pytest.approx(fd, rel=0.1)
+    assert g < 0
+
+
+def test_firefly_smooth_gradient_matches_fd():
+    # fine ballast quantization: the straight-through ceil's surrogate
+    # gradient converges to the true sensitivity as steps shrink
+    w = jnp.asarray(chip_square())
+    ff = core.Firefly(smooth_tau=0.05, ballast_steps=256)
+
+    def loss(engage):
+        out, _ = dataclasses.replace(ff, engage_frac=engage).apply_jax(w, DT)
+        return jnp.mean(out) / TDP
+
+    g = float(jax.grad(loss)(0.85))
+    fd = float(central_diff(loss, 0.85, 0.02))
+    assert g == pytest.approx(fd, rel=0.1)
+    assert g > 0  # filling deeper valleys costs energy
+
+
+def test_backstop_off_path_gradient_is_zero_and_finite():
+    # quiet trace: the monitor never escalates, the response is identity,
+    # and every parameter gradient is (finite) zero — matching fd
+    w = jnp.asarray(np.full(4000, 5e8, np.float32))
+    bs = core.TelemetryBackstop(use_pallas=False, window_s=2.0,
+                                smooth_tau=0.05)
+
+    def loss(thresh):
+        out, _ = dataclasses.replace(bs, amp_threshold_w=thresh).apply_jax(
+            w, DT)
+        return jnp.mean(out) / 5e8
+
+    g = float(jax.grad(loss)(1e6))
+    assert np.isfinite(g)
+    assert abs(g) < 1e-9
+    assert abs(float(central_diff(loss, 1e6, 1e4))) < 1e-9
+
+
+def test_combined_smooth_gradient_matches_fd():
+    n_chips = 64
+    w = jnp.asarray(chip_square() * n_chips)
+    swing = float(w.max() - w.min())
+    gpu = core.GpuPowerSmoothing(mpf_frac=0.7, ramp_up_w_per_s=2000,
+                                 ramp_down_w_per_s=2000, stop_delay_s=1.0,
+                                 smooth_tau=0.05)
+    bat = core.RackBattery(capacity_j=0.5 * swing, max_discharge_w=swing,
+                           max_charge_w=swing, target_tau_s=10.0,
+                           smooth_tau=0.05)
+
+    def loss(mpf):
+        cm = core.CombinedMitigation(
+            dataclasses.replace(gpu, mpf_frac=mpf), bat, n_chips)
+        out, _ = cm.apply_jax(w, DT)
+        return jnp.mean(out) / (TDP * n_chips)
+
+    g = float(jax.grad(loss)(0.7))
+    fd = float(central_diff(loss, 0.7, 0.01))
+    assert g == pytest.approx(fd, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# tau -> 0 parity: smooth forward == hard forward
+# ---------------------------------------------------------------------------
+
+def test_tau_zero_is_the_hard_path_bitwise():
+    w = chip_square()
+    for hard in (core.GpuPowerSmoothing(mpf_frac=0.7, stop_delay_s=1.0),
+                 core.RackBattery(capacity_j=1e5, max_discharge_w=1e5,
+                                  max_charge_w=1e5),
+                 core.Firefly(),
+                 core.TelemetryBackstop(use_pallas=False, window_s=2.0)):
+        out_h, _ = hard.apply(w, DT)
+        out_0, _ = dataclasses.replace(hard, smooth_tau=0.0).apply(w, DT)
+        np.testing.assert_array_equal(out_h, out_0)
+
+
+def test_smooth_forward_converges_to_hard_as_tau_to_zero():
+    w = chip_square()
+    hard_gpu = core.GpuPowerSmoothing(mpf_frac=0.7, ramp_up_w_per_s=2000,
+                                      ramp_down_w_per_s=2000,
+                                      stop_delay_s=1.0)
+    out_h, _ = hard_gpu.apply(w, DT)
+    err = []
+    for tau in (0.1, 0.01, 1e-4):
+        out_s, _ = dataclasses.replace(hard_gpu, smooth_tau=tau).apply(w, DT)
+        err.append(float(np.abs(out_s - out_h).max()) / TDP)
+    assert err[0] > err[-1]
+    assert err[-1] < 1e-3
+
+    swing = float(w.max() - w.min()) * 512
+    hard_bat = core.RackBattery(capacity_j=0.3 * swing, max_discharge_w=swing,
+                                max_charge_w=swing, target_tau_s=10.0)
+    out_h, _ = hard_bat.apply(w * 512, DT)
+    out_s, _ = dataclasses.replace(hard_bat, smooth_tau=1e-4).apply(w * 512,
+                                                                    DT)
+    np.testing.assert_allclose(out_s, out_h, rtol=1e-4, atol=1e-3 * swing)
+
+    hard_ff = core.Firefly()
+    out_h, _ = hard_ff.apply(w, DT)
+    out_s, _ = dataclasses.replace(hard_ff, smooth_tau=1e-4).apply(w, DT)
+    np.testing.assert_allclose(out_s, out_h, atol=1e-2 * TDP)
+
+
+def test_backstop_smooth_forward_is_exactly_hard():
+    """The backstop relaxation is straight-through: escalation stays
+    discrete in the forward pass at ANY tau (a fractional breaker action
+    would be fiction), so smooth and hard forwards agree bitwise — on a
+    trace that escalates, not just on the quiet path."""
+    n = 8000
+    t = np.arange(n) * DT
+    # constant amplitude (gate saturated) AND a decaying oscillation that
+    # keeps escalation alive while the bin amplitude hovers *near* the
+    # threshold, where the engagement sigmoid is mid-range — the regime a
+    # non-straight-through blend would leak into the forward pass
+    traces = [5e8 + 2e6 * np.sin(2 * np.pi * 1.0 * t),
+              5e8 + 2.5e6 * np.exp(-t / 4.0) * np.sin(2 * np.pi * 1.0 * t)]
+    for w in (tr.astype(np.float32) for tr in traces):
+        hard = core.TelemetryBackstop(use_pallas=False, window_s=2.0,
+                                      sustain_s=0.5, amp_threshold_w=1e6)
+        out_h, aux_h = hard.apply(w, DT)
+        assert aux_h["max_level"] > 0  # the interesting (escalated) regime
+        out_s, aux_s = dataclasses.replace(hard, smooth_tau=0.05).apply(w, DT)
+        np.testing.assert_array_equal(out_h, out_s)
+        np.testing.assert_array_equal(aux_h["levels"], aux_s["levels"])
+
+
+# ---------------------------------------------------------------------------
+# the spec hinge loss
+# ---------------------------------------------------------------------------
+
+def _spec(job_mw):
+    return core.example_specs(job_mw=job_mw)["moderate"]
+
+
+def test_loss_zero_iff_compliant():
+    flat = np.full(4000, 1e8, np.float32)
+    spec = _spec(100.0)
+    total, comps = spec.loss_jax(flat, DT)
+    assert float(total) == 0.0
+    ok, _, _ = spec.validate_jax(flat, DT)
+    assert bool(ok)
+
+    square = chip_square() * 1e5  # ~100 MW of raw square wave
+    total, comps = spec.loss_jax(square, DT)
+    ok, flags, _ = spec.validate_jax(square, DT)
+    assert not bool(ok)
+    assert float(total) > 0
+    # every hard violation has a positive hinge component behind it
+    for name, flag in flags.items():
+        if bool(flag):
+            assert float(comps[name]) > 0, name
+
+
+def test_loss_components_align_with_flags_at_zero_margin():
+    spec = _spec(100.0)
+    w = chip_square() * 1e5
+    _, comps = spec.loss_jax(w, DT, margin=0.0)
+    _, flags, _ = spec.validate_jax(w, DT)
+    from repro.core.spec import VIOLATION_ORDER
+    for name in VIOLATION_ORDER:
+        if bool(flags[name]):
+            assert float(comps[name]) > 0, name
+        else:
+            # a hinge can only fire when its metric exceeds the limit
+            # (the sigmoid materiality gate makes band_energy approximate,
+            # so allow a whisker)
+            assert float(comps[name]) < 1e-2, name
+
+
+def test_loss_differentiable_wrt_waveform():
+    spec = _spec(100.0)
+    w = jnp.asarray(chip_square() * 1e5)
+    g = jax.grad(lambda x: spec.loss_jax(x, DT)[0])(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.abs(g).max()) > 0
+
+
+def test_loss_margin_shrinks_the_feasible_region():
+    spec = _spec(100.0)
+    # just-compliant waveform: tiny ripple
+    t = np.arange(4000) * DT
+    w = (1e8 + 1e5 * np.sin(2 * np.pi * 0.5 * t)).astype(np.float32)
+    ok, _, _ = spec.validate_jax(w, DT)
+    t0, _ = spec.loss_jax(w, DT, margin=0.0)
+    t9, _ = spec.loss_jax(w, DT, margin=0.9)
+    assert float(t9) >= float(t0)
+
+
+# ---------------------------------------------------------------------------
+# design: grid top-k, gradient, hybrid
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def design_problem():
+    tl = core.synthetic_timeline(period_s=2.0, comm_frac=0.25)
+    cfg = core.WaveformConfig(dt=0.005, steps=8, jitter_s=0.005)
+    n_chips = 256
+    w = core.aggregate(core.chip_waveform(tl, cfg), n_chips, cfg)
+    spec = core.example_specs(job_mw=w.mean() / 1e6)["tight"]
+    return tl, cfg, n_chips, w, spec
+
+
+def test_design_grid_top_k_alternatives(design_problem):
+    _, cfg, n_chips, w, spec = design_problem
+    swing = float(w.max() - w.min())
+    mpf_grid = [0.0, 0.5, 0.9]
+    cap_grid = [0.0] + [swing * 2.0 * f for f in (0.25, 1.0, 2.0)]
+    sol = engine.design_grid(spec, w, cfg.dt, n_chips, mpf_grid, cap_grid,
+                             swing=swing, top_k=3)
+    assert sol is not None
+    alts = sol["alternatives"]
+    assert 1 <= len(alts) <= 3
+    overheads = [a["energy_overhead"] for a in alts]
+    assert overheads == sorted(overheads)
+    # the top alternative is at least as cheap as the grid-order winner
+    assert overheads[0] <= sol["energy_overhead"] + 1e-9
+    # alternatives really are feasible configs on the hard semantics
+    m, c = alts[0]["mpf_frac"], alts[0]["battery_capacity_j"]
+    gpu, bat = engine._design_pair(spec, m, c, n_chips, swing, DEFAULT_HW)
+    out = w
+    if gpu is not None:
+        per, _ = gpu.apply(w / n_chips, cfg.dt)
+        out = per * n_chips
+    if bat is not None:
+        out, _ = bat.apply(out, cfg.dt)
+    assert spec.validate(out, cfg.dt).ok
+
+
+def test_design_gradient_compliant_and_no_worse_than_grid(design_problem):
+    """Acceptance: gradient design produces a spec-compliant config on the
+    square-wave workload with energy overhead <= the best grid config."""
+    _, cfg, n_chips, w, spec = design_problem
+    grid = engine.design(spec, w, cfg.dt, n_chips, method="grid", top_k=16)
+    assert grid is not None
+    best_grid = min(a["energy_overhead"] for a in grid["alternatives"])
+
+    sol = engine.design(spec, w, cfg.dt, n_chips, method="gradient",
+                        steps=40)
+    assert sol is not None
+    assert sol["report"].ok
+    assert sol["energy_overhead"] <= best_grid + 1e-6
+    # the returned mitigation objects are hard (tau=0) configs
+    for m in (sol["device_mitigation"], sol["rack_mitigation"]):
+        assert m is None or m.smooth_tau == 0.0
+    assert sol["loss_history"].shape[1] == 40
+
+
+def test_design_hybrid_never_worse_than_grid(design_problem):
+    _, cfg, n_chips, w, spec = design_problem
+    grid = engine.design(spec, w, cfg.dt, n_chips, method="grid")
+    hyb = engine.design(spec, w, cfg.dt, n_chips, method="hybrid", steps=20)
+    assert hyb is not None and hyb["report"].ok
+    assert hyb["method"] == "hybrid"
+    assert hyb["energy_overhead"] <= grid["energy_overhead"] + 1e-6
+    # at (rounded-)equal overhead the refinement must keep the smaller
+    # battery, not hand the win back to the grid on float noise
+    if round(hyb["energy_overhead"], 6) == round(grid["energy_overhead"], 6):
+        assert hyb["battery_capacity_j"] <= grid["battery_capacity_j"] + 1e-6
+
+
+def test_design_gradient_survives_cap_zero_seed(design_problem):
+    """A battery-off seed (the grid's MPF-only alternatives have
+    capacity_j=0, and box projection can clip to exactly 0 mid-descent)
+    must not NaN-poison its descent lane."""
+    _, cfg, n_chips, w, spec = design_problem
+    sol = engine.design_gradient(spec, w, cfg.dt, n_chips,
+                                 seeds=[(0.5, 0.0)], steps=10)
+    assert sol is not None and sol["report"].ok
+    assert np.isfinite(sol["loss_history"]).all()
+
+
+def test_design_respects_custom_hw_mpf_cap(design_problem):
+    """A fleet whose feature caps MPF below the default grid's top rung:
+    the default candidates clamp to it, and the serve fallback passes the
+    service's hw through to the solver."""
+    _, cfg, n_chips, w, spec = design_problem
+    hw = dataclasses.replace(
+        DEFAULT_HW, chip=dataclasses.replace(DEFAULT_HW.chip, mpf_max=0.8))
+    sol = engine.design(spec, w, cfg.dt, n_chips, method="grid", hw=hw)
+    assert sol is not None and sol["mpf_frac"] <= 0.8 + 1e-9
+
+    from repro.serve.power import PowerComplianceService
+    svc = PowerComplianceService(wave_cfg=cfg, hw=hw, mpf_grid=(),
+                                 cap_fracs=(0.001,), design_method="grid")
+    ans = svc.query(core.synthetic_timeline(2.0, 0.25), n_chips, "tight")
+    assert ans["designed"] is not None
+    assert ans["designed"]["mpf_frac"] <= 0.8 + 1e-9
+
+
+def test_design_gradient_honors_top_k(design_problem):
+    _, cfg, n_chips, w, spec = design_problem
+    sol = engine.design(spec, w, cfg.dt, n_chips, method="gradient",
+                        steps=10, top_k=2)
+    assert sol is not None
+    assert len(sol["alternatives"]) <= 2
+
+
+def test_design_method_validation(design_problem):
+    _, cfg, n_chips, w, spec = design_problem
+    with pytest.raises(ValueError, match="method"):
+        engine.design(spec, w, cfg.dt, n_chips, method="annealing")
+
+
+def test_design_mitigation_gradient_public_face(design_problem):
+    _, cfg, n_chips, w, spec = design_problem
+    sol = core.design_mitigation(spec, w, cfg.dt, n_chips,
+                                 method="gradient", steps=20)
+    assert sol is not None and sol["report"].ok
+    # serial confirmation aux is populated like the grid path's
+    assert "aux" in sol
+
+
+# ---------------------------------------------------------------------------
+# Study.optimize + serve fallback
+# ---------------------------------------------------------------------------
+
+def test_study_optimize_designed_records():
+    cfg = core.WaveformConfig(dt=0.005, steps=8, jitter_s=0.005)
+    study = core.Study({"dense": core.synthetic_timeline(2.0, 0.25)},
+                       fleets=[256], configs={"none": None},
+                       specs=core.example_specs(job_mw=0.3),
+                       wave_cfg=cfg)
+    run = study.run()
+    assert all(r["designed"] is False for r in run)
+    assert len(run.filter(designed=True)) == 0
+
+    opt = study.optimize(method="grid")
+    assert len(opt) == 3  # one per spec
+    for r in opt:
+        assert r["designed"] is True
+        assert r["config"] == "designed[grid]"
+        assert "mpf_frac" in r and "battery_capacity_j" in r
+        if r["spec_ok"]:
+            assert r["swing_mitigated_mw"] <= r["swing_mw"] + 1e-9
+    assert len(opt.filter(designed=True)) == len(opt)
+    # designed rows export alongside declared ones
+    both = core.StudyResult(records=run.records + opt.records)
+    assert "designed" in both.to_csv().splitlines()[0]
+
+
+def test_serve_design_fallback():
+    cfg = core.WaveformConfig(dt=0.005, steps=8, jitter_s=0.005)
+    from repro.serve.power import PowerComplianceService
+    # a catalog that cannot pass tight: one starved battery
+    svc = PowerComplianceService(wave_cfg=cfg, mpf_grid=(),
+                                 cap_fracs=(0.001,),
+                                 design_method="grid")
+    tl = core.synthetic_timeline(2.0, 0.25)
+    ans = svc.query(tl, 256, "tight")
+    assert ans["compliant"]
+    assert ans["designed"] is not None
+    assert ans["recommended"] == ans["designed"]["config"]
+    assert ans["designed"]["designed"] is True
+    assert ans["passing"][0]["config"].startswith("designed")
+
+    # fallback off: the same query is honestly non-compliant
+    svc2 = PowerComplianceService(wave_cfg=cfg, mpf_grid=(),
+                                  cap_fracs=(0.001,), design_fallback=False)
+    ans2 = svc2.query(tl, 256, "tight")
+    assert not ans2["compliant"]
+    assert ans2["designed"] is None
