@@ -157,6 +157,66 @@ def power_sweep_section():
     return "\n".join(lines)
 
 
+def streaming_section():
+    """§Streaming — the chunked fixed-memory executor, rendered from the
+    ``scale`` section ``sweep_bench --scale`` wrote (10^4 scenarios,
+    streaming vs materializing, subprocess-isolated wall + peak RSS)."""
+    lines = ["\n## §Streaming — 10^4-scenario grids in fixed memory\n"]
+    lines.append(
+        "The materializing executor holds every scenario's waveforms at "
+        "once (device arrays on CPU backends = host RSS), which caps "
+        "grids at ~10^3 scenarios.  `Study.run(stream=chunk)` / "
+        "`engine.stream_batches` iterate the scenario axis in fixed-size "
+        "chunks: per chunk, the compiled pipeline synthesizes + mitigates "
+        "on device with the stacked input buffer donated to XLA, vmapped "
+        "per-(length, spec) analysis reduces to metrics *inside jit* "
+        "(analysis batches pow2-padded so compiles stay O(log chunk)), "
+        "and only O(chunk) metric arrays transfer to host — chunk k+1 is "
+        "dispatched before chunk k's transfer, overlapping I/O with "
+        "compute.  Results append per chunk into the columnar "
+        "`StudyResult` (dict of numpy columns; ~0.5 KB/record host cost, "
+        "lazy per-row dict views, query API unchanged and "
+        "bit-compatible).  Chunked == one-shot bit-identically "
+        "(chunk/tail/shard/analysis padding only ever adds rows that are "
+        "sliced away; asserted in CI via `sweep_bench --smoke` and "
+        "`tests/test_streaming.py`, including chunk boundaries that "
+        "split a dedup prefix group).  Scenario-axis sharding composes: "
+        "`ScenarioShardPlan` (Mesh/NamedSharding over a 1-D "
+        '`("scenario",)` axis, process-local row slicing for multi-host) '
+        "pads each chunk to a shard multiple before the compiled call.\n")
+    bench = os.path.join(ROOT, "BENCH_sweep.json")
+    s = None
+    if os.path.exists(bench):
+        with open(bench) as fh:
+            s = json.load(fh).get("scale")
+    if s is None:
+        lines.append("(run `python -m benchmarks.sweep_bench --scale` for "
+                     "the measured section)")
+        return "\n".join(lines)
+    lines.append(
+        f"Measured (`python -m benchmarks.sweep_bench --scale`, "
+        f"{s['n_scenarios']} scenarios = 4 workloads x 25 configs x "
+        f"{s['n_scenarios'] // 100} seeds, dt=4 ms / 6 iterations, each "
+        "mode in its own subprocess so peak RSS is attributable):\n")
+    lines.append("| mode | wall s | peak RSS MB | verdicts |")
+    lines.append("|---|---|---|---|")
+    lines.append(f"| materializing (`run()`) | {s['materializing_wall_s']} "
+                 f"| {s['materializing_peak_rss_mb']} | "
+                 f"{s['n_pass']}/{s['n_scenarios']} pass |")
+    lines.append(f"| streaming (`run(stream={s['chunk']})`) | "
+                 f"{s['streaming_wall_s']} | {s['streaming_peak_rss_mb']} | "
+                 f"{s['n_pass']}/{s['n_scenarios']} pass |")
+    lines.append(
+        f"\n**{s['rss_ratio']}x less peak memory at wall-clock parity "
+        f"({s['wall_ratio']}x)** — the streaming path's RSS is dominated "
+        "by the fixed runtime + compiled programs, so the grid can grow "
+        "another order of magnitude before memory moves "
+        "(`BENCH_sweep.json`, `scale` section).  The serve path "
+        "(`PowerComplianceService`) runs on the same executor with "
+        "`stream_chunk=256` and retains metrics only.")
+    return "\n".join(lines)
+
+
 def design_section():
     """§Design — grid vs gradient co-optimization of (MPF, battery
     capacity), numbers from BENCH_design.json
@@ -476,6 +536,7 @@ def main():
     ]))
     lines.append(PERF_LOG)
     lines.append(power_sweep_section())
+    lines.append(streaming_section())
     lines.append(design_section())
     lines.append(kernels_section())
 

@@ -12,18 +12,29 @@ and at what energy overhead?  Three ways to answer it:
             declarative Study API's scale lever), frequency/spec analysis
             per true length afterwards.
 
-  PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke]
+  PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke | --scale]
 
 Reported timings: ``*_warm_s`` are steady-state sweeps (compiled functions
 cached — the regime every sweep after the first runs in); ``*_cold_s``
 include compilation.  ``--smoke`` runs a small matrix for CI: it checks
-three-way verdict parity and skips the JSON artifact.
+three-way verdict parity plus chunked-vs-one-shot streaming bit-parity
+and skips the JSON artifact.
+
+``--scale`` is the streaming-executor section: a 10^4-scenario grid
+(4 workloads x 25 configs x 100 seeds) run twice in *subprocess
+isolation* — once materializing (``Study.run()``: every scenario's
+waveforms resident at once) and once streaming
+(``Study.run(stream=512)``: fixed O(chunk) waveform memory) — recording
+wall-clock and peak RSS per process into the ``scale`` section of
+BENCH_sweep.json.  Verdict counts must agree between the two runs.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import repro.core as core
@@ -31,6 +42,8 @@ from benchmarks.common import emit
 
 N_CHIPS = 512
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+SCALE_N = 10_000
+SCALE_CHUNK = 512
 
 
 def scenario_matrix(smoke: bool = False):
@@ -98,11 +111,138 @@ def _agreement(a, b):
     return sum(int(x[1] == y[1]) for x, y in zip(a, b))
 
 
+# ---------------------------------------------------------------------------
+# --scale: 10^4-scenario streaming vs materializing (subprocess-isolated)
+# ---------------------------------------------------------------------------
+
+def scale_matrix(n_target: int):
+    """The --scale grid: the 4-workload x 25-config acceptance matrix
+    crossed with enough jitter seeds to reach ``n_target`` scenarios, on
+    a shorter waveform config (dt=4 ms, 6 iterations) so the
+    *materializing* reference stays runnable at 10^4 rows."""
+    workloads = {
+        "dense_2s": core.synthetic_timeline(period_s=2.0, comm_frac=0.19),
+        "dense_1s": core.synthetic_timeline(period_s=1.0, comm_frac=0.30),
+        "moe_3s": core.synthetic_timeline(period_s=3.0, comm_frac=0.25,
+                                          moe_notch=True),
+        "ckpt_heavy": core.synthetic_timeline(period_s=1.5, comm_frac=0.40),
+    }
+    cfg = core.WaveformConfig(dt=0.004, steps=6, jitter_s=0.004)
+    w = core.aggregate(core.chip_waveform(next(iter(workloads.values())), cfg),
+                       N_CHIPS, cfg)
+    swing = float(w.max() - w.min())
+    configs = []
+    for mpf in (0.5, 0.65, 0.8, 0.85, 0.9):
+        for cap_f in (0.25, 0.5, 1.0, 2.0, 4.0):
+            gpu = core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=2000,
+                                         ramp_down_w_per_s=2000,
+                                         stop_delay_s=1.0)
+            bat = core.RackBattery(capacity_j=cap_f * swing,
+                                   max_discharge_w=swing, max_charge_w=swing,
+                                   target_tau_s=10.0)
+            configs.append((gpu, bat))
+    seeds = list(range(max(1, n_target // (len(workloads) * len(configs)))))
+    spec = core.example_specs(job_mw=w.mean() / 1e6)["moderate"]
+    return workloads, configs, cfg, spec, seeds
+
+
+def run_scale_worker(mode: str, n_target: int, chunk: int) -> None:
+    """One measured run in this process: build the scale grid, run it
+    streaming or materializing, print a JSON result line.  Peak RSS is
+    meaningful because each mode runs in its own subprocess."""
+    import resource
+
+    workloads, configs, cfg, spec, seeds = scale_matrix(n_target)
+    study = core.Study(workloads, fleets=[N_CHIPS], configs=list(configs),
+                       specs=spec, seeds=seeds, wave_cfg=cfg, key=None,
+                       padding="pad")
+    last = [0.0]
+
+    def progress(done: int, total: int, elapsed: float) -> None:
+        if done == total or elapsed - last[0] > 10.0:
+            last[0] = elapsed
+            print(f"# {mode}: {done}/{total} scenarios in {elapsed:.0f}s",
+                  file=sys.stderr, flush=True)
+
+    t0 = time.perf_counter()
+    res = study.run(stream=chunk if mode == "streaming" else None,
+                    on_chunk=progress)
+    wall = time.perf_counter() - t0
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    print(json.dumps({
+        "mode": mode,
+        "n_scenarios": study.n_rows,
+        "chunk": chunk if mode == "streaming" else None,
+        "wall_s": round(wall, 2),
+        "peak_rss_mb": round(peak_mb, 1),
+        "n_pass": len(res.passing()),
+    }))
+
+
+def run_scale(n_target: int, chunk: int) -> None:
+    """Drive both --scale-worker modes in subprocesses and merge the
+    section into BENCH_sweep.json."""
+    results = {}
+    for mode in ("materializing", "streaming"):
+        cmd = [sys.executable, "-m", "benchmarks.sweep_bench",
+               "--scale-worker", mode, "--scale-n", str(n_target),
+               "--scale-chunk", str(chunk)]
+        print(f"# running {mode} worker ({n_target} scenarios)...",
+              flush=True)
+        # stderr inherits the terminal so the worker's progress heartbeats
+        # stay visible during the multi-minute run; only stdout (the JSON
+        # result line) is captured
+        out = subprocess.run(cmd, stdout=subprocess.PIPE, text=True)
+        assert out.returncode == 0, f"{mode} worker exited {out.returncode}"
+        results[mode] = json.loads(out.stdout.strip().splitlines()[-1])
+    st, mat = results["streaming"], results["materializing"]
+    assert st["n_pass"] == mat["n_pass"], \
+        f"streaming/materializing verdicts disagree: {st} vs {mat}"
+    section = {
+        "n_scenarios": st["n_scenarios"],
+        "chunk": st["chunk"],
+        "streaming_wall_s": st["wall_s"],
+        "streaming_peak_rss_mb": st["peak_rss_mb"],
+        "materializing_wall_s": mat["wall_s"],
+        "materializing_peak_rss_mb": mat["peak_rss_mb"],
+        "rss_ratio": round(mat["peak_rss_mb"] / st["peak_rss_mb"], 2),
+        "wall_ratio": round(mat["wall_s"] / st["wall_s"], 2),
+        "n_pass": st["n_pass"],
+        "verdict_agreement": f'{st["n_pass"]}=={mat["n_pass"]}',
+    }
+    data = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as fh:
+            data = json.load(fh)
+    data["scale"] = section
+    with open(OUT_PATH, "w") as fh:
+        json.dump(data, fh, indent=2)
+        fh.write("\n")
+    emit("sweep/scale_streaming", st["wall_s"] * 1e6 / st["n_scenarios"],
+         {"peak_rss_mb": st["peak_rss_mb"], "rss_ratio": section["rss_ratio"]})
+    print("wrote scale section to", os.path.abspath(OUT_PATH))
+    print(json.dumps(section, indent=2))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small matrix, parity checks only, no JSON artifact")
+    ap.add_argument("--scale", action="store_true",
+                    help="10^4-scenario streaming-vs-materializing section "
+                         "(subprocess-isolated wall-clock + peak RSS)")
+    ap.add_argument("--scale-n", type=int, default=SCALE_N)
+    ap.add_argument("--scale-chunk", type=int, default=SCALE_CHUNK)
+    ap.add_argument("--scale-worker", choices=("streaming", "materializing"),
+                    default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
+
+    if args.scale_worker:
+        run_scale_worker(args.scale_worker, args.scale_n, args.scale_chunk)
+        return
+    if args.scale:
+        run_scale(args.scale_n, args.scale_chunk)
+        return
 
     workloads, configs, cfg, spec = scenario_matrix(args.smoke)
     study = make_study(workloads, configs, cfg, spec)
@@ -116,8 +256,18 @@ def main() -> None:
             "bucketed verdicts disagree with serial"
         assert _agreement(serial, padded) == n_scen, \
             "padded verdicts disagree with serial"
+        # streaming executor: a chunked run (chunk smaller than the grid,
+        # splitting dedup prefix groups) must be bit-identical to one-shot
+        chunks = []
+        chunked = study.run(stream=3,
+                            on_chunk=lambda d, t, e: chunks.append((d, t)))
+        oneshot = study.run()
+        assert chunked.records == oneshot.records, \
+            "chunked records differ from one-shot"
+        assert chunks and chunks[-1][0] == chunks[-1][1] == study.n_rows
         print(f"smoke OK: {n_scen} scenarios, serial == bucketed == padded "
-              "spec verdicts")
+              "spec verdicts; chunked stream bit-identical to one-shot "
+              f"({len(chunks)} chunks)")
         return
 
     # warm the per-shape scan/FFT caches for EVERY workload length (they

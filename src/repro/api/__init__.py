@@ -24,7 +24,9 @@ for direct use; the Study layer is the supported surface.
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.phases import (IterationTimeline, Phase, from_dryrun_cell,
                                load_cell, synthetic_timeline)
-from repro.core.engine import design, design_gradient, design_grid
+from repro.core.engine import (StreamChunk, design, design_gradient,
+                               design_grid, stream_batches)
+from repro.parallel.sharding import ScenarioShardPlan, scenario_plan
 from repro.core.smoothing import (CombinedMitigation, Firefly,
                                   GpuPowerSmoothing, RackBattery, Stack,
                                   TelemetryBackstop, design_mitigation)
@@ -39,6 +41,8 @@ from repro.serve.power import PowerComplianceService, default_catalog
 __all__ = [
     # the declarative study surface
     "Study", "StudyResult", "Scenario", "MitigationConfig",
+    # streaming execution + scenario-axis sharding
+    "stream_batches", "StreamChunk", "ScenarioShardPlan", "scenario_plan",
     # the serve path
     "PowerComplianceService", "default_catalog",
     # scenario ingredients

@@ -19,9 +19,10 @@ from repro.core.waveform import (WaveformConfig, aggregate, chip_waveform,
 from repro.core.smoothing import (CombinedMitigation, Firefly, GpuPowerSmoothing,
                                   RackBattery, Stack, TelemetryBackstop,
                                   design_mitigation, energy_overhead)
-from repro.core.engine import (BatchResult, analyze_batch, apply_batch,
-                               design, design_gradient, design_grid,
-                               simulate_batch, stack_mitigations, sweep,
+from repro.core.engine import (BatchResult, StreamChunk, analyze_batch,
+                               apply_batch, design, design_gradient,
+                               design_grid, simulate_batch,
+                               stack_mitigations, stream_batches, sweep,
                                validate_many)
 from repro.core.study import MitigationConfig, Scenario, Study, StudyResult
 from repro.core.ballast_inject import attach_ballast, ballast_gflops_for_cell

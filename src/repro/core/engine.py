@@ -13,6 +13,11 @@ StratoSim's ``simulate`` runs one scenario at a time; this module runs a
   ``sweep``           cartesian product over workloads / fleet sizes /
                       configs / seeds, bucketed by waveform length (each
                       bucket is one compiled call), returning flat records.
+  ``stream_batches``  chunked fixed-memory iteration of the scenario
+                      axis: per-chunk compiled pipeline + in-jit
+                      reduction to metrics (waveforms never leave the
+                      device unless asked), donated input buffers,
+                      chunk k+1 dispatched while chunk k transfers.
   ``apply_batch``     one waveform through a stack of mitigation configs
                       (the Fig. 6 MPF sweep in one call).
   ``analyze_batch``   frequency reports + spec validation for same-length
@@ -53,6 +58,7 @@ import numpy as np
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.optim import adam_init, adam_update, clip_by_global_norm
 from repro.core.phases import IterationTimeline
+from repro.parallel.sharding import ScenarioShardPlan, scenario_plan
 from repro.core.smoothing.base import (Mitigation, apply_mitigation,
                                        energy_overhead_jax, materialize_aux)
 from repro.core.smoothing.battery import RackBattery
@@ -259,7 +265,11 @@ def _simulate_one(levels, shifts, n_chips, dev, rack, dev_on, rack_on, key,
                          rack_on, key, n_valid, cfg, hw, spec, spectra)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "hw", "spec", "spectra"))
+# ``levels`` (argnum 0) is the one O(B*n) host->device input of every
+# pipeline call; donating it lets XLA reuse its buffer for the same-shape
+# waveform outputs, so a streaming chunk holds one buffer fewer in flight.
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("cfg", "hw", "spec", "spectra"))
 def _simulate_vmapped(levels, shifts, n_chips, dev, rack, dev_on, rack_on,
                       keys, n_valid, *, cfg: WaveformConfig, hw: Hardware,
                       spec: Optional[UtilitySpec], spectra: bool):
@@ -269,7 +279,8 @@ def _simulate_vmapped(levels, shifts, n_chips, dev, rack, dev_on, rack_on,
     )(levels, shifts, n_chips, dev, rack, dev_on, rack_on, keys, n_valid)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "hw"))
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("cfg", "hw"))
 def _synth_vmapped(levels, shifts, n_chips, n_valid, *, cfg: WaveformConfig,
                    hw: Hardware):
     return jax.vmap(
@@ -298,23 +309,13 @@ def _mitigate_vmapped(chip_u, dcraw_u, u_idx, shifts, n_chips, dev, rack,
 # scenario-axis sharding
 # ---------------------------------------------------------------------------
 
-def _shard_scenario_axis(args, B: int):
-    """Pad the scenario axis to a device multiple (repeating the last row)
-    and commit every batched leaf to a 1-D 'scenario' mesh, so the jitted
-    pipeline partitions across devices.  No-op on single-device hosts.
-    Returns (args, padded_B); callers slice results back to [:B]."""
-    ndev = jax.device_count()
-    if ndev <= 1:
-        return args, B
-    pad = (-B) % ndev
-    if pad:
-        args = jax.tree.map(
-            lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], 0),
-            args)
-    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("scenario",))
-    sh = jax.sharding.NamedSharding(mesh,
-                                    jax.sharding.PartitionSpec("scenario"))
-    return jax.tree.map(lambda a: jax.device_put(a, sh), args), B + pad
+def _resolve_plan(plan: Optional[ScenarioShardPlan],
+                  shard_devices: bool) -> Optional[ScenarioShardPlan]:
+    """An explicit mesh plan wins; ``shard_devices=True`` keeps its old
+    meaning as shorthand for the all-local-devices plan."""
+    if plan is not None:
+        return plan
+    return scenario_plan() if shard_devices else None
 
 
 # ---------------------------------------------------------------------------
@@ -391,6 +392,38 @@ class BatchResult:
             aux=materialize_aux(aux_row))
 
 
+def _prepare_rows(timelines, n_chips, seeds, device_mitigation,
+                  rack_mitigation, levels, cfg: WaveformConfig, hw: Hardware):
+    """Broadcast every batched argument to a common row count B and expand
+    timelines to per-row ``phase_levels`` arrays (once per distinct
+    timeline — rows are usually a small set of workloads tiled across a
+    big config grid).  The shared prologue of ``simulate_batch`` and the
+    chunked ``stream_batches`` executor."""
+    tls = timelines if isinstance(timelines, (list, tuple)) else [timelines]
+    chips = n_chips if isinstance(n_chips, (list, tuple)) else [n_chips]
+    seed_list = seeds if isinstance(seeds, (list, tuple)) else [seeds]
+    dev_list = (device_mitigation if isinstance(device_mitigation, (list, tuple))
+                else [device_mitigation])
+    rack_list = (rack_mitigation if isinstance(rack_mitigation, (list, tuple))
+                 else [rack_mitigation])
+
+    B = max(len(tls), len(chips), len(seed_list), len(dev_list), len(rack_list))
+    tls = _tile(tls, B, "timelines")
+    chips = _tile(chips, B, "n_chips")
+    seed_list = _tile(seed_list, B, "seeds")
+    dev_list = _tile(dev_list, B, "device_mitigation")
+    rack_list = _tile(rack_list, B, "rack_mitigation")
+
+    if levels is not None:
+        level_rows = _tile(list(levels), B, "levels")
+    else:
+        level_cache: Dict[int, np.ndarray] = {}
+        level_rows = [
+            level_cache.setdefault(id(tl), phase_levels(tl, cfg, hw))
+            for tl in tls]
+    return tls, chips, seed_list, dev_list, rack_list, level_rows, B
+
+
 def simulate_batch(
         timelines: Union[IterationTimeline, Sequence[IterationTimeline]],
         n_chips: Union[int, Sequence[int]],
@@ -404,6 +437,7 @@ def simulate_batch(
         pad_to: Optional[int] = None,
         spectra: bool = True,
         shard_devices: bool = False,
+        plan: Optional[ScenarioShardPlan] = None,
         dedup: bool = False,
         chip_outputs: bool = True,
         host_arrays: bool = True) -> BatchResult:
@@ -423,36 +457,19 @@ def simulate_batch(
     ``analyze_batch`` (``spec`` must be None and ``spectra`` False).
 
     ``levels`` optionally supplies per-row ``phase_levels`` arrays
-    precomputed; ``shard_devices`` spreads the scenario axis across all
-    local devices.  ``dedup`` splits the pipeline in two: the mitigation-
+    precomputed; ``plan`` (a ``ScenarioShardPlan``) partitions the
+    scenario axis across its mesh — ``shard_devices=True`` is shorthand
+    for the default all-local-devices plan.  ``dedup`` splits the
+    pipeline in two: the mitigation-
     independent prefix (chip synthesis + raw aggregation) runs once per
     unique (workload, fleet, seed) and the per-config suffix gathers it —
     the declarative Study layer enables this because it knows which axes a
     row's physics actually depends on.
     """
     cfg = wave_cfg or WaveformConfig()
-    tls = timelines if isinstance(timelines, (list, tuple)) else [timelines]
-    chips = n_chips if isinstance(n_chips, (list, tuple)) else [n_chips]
-    seed_list = seeds if isinstance(seeds, (list, tuple)) else [seeds]
-    dev_list = (device_mitigation if isinstance(device_mitigation, (list, tuple))
-                else [device_mitigation])
-    rack_list = (rack_mitigation if isinstance(rack_mitigation, (list, tuple))
-                 else [rack_mitigation])
-
-    B = max(len(tls), len(chips), len(seed_list), len(dev_list), len(rack_list))
-    tls = _tile(tls, B, "timelines")
-    chips = _tile(chips, B, "n_chips")
-    seed_list = _tile(seed_list, B, "seeds")
-
-    if levels is not None:
-        level_rows = _tile(list(levels), B, "levels")
-    else:
-        # expand each distinct timeline once (rows are usually a small set
-        # of workloads tiled across a big config grid)
-        level_cache: Dict[int, np.ndarray] = {}
-        level_rows = [
-            level_cache.setdefault(id(tl), phase_levels(tl, cfg, hw))
-            for tl in tls]
+    (tls, chips, seed_list, dev_list, rack_list, level_rows,
+     B) = _prepare_rows(timelines, n_chips, seeds, device_mitigation,
+                        rack_mitigation, levels, cfg, hw)
 
     src_ids = [id(r) for r in level_rows]   # pre-padding row identity
     n_valid_arr = None
@@ -482,6 +499,7 @@ def simulate_batch(
     rack, rack_on = _normalize_mits(rack_list, B, "rack_mitigation")
     keys_arr = _normalize_keys(keys, B)
 
+    shard = _resolve_plan(plan, shard_devices)
     out_B = B
     if dedup:
         # synthesis once per unique (workload, fleet, seed); the per-config
@@ -503,16 +521,16 @@ def simulate_batch(
             cfg=cfg, hw=hw)
         row_args = (jnp.asarray(u_idx, jnp.int32), shifts, chips_f, dev,
                     rack, dev_on, rack_on, keys_arr, n_valid_arr)
-        if shard_devices:
-            row_args, out_B = _shard_scenario_axis(row_args, B)
+        if shard is not None:
+            row_args, out_B = shard.shard_batch(row_args, B)
         res = _mitigate_vmapped(chip_u, dcraw_u, *row_args,
                                 cfg=cfg, hw=hw, spec=spec, spectra=spectra,
                                 chip_outputs=chip_outputs)
     else:
         args = (jnp.asarray(np.stack(level_rows), jnp.float32), shifts,
                 chips_f, dev, rack, dev_on, rack_on, keys_arr, n_valid_arr)
-        if shard_devices:
-            args, out_B = _shard_scenario_axis(args, B)
+        if shard is not None:
+            args, out_B = shard.shard_batch(args, B)
         res = _simulate_vmapped(*args, cfg=cfg, hw=hw, spec=spec,
                                 spectra=spectra)
     if host_arrays:
@@ -536,6 +554,222 @@ def simulate_batch(
                  else np.asarray(n_valid_arr, np.int64)),
         dev_on=(None if dev_on is None else np.asarray(dev_on) > 0),
         rack_on=(None if rack_on is None else np.asarray(rack_on) > 0))
+
+
+# ---------------------------------------------------------------------------
+# streaming chunked execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamChunk:
+    """Per-chunk *metrics* of a ``stream_batches`` run.
+
+    Rows ``start:stop`` of the stream's scenario axis.  Everything here
+    is a small host array of one entry per row — the waveforms stayed on
+    device and were reduced to metrics inside jit; they are only present
+    (``dc_raw``/``dc_mitigated``) when the stream was asked to keep them.
+    ``spec_ok`` / ``spec_flags`` / ``spec_metrics`` align with the
+    stream's ``specs`` sequence (None entries for a None spec);
+    ``spec_metrics`` rows are per-row dicts because the metric key set
+    depends on each row's true waveform length.
+    """
+    start: int
+    stop: int
+    n: int                                   # common (padded) sample count
+    n_valid: Optional[np.ndarray]            # [C] true lengths (None = n)
+    energy_overhead: np.ndarray              # [C]
+    swing: Dict[str, np.ndarray]             # each [C]
+    swing_mitigated: Dict[str, np.ndarray]
+    bands_mitigated: Optional[Dict[str, np.ndarray]]
+    spec_ok: List[Optional[np.ndarray]]      # per spec: [C] bool
+    spec_flags: List[Optional[Dict[str, np.ndarray]]]
+    spec_metrics: List[Optional[List[Dict[str, float]]]]
+    dc_raw: Optional[np.ndarray] = None      # [C, n] (keep_waveforms only)
+    dc_mitigated: Optional[np.ndarray] = None
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+    def length(self, i: int) -> int:
+        return self.n if self.n_valid is None else int(self.n_valid[i])
+
+    def report(self, si: int, i: int) -> Optional[SpecReport]:
+        """SpecReport of row ``i`` under spec ``si`` (None if that spec
+        slot was None)."""
+        if self.spec_ok[si] is None:
+            return None
+        flags = {k: v[i] for k, v in self.spec_flags[si].items()}
+        return report_from_arrays(self.spec_ok[si][i], flags,
+                                  self.spec_metrics[si][i])
+
+
+def _pow2_pad(idx: List[int]) -> List[int]:
+    """Pad an index list to the next power of two (repeating the last
+    entry) so vmapped analysis calls compile for O(log B) distinct batch
+    sizes instead of one per chunk composition."""
+    m = 1
+    while m < len(idx):
+        m <<= 1
+    return idx + [idx[-1]] * (m - len(idx))
+
+
+def stream_batches(
+        timelines: Union[IterationTimeline, Sequence[IterationTimeline]],
+        n_chips: Union[int, Sequence[int]],
+        wave_cfg: Optional[WaveformConfig] = None,
+        *, device_mitigation=None, rack_mitigation=None,
+        specs=None, hw: Hardware = DEFAULT_HW,
+        seeds: Union[int, Sequence[int]] = 0,
+        keys=None,
+        sample_chips: int = 64,
+        levels: Optional[Sequence[np.ndarray]] = None,
+        pad_to: Optional[int] = None,
+        chunk_size: int = 1024,
+        bands: bool = True,
+        keep_waveforms: bool = False,
+        dedup: bool = True,
+        chip_outputs: bool = True,
+        shard_devices: bool = False,
+        plan: Optional[ScenarioShardPlan] = None):
+    """Iterate a scenario batch in fixed-size chunks of compiled work,
+    yielding one metrics-only ``StreamChunk`` per chunk.
+
+    The streaming core behind ``Study.run(stream=...)``: each chunk runs
+    the ``simulate_batch`` pipeline (waveforms kept on device, the
+    chunk's stacked ``levels`` buffer donated to XLA) and then reduces
+    straight to metrics inside jit — per-row swing/overhead from the
+    pipeline, plus frequency bands and spec verdicts via vmapped
+    analysis calls grouped by true waveform length (analysis batches are
+    padded to powers of two so compile count stays O(log chunk) however
+    lengths mix).  Only O(chunk)-sized metric arrays ever reach the
+    host; device memory is O(chunk_size * n) regardless of how many
+    scenarios the grid declares.
+
+    Chunk ``k+1`` is dispatched *before* chunk ``k``'s metrics are
+    pulled to host, so host transfer overlaps device compute.  Tail
+    chunks are padded to ``chunk_size`` by repeating the last row (and
+    sliced back), keeping every chunk the same compiled shape.
+
+    ``specs`` is None, one ``UtilitySpec``, or a sequence (None entries
+    allowed — that slot yields no verdicts); all specs judge every row.
+    ``pad_to`` fixes the padded length (defaults to the longest row when
+    lengths mix); ``plan`` / ``shard_devices`` compose scenario-axis
+    sharding with the chunking — each chunk is padded to a shard
+    multiple and committed to the plan's mesh.  Per-row results are
+    bit-identical to a one-shot ``simulate_batch`` over the same rows:
+    chunking, tail padding, analysis-batch padding and sharding only
+    ever add rows that are sliced away.
+    """
+    cfg = wave_cfg or WaveformConfig()
+    (tls, chips, seed_list, dev_list, rack_list, level_rows,
+     B) = _prepare_rows(timelines, n_chips, seeds, device_mitigation,
+                        rack_mitigation, levels, cfg, hw)
+    spec_list = list(specs) if isinstance(specs, (list, tuple)) else [specs]
+    keys_arr = _normalize_keys(keys, B)
+
+    lens = [len(r) for r in level_rows]
+    if pad_to is None and len(set(lens)) > 1:
+        pad_to = max(lens)
+    chunk_size = max(1, min(chunk_size, B))
+    n_chunks = -(-B // chunk_size)
+    shard = _resolve_plan(plan, shard_devices)
+
+    def dispatch(lo: int, hi: int):
+        C = hi - lo
+        tail = chunk_size - C if n_chunks > 1 else 0
+
+        def sl(xs):
+            return xs[lo:hi] + [xs[hi - 1]] * tail
+
+        ks = None
+        if keys_arr is not None:
+            ks = keys_arr[lo:hi]
+            if tail:
+                ks = jnp.concatenate([ks, jnp.repeat(ks[-1:], tail, axis=0)])
+        res = simulate_batch(
+            sl(tls), sl(chips), cfg,
+            device_mitigation=sl(dev_list), rack_mitigation=sl(rack_list),
+            spec=None, hw=hw, seeds=sl(seed_list), keys=ks,
+            sample_chips=sample_chips, levels=sl(level_rows),
+            pad_to=pad_to, spectra=False, plan=shard, dedup=dedup,
+            chip_outputs=chip_outputs, host_arrays=False)
+        # in-jit reduction to metrics: one vmapped analysis call per
+        # (true length, spec) group on device-resident waveform slices
+        groups: Dict[int, List[int]] = {}
+        for i in range(C):
+            groups.setdefault(lens[lo + i], []).append(i)
+        gres = []
+        for L, g in sorted(groups.items()):
+            # pow2 padding buys bounded compile counts across chunks; a
+            # single-chunk (one-shot) run has one fixed shape either way,
+            # so analyze at exact size and skip the wasted lanes
+            sel = np.asarray(_pow2_pad(g) if n_chunks > 1 else g)
+            mit = res.dc_mitigated[sel][:, :L]
+            per_spec = []
+            for si, sp in enumerate(spec_list):
+                do_bands = bands and si == 0
+                if sp is None and not do_bands:
+                    per_spec.append(None)
+                    continue
+                per_spec.append(_analyze_vmapped(None, mit, spec=sp,
+                                                 dt=cfg.dt, bands=do_bands))
+            gres.append((g, per_spec))
+        return lo, hi, res, gres
+
+    def materialize(pending) -> StreamChunk:
+        lo, hi, res, gres = pending
+        C = hi - lo
+        S = len(spec_list)
+        host = lambda a: np.asarray(a)[:C]
+        chunk = StreamChunk(
+            start=lo, stop=hi,
+            n=res.dc_mitigated.shape[1],
+            n_valid=None if res.n_valid is None else res.n_valid[:C],
+            energy_overhead=host(res.energy_overhead),
+            swing={k: host(v) for k, v in res.swing.items()},
+            swing_mitigated={k: host(v)
+                             for k, v in res.swing_mitigated.items()},
+            bands_mitigated=None,
+            spec_ok=[None] * S, spec_flags=[None] * S,
+            spec_metrics=[None] * S,
+            dc_raw=host(res.dc_raw) if keep_waveforms else None,
+            dc_mitigated=host(res.dc_mitigated) if keep_waveforms else None)
+        bands_cols: Dict[str, np.ndarray] = {}
+        for g, per_spec in gres:
+            G = len(g)
+            for si, a in enumerate(per_spec):
+                if a is None:
+                    continue
+                a = jax.tree.map(lambda v: np.asarray(v)[:G], a)
+                if "bands_mitigated" in a:
+                    for k, v in a["bands_mitigated"].items():
+                        bands_cols.setdefault(
+                            k, np.empty(C, v.dtype))[g] = v
+                if spec_list[si] is None:
+                    continue
+                if chunk.spec_ok[si] is None:
+                    chunk.spec_ok[si] = np.zeros(C, bool)
+                    chunk.spec_flags[si] = {
+                        k: np.zeros(C, bool) for k in a["spec_flags"]}
+                    chunk.spec_metrics[si] = [None] * C
+                chunk.spec_ok[si][g] = a["spec_ok"]
+                for k, v in a["spec_flags"].items():
+                    chunk.spec_flags[si][k][g] = v
+                for j, i in enumerate(g):
+                    chunk.spec_metrics[si][i] = {
+                        k: float(v[j]) for k, v in a["spec_metrics"].items()}
+        if bands_cols:
+            chunk.bands_mitigated = bands_cols
+        return chunk
+
+    pending = None
+    for lo in range(0, B, chunk_size):
+        cur = dispatch(lo, min(lo + chunk_size, B))
+        if pending is not None:
+            yield materialize(pending)
+        pending = cur
+    if pending is not None:
+        yield materialize(pending)
 
 
 # ---------------------------------------------------------------------------

@@ -15,9 +15,17 @@ De-escalation happens after the bin amplitude stays below threshold for
 
 The spectral monitor runs on the streaming Pallas sliding-Goertzel
 kernel by default (compiled on TPU backends, interpret mode elsewhere
-so CPU CI and the batched engine's vmap path keep working);
-``use_pallas=False`` falls back to the corrected pure-jnp oracle
-(``sliding_bin_power_jnp``).  Both remove the trace mean before
+so CPU CI and the batched engine's vmap path keep working).
+``use_pallas=False`` selects the pure-jnp monitor; there
+``fused_scan=True`` (the default) fuses the sliding-Goertzel recurrence
+and the escalation state machine into ONE ``lax.scan`` over
+window-sized segments — the same hop-and-overlap per-segment prefix
+sums as the kernel, with the escalation decision consumed inside each
+scan step, so the per-window amplitude matrix (``[n, K]``) is never
+materialized: peak monitor memory is O(win * K) however long the trace
+runs.  ``fused_scan=False`` keeps the cumsum oracle
+(``sliding_bin_power_jnp``) + separate escalation scan as the
+analysis-side reference.  Every path removes the trace mean before
 accumulating — without that, MW-scale DC offsets bury the ~1e5 W
 oscillations this monitor exists to catch (see kernels/goertzel/ref.py).
 
@@ -74,46 +82,125 @@ class TelemetryBackstop:
     shed_frac: float = 0.7                  # level-2 cap (fraction of mean)
     idle_frac: float = 0.2                  # level-3 floor
     use_pallas: bool = True                 # structure-static kernel switch
+    # jnp path only: fuse Goertzel recurrence + escalation into one scan
+    fused_scan: bool = True
     # 0 = exact hard semantics; > 0 = straight-through gradient relaxation
     smooth_tau: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "critical_hz", tuple(self.critical_hz))
 
+    def _esc_step(self, carry, worst_i, i, *, win: int, n: int,
+                  sustain_n: int, cool_n: int):
+        """One sample of the escalation state machine (shared by the
+        post-hoc scan over a monitor's amplitude stream and the fused
+        segment scan, whose trailing zero-pad samples ``i >= n`` must
+        not trigger)."""
+        level, above, below, detect = carry
+        # warm-up gate: no triggering off partial-window estimates
+        hit = (worst_i > self.amp_threshold_w) & (i >= win - 1) & (i < n)
+        above = jnp.where(hit, above + 1, 0)
+        below = jnp.where(hit, 0, below + 1)
+        esc = hit & (above >= sustain_n) & (level < 3)
+        detect = jnp.where(esc & (detect < 0), i, detect)
+        level = jnp.where(esc, level + 1, level)
+        above = jnp.where(esc, 0, above)
+        deesc = (~hit) & (below >= cool_n) & (level > 0)
+        level = jnp.where(deesc, level - 1, level)
+        below = jnp.where(deesc, 0, below)
+        return (level, above, below, detect), level
+
+    @staticmethod
+    def _esc_init():
+        zero = jnp.asarray(0, jnp.int32)
+        return (zero, zero, zero, jnp.asarray(-1, jnp.int32))
+
+    def _escalate(self, worst, *, win: int, sustain_n: int, cool_n: int):
+        """Escalation levels from a fully-materialized amplitude stream
+        (the Pallas-kernel and cumsum-oracle monitor paths)."""
+        n = worst.shape[-1]
+        (_, _, _, detect), levels = jax.lax.scan(
+            lambda c, inp: self._esc_step(c, inp[0], inp[1], win=win, n=n,
+                                          sustain_n=sustain_n, cool_n=cool_n),
+            self._esc_init(), (worst, jnp.arange(n, dtype=jnp.int32)))
+        return worst, levels, detect
+
+    def _fused_monitor(self, w, dt: float, *, win: int, sustain_n: int,
+                       cool_n: int):
+        """Sliding-Goertzel monitor + escalation in ONE ``lax.scan`` over
+        window-sized segments.
+
+        Same math as the Pallas kernel (``sliding_goertzel_pallas``):
+        modulated prefix sums restarted every segment (the numerics fix —
+        partial sums stay at oscillation scale), the previous segment's
+        prefix state carried across scan steps, host-precomputed float64
+        ``[win, K]`` phase tables.  Each step reduces its ``[win, K]``
+        amplitude block to the worst bin and feeds it straight into the
+        escalation state machine, so the full ``[n, K]`` amplitude
+        matrix never exists — the carry is O(win * K) however long the
+        trace runs.  Returns ``(worst [n], levels [n], detect)``.
+        """
+        n = w.shape[-1]
+        xc = w - jnp.mean(w)
+        S = -(-n // win)
+        pad_n = S * win - n
+        if pad_n:
+            xc = jnp.concatenate([xc, jnp.zeros((pad_n,), jnp.float32)])
+        xseg = xc.reshape(S, win)
+        omega = 2.0 * np.pi * np.asarray(self.critical_hz, np.float64) * dt
+        p = np.arange(win, dtype=np.float64)[:, None]
+        cosp = jnp.asarray(np.cos(omega[None, :] * p), jnp.float32)
+        sinp = jnp.asarray(np.sin(omega[None, :] * p), jnp.float32)
+        rr = jnp.asarray(np.cos(omega * win), jnp.float32)
+        ri = jnp.asarray(np.sin(omega * win), jnp.float32)
+
+        def seg_step(carry, inp):
+            prev_r, prev_i, esc = carry
+            xs, s = inp
+            pr = jnp.cumsum(xs[:, None] * cosp, axis=0)      # [win, K]
+            pi_ = jnp.cumsum(xs[:, None] * (-sinp), axis=0)
+            # suffix of the previous segment = its total minus its prefix,
+            # rotated into this segment's phase frame by e^{j*omega*win}
+            dr = prev_r[-1:] - prev_r
+            di = prev_i[-1:] - prev_i
+            mr = pr + rr[None, :] * dr - ri[None, :] * di
+            mi = pi_ + rr[None, :] * di + ri[None, :] * dr
+            amps = (2.0 / win) * jnp.sqrt(mr * mr + mi * mi)
+            idx = s * win + jnp.arange(win, dtype=jnp.int32)
+            # warm-up ramp: partial windows renormalize to their true
+            # sample count (matches ops.sliding_bin_power)
+            denom = jnp.minimum(idx.astype(jnp.float32) + 1.0, float(win))
+            worst = amps.max(axis=1) * (float(win) / denom)
+            esc2, levels = jax.lax.scan(
+                lambda c, wi: self._esc_step(c, wi[0], wi[1], win=win, n=n,
+                                             sustain_n=sustain_n,
+                                             cool_n=cool_n),
+                esc, (worst, idx))
+            return (pr, pi_, esc2), (worst, levels)
+
+        K = len(self.critical_hz)
+        zeros = jnp.zeros((win, K), jnp.float32)
+        (_, _, (_, _, _, detect)), (worsts, levels) = jax.lax.scan(
+            seg_step, (zeros, zeros, self._esc_init()),
+            (xseg, jnp.arange(S, dtype=jnp.int32)))
+        return worsts.reshape(-1)[:n], levels.reshape(-1)[:n], detect
+
     def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
         w = jnp.asarray(w, jnp.float32)
         n = w.shape[-1]
         win = max(int(self.window_s / dt), 8)
+        sustain_n = max(int(self.sustain_s / dt), 1)
+        cool_n = max(int(self.cooldown_s / dt), 1)
+        kw = dict(win=win, sustain_n=sustain_n, cool_n=cool_n)
         if self.use_pallas:
             amps = sliding_bin_power(w, float(dt), tuple(self.critical_hz),
                                      win=win, interpret=_interpret_default())
+            worst, levels, detect = self._escalate(amps.max(axis=1), **kw)
+        elif self.fused_scan:
+            worst, levels, detect = self._fused_monitor(w, float(dt), **kw)
         else:
             amps = sliding_bin_power_jnp(w, dt, self.critical_hz, win)
-        worst = amps.max(axis=1)  # [n]
-
-        sustain_n = max(int(self.sustain_s / dt), 1)
-        cool_n = max(int(self.cooldown_s / dt), 1)
-
-        def step(carry, inp):
-            level, above, below, detect = carry
-            worst_i, i = inp
-            # warm-up gate: no triggering off partial-window estimates
-            hit = (worst_i > self.amp_threshold_w) & (i >= win - 1)
-            above = jnp.where(hit, above + 1, 0)
-            below = jnp.where(hit, 0, below + 1)
-            esc = hit & (above >= sustain_n) & (level < 3)
-            detect = jnp.where(esc & (detect < 0), i, detect)
-            level = jnp.where(esc, level + 1, level)
-            above = jnp.where(esc, 0, above)
-            deesc = (~hit) & (below >= cool_n) & (level > 0)
-            level = jnp.where(deesc, level - 1, level)
-            below = jnp.where(deesc, 0, below)
-            return (level, above, below, detect), level
-
-        zero = jnp.asarray(0, jnp.int32)
-        init = (zero, zero, zero, jnp.asarray(-1, jnp.int32))
-        (_, _, _, detect), levels = jax.lax.scan(
-            step, init, (worst, jnp.arange(n, dtype=jnp.int32)))
+            worst, levels, detect = self._escalate(amps.max(axis=1), **kw)
 
         mean = w.mean()
         r1 = mean + self.alpha1 * (w - mean)
@@ -149,4 +236,4 @@ register_mitigation(
     TelemetryBackstop,
     data_fields=("amp_threshold_w", "alpha1", "shed_frac", "idle_frac"),
     meta_fields=("critical_hz", "window_s", "sustain_s", "cooldown_s",
-                 "use_pallas", "smooth_tau"))
+                 "use_pallas", "fused_scan", "smooth_tau"))

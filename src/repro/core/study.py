@@ -5,8 +5,8 @@ This is the public surface over the batched engine (``core/engine.py``).
 A ``Study`` declares its axes — workloads (iteration timelines), fleet
 sizes, mitigation configs (disabled/None entries are first-class: the
 unmitigated baseline batches with everything else), utility specs, and
-jitter seeds — and ``run()`` compiles the cartesian grid down to
-``engine.simulate_batch`` + ``engine.analyze_batch``:
+jitter seeds — and ``run()`` compiles the cartesian grid down to the
+streaming chunked executor (``engine.stream_batches``):
 
   study = Study(
       workloads={"dense_2s": synthetic_timeline(2.0, 0.19),
@@ -19,7 +19,7 @@ jitter seeds — and ``run()`` compiles the cartesian grid down to
   result = study.run()
   result.passing().pivot("workload", "config", "energy_overhead")
 
-Three scale levers live in this layer:
+Four scale levers live in this layer:
 
 * **Keyed randomness** — every pipeline row gets its own PRNG key
   (``fold_in(root, row)``), threaded into mitigations that consume
@@ -30,13 +30,24 @@ Three scale levers live in this layer:
   exact in the valid region); the frequency/spec analysis then runs per
   true length.  ``padding="auto"`` picks this whenever lengths are mixed;
   ``"bucket"`` keeps the one-call-per-length behavior.
-* **Scenario-axis sharding** — ``shard_devices=True`` spreads the batch
-  across every local device (no-op on single-device hosts).
+* **Streaming chunked execution** — ``run(stream=chunk)`` iterates the
+  scenario axis in fixed-size chunks of compiled work: each chunk's
+  waveforms live only on device and are reduced to metrics inside jit,
+  so a 10^4–10^5-scenario grid runs in O(chunk) waveform memory and
+  O(records) metric columns.  Chunked and one-shot runs are
+  bit-identical; ``on_chunk`` reports progress.
+* **Scenario-axis sharding** — ``shard_devices=True`` (or an explicit
+  ``plan=ScenarioShardPlan``) partitions the scenario axis over a device
+  mesh; it composes with chunking (each chunk is padded to a shard
+  multiple), and the plan's process-local slicing makes the same code
+  multi-host ready.
 
-Results come back as a ``StudyResult``: one flat record per scenario with
-filter / pivot / export helpers, plus per-row ``SimResult`` access.  The
-spec axis is deduplicated against the pipeline: physics runs once per
-(workload, fleet, config, seed) row, each spec then judges every row.
+Results come back as a ``StudyResult``: a *columnar* record store (dict
+of numpy columns, one flat record dict per scenario materialized
+lazily) with filter / pivot / export helpers, plus per-row ``SimResult``
+access.  The spec axis is deduplicated against the pipeline: physics
+runs once per (workload, fleet, config, seed) row, each spec then judges
+every row.
 
 Beyond judging *declared* configs, ``Study.optimize()`` runs the engine's
 ``design`` solver (grid / gradient / hybrid) per (workload, fleet, spec)
@@ -48,24 +59,30 @@ from __future__ import annotations
 import dataclasses
 import io
 import json
-from typing import (Dict, Iterator, List, Mapping, Optional, Sequence,
-                    Tuple, Union)
+import time
+from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import numpy as np
 
-from repro.core.engine import (BatchResult, analyze_batch, design,
-                               simulate_batch)
+from repro.core.engine import StreamChunk, design, stream_batches
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.phases import IterationTimeline
 from repro.core.smoothing.base import Mitigation
-from repro.core.spec import UtilitySpec, report_from_arrays
+from repro.core.spec import UtilitySpec
 from repro.core.spectrum import critical_band_report
 from repro.core.waveform import (WaveformConfig, aggregate, chip_waveform,
                                  phase_levels)
 from repro.core.stratosim import SimResult
+from repro.parallel.sharding import ScenarioShardPlan
 
 PADDING_MODES = ("auto", "pad", "bucket")
+
+# chunk size Study.run(stream=True) picks: big enough to keep the vmapped
+# pipeline efficient, small enough that O(chunk * n) device waveforms stay
+# tens of MB at typical trace lengths
+DEFAULT_STREAM_CHUNK = 512
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +198,7 @@ class Study:
                  key: Union[int, jax.Array, None] = 0,
                  padding: str = "auto",
                  shard_devices: bool = False,
+                 plan: Optional[ScenarioShardPlan] = None,
                  sample_chips: int = 64,
                  keep_waveforms: bool = False):
         if padding not in PADDING_MODES:
@@ -195,6 +213,7 @@ class Study:
         self.key = key
         self.padding = padding
         self.shard_devices = shard_devices
+        self.plan = plan
         self.sample_chips = sample_chips
         self.keep_waveforms = keep_waveforms
         names = [c.name for c in self.configs]
@@ -248,14 +267,49 @@ class Study:
 
     # -- execution ----------------------------------------------------------
 
-    def run(self, *, padding: Optional[str] = None) -> "StudyResult":
-        """Run the whole grid: one fused pipeline call per mitigation
-        *structure* group (padded) — or one per (structure, length) when
-        bucketed — then one analysis call per (length, spec) group."""
+    def run(self, *, padding: Optional[str] = None,
+            stream: Union[None, bool, int] = None,
+            on_chunk: Optional[Callable[[int, int, float], None]] = None
+            ) -> "StudyResult":
+        """Run the whole grid through the streaming chunked executor.
+
+        Rows are first grouped by mitigation *structure* (a GPU-floor
+        grid and a Firefly grid cannot stack into one batched pytree;
+        disabled rows join any group); pad mode fuses each structure
+        group's mixed lengths into one padded call stream while bucket
+        mode streams each length separately.  Each call stream runs as
+        ``engine.stream_batches`` chunks: the compiled pipeline plus
+        vmapped per-(length, spec) analysis reduce every chunk to metric
+        arrays on device, and only those metrics reach the host, where
+        they append to the columnar ``StudyResult``.
+
+        ``stream`` picks the chunk size: ``None``/``False`` runs each
+        call stream as one chunk (every scenario's waveforms in device
+        memory at once — fine up to ~10^3 scenarios), ``True`` picks
+        ``DEFAULT_STREAM_CHUNK``, an int is an explicit chunk size.
+        Host memory is O(records) metric columns either way; device
+        memory is O(chunk * padded length).  Chunked and one-shot runs
+        are bit-identical — chunking only ever adds pipeline rows that
+        are sliced away.
+
+        ``on_chunk(done, total, elapsed_s)`` (optional) is called after
+        every chunk with the number of pipeline scenarios finished, the
+        grid total, and the wall-clock seconds since ``run`` started —
+        the progress hook long sweeps (``sweep_bench``, the serve CLI)
+        surface to operators.
+        """
         cfg, hw = self.wave_cfg, self.hw
         mode = padding or self.padding
         if mode not in PADDING_MODES:
             raise ValueError(f"padding must be one of {PADDING_MODES}")
+        if stream is None or stream is False:
+            chunk_size = None
+        elif stream is True:
+            chunk_size = DEFAULT_STREAM_CHUNK
+        else:
+            chunk_size = int(stream)
+            if chunk_size < 1:
+                raise ValueError(f"stream chunk size must be >= 1, got {stream}")
         levels = {w: phase_levels(tl, cfg, hw)
                   for w, tl in self.workloads.items()}
         rows = self.rows()
@@ -265,16 +319,10 @@ class Study:
         keys = ([self.scenario_key(r) for r in range(len(rows))]
                 if self.key is not None else None)
 
-        # pipeline: rowdata[r] = (BatchResult, index within it).  Rows are
-        # first grouped by mitigation *structure* (a GPU-floor grid and a
-        # Firefly grid cannot stack into one batched pytree; disabled rows
-        # join any group), then pad mode fuses each structure group's
-        # mixed lengths into one call while bucket mode adds a call per
-        # length.  Waveforms stay on device (host_arrays=False) — the
-        # analysis stage slices them straight into its own jit without a
-        # host round-trip; only the small per-row metric arrays are
-        # materialized here.
-        rowdata: List[Tuple[BatchResult, int]] = [None] * len(rows)
+        cols = _empty_columns(len(rows) * len(self.specs))
+        waveforms = [None] * len(rows) if self.keep_waveforms else None
+        total, done = len(rows), 0
+        t0 = time.perf_counter()
         for sg_rows in self._structure_groups(rows):
             if mode == "pad":
                 calls = [sg_rows]
@@ -285,34 +333,71 @@ class Study:
                 calls = [idx for _, idx in sorted(by_len.items())]
             for idx in calls:
                 lens = {row_len[r] for r in idx}
-                res = self._simulate(
-                    [rows[r] for r in idx], levels,
-                    None if keys is None else [keys[r] for r in idx],
-                    pad_to=max(lens) if len(lens) > 1 else None)
-                self._materialize_metrics(res)
-                for b, r in enumerate(idx):
-                    rowdata[r] = (res, b)
+                chunks = stream_batches(
+                    [self.workloads[rows[r][0]] for r in idx],
+                    [rows[r][1] for r in idx], cfg,
+                    device_mitigation=[rows[r][2].device for r in idx],
+                    rack_mitigation=[rows[r][2].rack for r in idx],
+                    specs=[sp for _, sp in self.specs],
+                    hw=hw, seeds=[rows[r][3] for r in idx],
+                    keys=None if keys is None else [keys[r] for r in idx],
+                    sample_chips=self.sample_chips,
+                    levels=[levels[rows[r][0]] for r in idx],
+                    pad_to=max(lens) if len(lens) > 1 else None,
+                    chunk_size=chunk_size or len(idx),
+                    bands=True, keep_waveforms=self.keep_waveforms,
+                    dedup=True, shard_devices=self.shard_devices,
+                    plan=self.plan)
+                for ch in chunks:
+                    self._fill_chunk(cols, waveforms, rows, row_len, idx, ch)
+                    done += len(ch)
+                    if on_chunk is not None:
+                        on_chunk(done, total, time.perf_counter() - t0)
+        return StudyResult(columns=cols, waveforms=waveforms)
 
-        # analysis: one vmapped call per (pipeline call, length, spec)
-        # group, on the rows sliced back to their true length.  Bands are
-        # spec-independent, so only the first spec of each group computes
-        # them.
-        analysis = [[None] * len(self.specs) for _ in rows]
-        groups: Dict[Tuple[int, int], List[int]] = {}
-        for r, L in enumerate(row_len):
-            groups.setdefault((id(rowdata[r][0]), L), []).append(r)
-        for (_, L), idx in sorted(groups.items()):
-            res = rowdata[idx[0]][0]
-            sel = np.asarray([rowdata[r][1] for r in idx])
-            mit = res.dc_mitigated[sel][:, :L]
-            for si, (_, sp) in enumerate(self.specs):
-                # records only consume mitigated bands -> dc_raw=None skips
-                # the raw-band FFT per row
-                a = analyze_batch(None, mit, cfg.dt, sp, bands=(si == 0))
-                for b, r in enumerate(idx):
-                    analysis[r][si] = jax.tree.map(lambda v: v[b], a)
-
-        return self._assemble(rows, row_len, rowdata, analysis)
+    def _fill_chunk(self, cols: Dict[str, np.ndarray], waveforms, rows,
+                    row_len, idx: List[int], ch: StreamChunk) -> None:
+        """Write one ``StreamChunk``'s metrics into the columnar record
+        store (record position = pipeline row * n_specs + spec index)."""
+        S = len(self.specs)
+        for j in range(len(ch)):
+            r = idx[ch.start + j]
+            wname, n_chips, config, seed = rows[r]
+            L = row_len[r]
+            base = {
+                "row": r, "workload": wname, "n_chips": n_chips,
+                "config": config.name, "seed": seed,
+                "period_s": float(self.workloads[wname].period_s),
+                "n_samples": L,
+                "mean_mw": float(ch.swing["mean_w"][j]) / 1e6,
+                "swing_mw": float(ch.swing["swing_w"][j]) / 1e6,
+                "swing_mitigated_mw":
+                    float(ch.swing_mitigated["swing_w"][j]) / 1e6,
+                "energy_overhead": float(ch.energy_overhead[j]),
+                "paper_band_frac":
+                    float(ch.bands_mitigated["paper_band_0p2_3hz"][j]),
+                "designed": False,
+            }
+            for si, (spec_name, spec) in enumerate(self.specs):
+                p = r * S + si
+                for k, v in base.items():
+                    cols[k][p] = v
+                cols["spec"][p] = spec_name
+                if spec is not None:
+                    report = ch.report(si, j)
+                    cols["spec_ok"][p] = report.ok
+                    cols["violations"][p] = report.violations
+                    cols["metrics"][p] = report.metrics
+                else:
+                    cols["spec_ok"][p] = None
+                    cols["violations"][p] = ()
+                    cols["metrics"][p] = {}
+            if waveforms is not None:
+                waveforms[r] = {
+                    "t": np.arange(L) * self.wave_cfg.dt,
+                    "dc_raw": np.asarray(ch.dc_raw[j, :L]),
+                    "dc_mitigated": np.asarray(ch.dc_mitigated[j, :L]),
+                }
 
     def optimize(self, *, method: str = "hybrid",
                  seed: Optional[int] = None,
@@ -407,90 +492,43 @@ class Study:
             groups.setdefault(k, []).append(r)
         return list(groups.values())
 
-    def _simulate(self, rows, levels, keys, pad_to=None) -> BatchResult:
-        return simulate_batch(
-            [self.workloads[w] for w, _, _, _ in rows],
-            [n for _, n, _, _ in rows],
-            self.wave_cfg,
-            device_mitigation=[c.device for _, _, c, _ in rows],
-            rack_mitigation=[c.rack for _, _, c, _ in rows],
-            spec=None, hw=self.hw,
-            seeds=[s for _, _, _, s in rows],
-            keys=keys, sample_chips=self.sample_chips,
-            levels=[levels[w] for w, _, _, _ in rows],
-            pad_to=pad_to, spectra=False,
-            shard_devices=self.shard_devices, dedup=True,
-            # chip-level outputs stay on (the default) even though records
-            # never read them: dropping them measured consistently SLOWER
-            # on CPU XLA (returning chip_m pins a layout the aggregation
-            # reuses).  chip_outputs=False remains available for
-            # memory-bound grids where O(B*n) waveforms dominate.
-            host_arrays=False)
-
-    @staticmethod
-    def _materialize_metrics(res: BatchResult) -> None:
-        """Pull the small [B]-sized metric arrays to host in one pass (the
-        waveforms stay on device for the analysis stage)."""
-        res.energy_overhead = np.asarray(res.energy_overhead)
-        res.swing = {k: np.asarray(v) for k, v in res.swing.items()}
-        res.swing_mitigated = {k: np.asarray(v)
-                               for k, v in res.swing_mitigated.items()}
-
-    def _assemble(self, rows, row_len, rowdata, analysis) -> "StudyResult":
-        records: List[Dict] = []
-        waveforms = [] if self.keep_waveforms else None
-        for r, (wname, n_chips, config, seed) in enumerate(rows):
-            res, b = rowdata[r]
-            L = row_len[r]
-            first = analysis[r][0]
-            for si, (spec_name, spec) in enumerate(self.specs):
-                a = analysis[r][si]
-                rec = {
-                    "index": len(records),
-                    "row": r,
-                    "workload": wname,
-                    "n_chips": n_chips,
-                    "config": config.name,
-                    "spec": spec_name,
-                    "seed": seed,
-                    "period_s": float(self.workloads[wname].period_s),
-                    "n_samples": L,
-                    "mean_mw": float(res.swing["mean_w"][b]) / 1e6,
-                    "swing_mw": float(res.swing["swing_w"][b]) / 1e6,
-                    "swing_mitigated_mw":
-                        float(res.swing_mitigated["swing_w"][b]) / 1e6,
-                    "energy_overhead": float(res.energy_overhead[b]),
-                    "paper_band_frac":
-                        float(first["bands_mitigated"]["paper_band_0p2_3hz"]),
-                    "designed": False,
-                }
-                if spec is not None:
-                    report = report_from_arrays(
-                        a["spec_ok"], a["spec_flags"], a["spec_metrics"])
-                    rec["spec_ok"] = report.ok
-                    rec["violations"] = report.violations
-                    rec["metrics"] = report.metrics
-                else:
-                    rec["spec_ok"] = None
-                    rec["violations"] = ()
-                    rec["metrics"] = {}
-                records.append(rec)
-            if waveforms is not None:
-                waveforms.append({
-                    "t": np.asarray(res.t[:L]),
-                    "dc_raw": np.asarray(res.dc_raw[b, :L]),
-                    "dc_mitigated": np.asarray(res.dc_mitigated[b, :L]),
-                })
-        return StudyResult(records=records, waveforms=waveforms)
 
 
 # ---------------------------------------------------------------------------
 # results
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+# the columnar record schema (field order = record dict key order)
+_COLUMN_DTYPES = (
+    ("index", np.int64), ("row", np.int64), ("workload", object),
+    ("n_chips", np.int64), ("config", object), ("spec", object),
+    ("seed", np.int64), ("period_s", np.float64), ("n_samples", np.int64),
+    ("mean_mw", np.float64), ("swing_mw", np.float64),
+    ("swing_mitigated_mw", np.float64), ("energy_overhead", np.float64),
+    ("paper_band_frac", np.float64), ("designed", np.bool_),
+    ("spec_ok", object), ("violations", object), ("metrics", object),
+)
+
+
+def _empty_columns(n: int) -> Dict[str, np.ndarray]:
+    cols = {k: np.empty(n, dtype=dt) for k, dt in _COLUMN_DTYPES}
+    cols["index"] = np.arange(n, dtype=np.int64)
+    return cols
+
+
+def _to_py(v):
+    """numpy scalar -> the python scalar the list-of-dicts records held."""
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    return v
+
+
 class StudyResult:
-    """Flat scenario records with query helpers.
+    """Flat scenario records with query helpers, stored columnar.
 
     Each record is one (workload, fleet, config, seed, spec) cell:
     identity fields, swing/overhead/band metrics, and — when a spec was
@@ -500,18 +538,73 @@ class StudyResult:
     ``run()`` records (declared configurations); ``filter(designed=True)``
     selects them.  ``waveforms`` (when the study kept them) is indexed by
     ``record["row"]``.
+
+    Storage is a dict of per-field numpy columns (``columns=``; how the
+    streaming executor appends chunk after chunk in O(records) memory —
+    numeric fields cost 8 bytes per record instead of a dict slot);
+    record *dicts* are materialized lazily per row (``result[i]``,
+    iteration, ``.records``) and are bit-identical to the list-of-dicts
+    form this class used to hold.  Constructing from ``records=`` (a
+    list of dicts, e.g. ``optimize()`` output or concatenated results)
+    keeps the list verbatim — both representations answer the same
+    query API.
     """
-    records: List[Dict]
-    waveforms: Optional[List[Dict]] = None
+
+    def __init__(self, records: Optional[List[Dict]] = None,
+                 waveforms: Optional[List[Dict]] = None, *,
+                 columns: Optional[Dict[str, np.ndarray]] = None):
+        if columns is not None and records is not None:
+            raise ValueError("pass records= or columns=, not both")
+        self._cols = columns
+        self._rows = None if columns is not None else list(records or [])
+        self._n = (len(next(iter(columns.values()))) if columns
+                   else len(self._rows))
+        self.waveforms = waveforms
+
+    # -- record materialization ---------------------------------------------
+
+    def _row(self, i: int) -> Dict:
+        if self._rows is not None:
+            return self._rows[i]
+        return {k: _to_py(col[i]) for k, col in self._cols.items()}
+
+    @property
+    def records(self) -> List[Dict]:
+        """All records as plain dicts (materialized from the columns on
+        first access — the O(records) dict cost is only paid by callers
+        that ask for it).  The returned list becomes the authoritative
+        storage, like the old list-of-dicts field: callers that mutate
+        it see coherent ``len``/``filter``/iteration afterwards."""
+        if self._rows is None:
+            self._rows = [self._row(i) for i in range(self._n)]
+            self._cols = None
+        return self._rows
+
+    def _field(self, name: str):
+        """One field's values across records, without building dicts."""
+        if self._rows is not None:
+            return [r.get(name) for r in self._rows]
+        col = self._cols.get(name)
+        if col is None:
+            return [None] * len(self)
+        return col
+
+    def _subset(self, keep: Sequence[int]) -> "StudyResult":
+        if self._rows is not None:
+            return StudyResult([self._rows[i] for i in keep], self.waveforms)
+        idx = np.asarray(keep, dtype=np.int64)
+        return StudyResult(columns={k: col[idx]
+                                    for k, col in self._cols.items()},
+                           waveforms=self.waveforms)
 
     def __len__(self) -> int:
-        return len(self.records)
+        return len(self._rows) if self._rows is not None else self._n
 
     def __iter__(self) -> Iterator[Dict]:
-        return iter(self.records)
+        return (self._row(i) for i in range(len(self)))
 
     def __getitem__(self, i: int) -> Dict:
-        return self.records[i]
+        return self._row(i)
 
     # -- querying -----------------------------------------------------------
 
@@ -519,49 +612,55 @@ class StudyResult:
         """Records whose field equals the given value (or is contained in
         it, when a list/tuple/set is given): ``filter(workload="moe_3s",
         config=["none", "mpf90"])``."""
-        def match(r):
+        fields = {k: self._field(k) for k in where}
+        keep = []
+        for i in range(len(self)):
             for k, v in where.items():
-                got = r.get(k)
+                got = _to_py(fields[k][i])
                 if isinstance(v, (list, tuple, set, frozenset)):
                     if got not in v:
-                        return False
+                        break
                 elif got != v:
-                    return False
-            return True
-
-        return StudyResult([r for r in self.records if match(r)],
-                           self.waveforms)
+                    break
+            else:
+                keep.append(i)
+        return self._subset(keep)
 
     def passing(self) -> "StudyResult":
-        return StudyResult([r for r in self.records if r["spec_ok"]],
-                           self.waveforms)
+        ok = self._field("spec_ok")
+        return self._subset([i for i in range(len(self)) if ok[i]])
 
     def failing(self) -> "StudyResult":
-        return StudyResult([r for r in self.records
-                            if r["spec_ok"] is False], self.waveforms)
+        ok = self._field("spec_ok")
+        return self._subset([i for i in range(len(self)) if ok[i] is False])
 
     def unique(self, field: str) -> List:
         seen: Dict = {}
-        for r in self.records:
-            seen.setdefault(r.get(field), None)
+        for v in self._field(field):
+            seen.setdefault(_to_py(v), None)
         return list(seen)
 
     def best(self, by: str = "energy_overhead",
              among_passing: bool = True) -> Optional[Dict]:
         """The minimal-``by`` record (among spec-passing ones by default)."""
-        pool = self.passing().records if among_passing else self.records
-        return min(pool, key=lambda r: r[by]) if pool else None
+        pool = self.passing() if among_passing else self
+        if not len(pool):
+            return None
+        vals = pool._field(by)
+        return pool._row(int(np.argmin([_to_py(v) for v in vals])))
 
     def passing_configs(self, **where) -> List[str]:
         """Config names every matching scenario of which passes its spec,
         ordered by worst-case energy overhead (the serve-path answer)."""
         sub = self.filter(**where)
+        configs, oks = sub._field("config"), sub._field("spec_ok")
+        overheads = sub._field("energy_overhead")
         worst: Dict[str, float] = {}
         ok: Dict[str, bool] = {}
-        for r in sub.records:
-            c = r["config"]
-            ok[c] = ok.get(c, True) and bool(r["spec_ok"])
-            worst[c] = max(worst.get(c, -np.inf), r["energy_overhead"])
+        for i in range(len(sub)):
+            c = configs[i]
+            ok[c] = ok.get(c, True) and bool(oks[i])
+            worst[c] = max(worst.get(c, -np.inf), overheads[i])
         return sorted((c for c, good in ok.items() if good),
                       key=lambda c: worst[c])
 
@@ -570,9 +669,12 @@ class StudyResult:
         """Nested dict table: ``pivot("workload", "config",
         "energy_overhead")[w][c]``.  Cells with several matching records
         keep the first (slice with ``filter`` for one record per cell)."""
+        idx_v, col_v = self._field(index), self._field(columns)
+        val_v = self._field(values)
         out: Dict = {}
-        for r in self.records:
-            out.setdefault(r[index], {}).setdefault(r[columns], r[values])
+        for i in range(len(self)):
+            out.setdefault(_to_py(idx_v[i]), {}).setdefault(
+                _to_py(col_v[i]), _to_py(val_v[i]))
         return out
 
     # -- export -------------------------------------------------------------

@@ -17,13 +17,96 @@ Scheme (see DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Scenario-axis sharding (the power-study engine's data parallelism)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioShardPlan:
+    """1-D mesh over the scenario (batch-of-scenarios) axis.
+
+    The power-study engine (``repro.core.engine``) is embarrassingly
+    parallel along its leading scenario axis; this plan is the general
+    form of its old single-host ``shard_devices`` switch: an explicit
+    ``Mesh`` + ``NamedSharding`` over one named axis, so the same
+    annotations GSPMD partitions on one host partition across hosts when
+    the mesh is built from ``jax.devices()`` under ``jax.distributed``.
+
+    Multi-host readiness is the point of ``local_rows``: a chunked driver
+    feeds each chunk's *process-local* row slice and builds the global
+    array per chunk — the chunk executor composes with the plan by
+    padding every chunk to a shard multiple (``shard_batch``) before the
+    compiled call.  On a single process ``local_rows`` is the whole
+    chunk, so the code path is identical either way.
+    """
+    mesh: Mesh
+    axis: str = "scenario"
+
+    @classmethod
+    def make(cls, devices=None, *, axis: str = "scenario"
+             ) -> "ScenarioShardPlan":
+        devs = list(jax.devices() if devices is None else devices)
+        return cls(Mesh(np.asarray(devs), (axis,)), axis)
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def n_processes(self) -> int:
+        return len({getattr(d, "process_index", 0)
+                    for d in self.mesh.devices.flat})
+
+    @property
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.axis))
+
+    def pad_rows(self, B: int) -> int:
+        """Rows to append so ``B`` divides evenly across the shards."""
+        return (-B) % self.n_shards
+
+    def local_rows(self, B: int) -> slice:
+        """The slice of a ``B``-row (shard-multiple) scenario batch this
+        process owns — the chunk slicing a multi-host driver feeds with
+        process-local data.  Single-process: the whole batch."""
+        procs = self.n_processes
+        if procs <= 1:
+            return slice(0, B)
+        per = B // procs
+        rank = jax.process_index()
+        return slice(rank * per, (rank + 1) * per)
+
+    def shard_batch(self, tree, B: int):
+        """Pad every batched leaf to a shard multiple (repeating the last
+        row — callers slice results back to ``[:B]``) and commit it to
+        the scenario mesh.  Returns ``(tree, padded_B)``.  No-op on a
+        one-device mesh."""
+        if self.n_shards <= 1:
+            return tree, B
+        pad = self.pad_rows(B)
+        if pad:
+            tree = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.repeat(a[-1:], pad, axis=0)], axis=0), tree)
+        sh = self.sharding
+        return jax.tree.map(lambda a: jax.device_put(a, sh), tree), B + pad
+
+
+@functools.lru_cache(maxsize=None)
+def scenario_plan() -> ScenarioShardPlan:
+    """The default plan: every local device along one 'scenario' axis."""
+    return ScenarioShardPlan.make()
 
 
 @dataclasses.dataclass(frozen=True)

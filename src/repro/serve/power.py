@@ -8,13 +8,21 @@ configurations keep it inside the utility spec, and at what energy cost?
 ``PowerComplianceService`` answers it through the Study API: a query
 builds the candidate catalog (baseline + MPF floors + batteries + their
 pairings, sized off the job's raw swing), declares a one-workload Study,
-runs it as one compiled call per length, and returns the passing configs
-ranked by worst-case energy overhead.  When NO catalog config passes, the
-service falls back to on-demand design: the engine's grid/gradient/hybrid
-solver synthesizes a (MPF, battery) configuration for this exact query
-and returns it (with ranked alternatives) under ``"designed"``.  Answers
-are cached per (workload, fleet, spec) so repeated queries are dictionary
-lookups.
+runs it on the *streaming* chunked executor, and returns the passing
+configs ranked by worst-case energy overhead.  When NO catalog config
+passes, the service falls back to on-demand design: the engine's
+grid/gradient/hybrid solver synthesizes a (MPF, battery) configuration
+for this exact query and returns it (with ranked alternatives) under
+``"designed"``.  Answers are cached per (workload, fleet, spec) so
+repeated queries are dictionary lookups.
+
+Memory bound: the service never retains whole-study waveforms.  A query
+holds O(``stream_chunk`` * trace length) waveform samples on device
+while it streams, the columnar ``StudyResult`` it keeps as
+``last_result`` holds metrics only (O(catalog size) small columns, no
+waveforms), and the answer cache holds O(``cache_size``) JSON-sized
+dicts — so resident memory is independent of how many scenarios a
+query's catalog expands to.
 
 ``handle`` is the JSON boundary (dict in, JSON-safe dict out) a service
 framework would mount; the module is also a CLI:
@@ -26,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.engine import design
@@ -81,7 +90,8 @@ class PowerComplianceService:
                  key: Optional[int] = 0,
                  cache_size: int = 128,
                  design_fallback: bool = True,
-                 design_method: str = "hybrid"):
+                 design_method: str = "hybrid",
+                 stream_chunk: int = 256):
         self.wave_cfg = wave_cfg or WaveformConfig(dt=0.002, steps=10,
                                                    jitter_s=0.002)
         self.hw = hw
@@ -92,6 +102,7 @@ class PowerComplianceService:
         self.cache_size = cache_size
         self.design_fallback = design_fallback
         self.design_method = design_method
+        self.stream_chunk = int(stream_chunk)
         self._cache: Dict[Tuple, Dict] = {}
         self.last_result: Optional[StudyResult] = None
 
@@ -100,9 +111,16 @@ class PowerComplianceService:
     def query(self, workload: IterationTimeline, n_chips: int,
               spec: Union[str, UtilitySpec] = "moderate", *,
               workload_name: str = "workload",
-              padding: str = "auto") -> Dict:
+              padding: str = "auto",
+              on_chunk=None) -> Dict:
         """(workload, fleet, spec) -> which catalog configs pass, ranked by
-        worst-case (over seeds) energy overhead."""
+        worst-case (over seeds) energy overhead.
+
+        The catalog Study runs on the streaming executor
+        (``Study.run(stream=stream_chunk)``): metrics-only answers, no
+        whole-study waveform retention.  ``on_chunk(done, total,
+        elapsed_s)`` optionally reports progress (cache hits answer
+        without invoking it)."""
         cache_key = self._cache_key(workload, n_chips, spec, padding)
         if cache_key in self._cache:
             return self._cache[cache_key]
@@ -124,7 +142,7 @@ class PowerComplianceService:
                                               hw=hw),
                       specs=spec, seeds=self.seeds, wave_cfg=cfg, hw=hw,
                       key=self.key, padding=padding)
-        result = study.run()
+        result = study.run(stream=self.stream_chunk, on_chunk=on_chunk)
         self.last_result = result
 
         passing_names = result.passing_configs()
@@ -183,12 +201,15 @@ class PowerComplianceService:
 
     # -- JSON boundary ------------------------------------------------------
 
-    def handle(self, request: Dict) -> Dict:
+    def handle(self, request: Dict, *, on_chunk=None) -> Dict:
         """One request dict -> one JSON-safe answer dict.
 
         ``{"workload": {"period_s": 2.0, "comm_frac": 0.25,
                         "moe_notch": false} | {"cell": "<dryrun json>"},
            "n_chips": 512, "spec": "lenient|moderate|tight"}``
+
+        ``on_chunk`` is a host-side progress callback (not part of the
+        JSON boundary) threaded to ``query`` — the CLI's ``--progress``.
         """
         try:
             wl = request["workload"]
@@ -206,7 +227,7 @@ class PowerComplianceService:
                 raise TypeError(f"unsupported workload request: {wl!r}")
             answer = self.query(tl, int(request["n_chips"]),
                                 request.get("spec", "moderate"),
-                                workload_name=name)
+                                workload_name=name, on_chunk=on_chunk)
             return json.loads(json.dumps(answer, default=float))
         except (KeyError, TypeError, ValueError, OSError) as e:
             # OSError: a bad --cell path must come back as an error dict,
@@ -226,14 +247,21 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--n-chips", type=int, default=512)
     ap.add_argument("--spec", default="moderate",
                     choices=("lenient", "moderate", "tight"))
+    ap.add_argument("--progress", action="store_true",
+                    help="report streaming sweep progress on stderr")
     args = ap.parse_args(argv)
 
     workload: Dict = ({"cell": args.cell} if args.cell else
                       {"period_s": args.period_s, "comm_frac": args.comm_frac,
                        "moe_notch": args.moe_notch})
+    on_chunk = None
+    if args.progress:
+        def on_chunk(done: int, total: int, elapsed: float) -> None:
+            print(f"# {done}/{total} scenarios in {elapsed:.1f}s",
+                  file=sys.stderr)
     service = PowerComplianceService()
     answer = service.handle({"workload": workload, "n_chips": args.n_chips,
-                             "spec": args.spec})
+                             "spec": args.spec}, on_chunk=on_chunk)
     print(json.dumps(answer, indent=2))
 
 

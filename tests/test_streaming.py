@@ -1,0 +1,337 @@
+"""Streaming chunked executor + columnar StudyResult + mesh sharding plan.
+
+The acceptance contract (ISSUE 5): chunked runs are bit-identical to
+one-shot runs on overlapping grids — including mixed-length padded
+groups whose chunk boundaries split a dedup prefix group — the columnar
+record store answers the query API exactly like the list-of-dicts form,
+and scenario-axis sharding (the mesh-general plan) composes with
+chunking.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import engine
+from repro.core.study import StudyResult
+from repro.parallel.sharding import ScenarioShardPlan, scenario_plan
+
+DT = 0.002
+N_CHIPS = 256
+
+
+def _tl(period=1.0, comm=0.3, moe=False):
+    return core.synthetic_timeline(period_s=period, comm_frac=comm,
+                                   moe_notch=moe)
+
+
+def _cfg(**kw):
+    kw.setdefault("dt", DT)
+    kw.setdefault("steps", 4)
+    kw.setdefault("jitter_s", 0.002)
+    return core.WaveformConfig(**kw)
+
+
+def _gpu(mpf):
+    return core.GpuPowerSmoothing(mpf_frac=mpf, ramp_up_w_per_s=2000,
+                                  ramp_down_w_per_s=2000, stop_delay_s=1.0)
+
+
+def _noisy_firefly():
+    return core.Firefly(telemetry=core.TelemetrySource(
+        period_s=0.002, latency_s=0.002, noise_w=20.0))
+
+
+def _study(**kw):
+    """Mixed-length workloads, a disabled baseline, a noisy config, two
+    specs, two seeds: every fusion/dedup/keying lever active at once."""
+    cfg = _cfg()
+    tl_short, tl_long = _tl(1.0), _tl(2.0, moe=True)
+    dc = core.aggregate(core.chip_waveform(tl_short, cfg), N_CHIPS, cfg)
+    swing = float(dc.max() - dc.min())
+    bat = core.RackBattery(capacity_j=swing, max_discharge_w=swing,
+                           max_charge_w=swing, target_tau_s=5.0)
+    specs = core.example_specs(job_mw=dc.mean() / 1e6)
+    kw.setdefault("configs", {"none": None,
+                              "mpf80+bat": (_gpu(0.8), bat),
+                              "noisy_ff": (_noisy_firefly(), None)})
+    return core.Study(
+        {"short": tl_short, "long": tl_long}, fleets=[N_CHIPS],
+        specs={"moderate": specs["moderate"], "tight": specs["tight"]},
+        seeds=[0, 1], wave_cfg=cfg, key=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# chunked == one-shot, bitwise
+# ---------------------------------------------------------------------------
+
+def test_chunked_padded_run_is_bit_identical_to_oneshot():
+    """Padded (mixed-length fused) groups, chunk size 5: boundaries fall
+    inside structure groups AND split dedup prefix groups (rows sharing a
+    (workload, fleet, seed) synthesis prefix sit at stride len(seeds)=2,
+    so a 5-row chunk always cuts one).  Records must be bit-identical."""
+    study = _study()
+    oneshot = study.run(padding="pad")
+    chunked = study.run(padding="pad", stream=5)
+    assert len(chunked) == len(oneshot) == 24
+    assert chunked.records == oneshot.records
+
+
+def test_chunked_bucket_run_is_bit_identical_to_oneshot():
+    study = _study()
+    oneshot = study.run(padding="bucket")
+    chunked = study.run(padding="bucket", stream=2)
+    assert chunked.records == oneshot.records
+
+
+def test_chunk_size_one_and_overshoot_match():
+    study = _study(configs={"none": None, "mpf80": (_gpu(0.8), None)})
+    ref = study.run()
+    assert study.run(stream=1).records == ref.records       # 1 row per chunk
+    assert study.run(stream=10_000).records == ref.records  # chunk > grid
+    assert study.run(stream=True).records == ref.records
+
+
+def test_chunked_waveforms_match_oneshot():
+    study = _study(keep_waveforms=True)
+    a = study.run()
+    b = study.run(stream=3)
+    assert b.waveforms is not None and len(b.waveforms) == len(a.waveforms)
+    for wa, wb in zip(a.waveforms, b.waveforms):
+        np.testing.assert_array_equal(wa["dc_mitigated"], wb["dc_mitigated"])
+        np.testing.assert_array_equal(wa["dc_raw"], wb["dc_raw"])
+
+
+def test_on_chunk_progress_reports_done_total_elapsed():
+    study = _study()
+    calls = []
+    study.run(stream=4, on_chunk=lambda d, t, e: calls.append((d, t, e)))
+    assert calls[-1][0] == calls[-1][1] == study.n_rows
+    done = [d for d, _, _ in calls]
+    assert done == sorted(done) and len(set(done)) == len(done)
+    elapsed = [e for _, _, e in calls]
+    assert all(b >= a for a, b in zip(elapsed, elapsed[1:]))
+    assert all(t == study.n_rows for _, t, _ in calls)
+
+
+# ---------------------------------------------------------------------------
+# engine.stream_batches directly
+# ---------------------------------------------------------------------------
+
+def test_stream_batches_matches_simulate_batch_metrics():
+    """Uniform-length rows, one spec: chunk metrics must equal the
+    one-shot engine call's in-jit reductions."""
+    cfg = _cfg()
+    tl = _tl(1.0)
+    dc = core.aggregate(core.chip_waveform(tl, cfg), N_CHIPS, cfg)
+    swing = float(dc.max() - dc.min())
+    spec = core.example_specs(job_mw=dc.mean() / 1e6)["moderate"]
+    mits = [_gpu(m) for m in (0.5, 0.65, 0.8, 0.9, 0.85)]
+    ref = engine.simulate_batch(tl, N_CHIPS, cfg, device_mitigation=mits,
+                                spec=spec, seeds=[0, 1, 2, 3, 4])
+    chunks = list(engine.stream_batches(tl, N_CHIPS, cfg,
+                                        device_mitigation=mits, specs=spec,
+                                        seeds=[0, 1, 2, 3, 4], chunk_size=2))
+    assert [len(c) for c in chunks] == [2, 2, 1]
+    assert [(c.start, c.stop) for c in chunks] == [(0, 2), (2, 4), (4, 5)]
+    eo = np.concatenate([c.energy_overhead for c in chunks])
+    np.testing.assert_array_equal(eo, ref.energy_overhead)
+    ok = np.concatenate([c.spec_ok[0] for c in chunks])
+    np.testing.assert_array_equal(ok, ref.spec_ok)
+    swing_mit = np.concatenate([c.swing_mitigated["swing_w"] for c in chunks])
+    np.testing.assert_array_equal(swing_mit, ref.swing_mitigated["swing_w"])
+    for b, (c, j) in enumerate([(0, 0), (0, 1), (1, 0), (1, 1), (2, 0)]):
+        rep = chunks[c].report(0, j)
+        assert rep.ok == bool(ref.spec_ok[b])
+        assert rep.violations == ref.report(b).violations
+        for k, v in ref.report(b).metrics.items():
+            np.testing.assert_allclose(rep.metrics[k], v, rtol=1e-6,
+                                       atol=1e-9, err_msg=k)
+
+
+def test_stream_batches_mixed_lengths_and_waveforms():
+    """Mixed lengths auto-pad; per-row true lengths survive; waveforms
+    only come back when explicitly requested."""
+    cfg = _cfg()
+    tls = [_tl(1.0), _tl(2.0, moe=True), _tl(1.0)]
+    lens = [len(core.chip_waveform(t, cfg)) for t in tls]
+    chunks = list(engine.stream_batches(tls, N_CHIPS, cfg,
+                                        device_mitigation=_gpu(0.8),
+                                        specs=None, chunk_size=2))
+    got = [c.length(i) for c in chunks for i in range(len(c))]
+    assert got == lens
+    assert all(c.dc_mitigated is None and c.dc_raw is None for c in chunks)
+    assert all(c.spec_ok == [None] for c in chunks)
+    assert all(c.bands_mitigated is not None for c in chunks)
+
+    kept = list(engine.stream_batches(tls, N_CHIPS, cfg,
+                                      device_mitigation=_gpu(0.8),
+                                      specs=None, chunk_size=2,
+                                      keep_waveforms=True))
+    ref = engine.simulate_batch(tls, N_CHIPS, cfg, device_mitigation=_gpu(0.8),
+                                pad_to=max(lens), spectra=False)
+    rows = np.concatenate([c.dc_mitigated for c in kept])
+    np.testing.assert_array_equal(rows, ref.dc_mitigated)
+
+
+# ---------------------------------------------------------------------------
+# columnar StudyResult: API parity with the list-of-dicts form
+# ---------------------------------------------------------------------------
+
+def test_columnar_roundtrip_matches_list_of_dicts(tmp_path):
+    res = _study().run()
+    legacy = StudyResult(records=[dict(r) for r in res.records])
+
+    assert res.to_records() == legacy.to_records()
+    assert res.to_json() == legacy.to_json()
+    assert res.to_csv() == legacy.to_csv()
+    assert res.table() == legacy.table()
+    assert len(res) == len(legacy)
+    assert res[3] == legacy[3] and list(res) == list(legacy)
+
+    for where in ({"workload": "short"},
+                  {"config": ["none", "mpf80+bat"], "seed": 0},
+                  {"spec": "tight", "spec_ok": True},
+                  {"designed": False},
+                  {"no_such_field": None}):
+        a, b = res.filter(**where), legacy.filter(**where)
+        assert a.records == b.records, where
+    assert res.passing().records == legacy.passing().records
+    assert res.failing().records == legacy.failing().records
+    assert res.best() == legacy.best()
+    assert res.best(among_passing=False) == legacy.best(among_passing=False)
+    assert res.unique("config") == legacy.unique("config")
+    assert res.passing_configs() == legacy.passing_configs()
+    for piv in (("workload", "config", "spec_ok"),
+                ("workload", "config", "energy_overhead")):
+        assert res.pivot(*piv) == legacy.pivot(*piv)
+
+    # filtered columnar subsets stay queryable and keep python types
+    sub = res.filter(workload="short").filter(seed=0)
+    assert all(r["workload"] == "short" and r["seed"] == 0 for r in sub)
+    rec = sub[0]
+    assert isinstance(rec["n_chips"], int)
+    assert isinstance(rec["energy_overhead"], float)
+    assert isinstance(rec["violations"], tuple)
+    assert rec["spec_ok"] in (True, False, None)
+    json.dumps(sub.to_records())
+
+    # exports to disk round-trip
+    path = os.path.join(tmp_path, "res.json")
+    res.to_json(path)
+    with open(path) as fh:
+        assert len(json.load(fh)) == len(res)
+
+
+def test_columnar_concatenates_with_optimize_records():
+    """The test_design idiom: records from run() + optimize() concatenate
+    into a fresh StudyResult and stay queryable."""
+    res = _study(configs={"none": None}).run()
+    extra = dict(res.records[0])
+    extra.update({"config": "designed[hybrid]", "designed": True,
+                  "mpf_frac": 0.8, "battery_capacity_j": 1e4})
+    both = core.StudyResult(records=res.records + [extra])
+    assert len(both) == len(res) + 1
+    assert len(both.filter(designed=True)) == 1
+    assert both.filter(designed=True)[0]["mpf_frac"] == 0.8
+
+
+def test_columnar_rejects_both_representations():
+    with pytest.raises(ValueError):
+        StudyResult(records=[{}], columns={"index": np.arange(1)})
+
+
+# ---------------------------------------------------------------------------
+# mesh sharding plan + chunking (forced multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+def test_scenario_plan_shapes():
+    plan = scenario_plan()
+    assert plan.n_shards >= 1 and plan.n_processes == 1
+    assert plan.pad_rows(plan.n_shards + 1) == (
+        (-(plan.n_shards + 1)) % plan.n_shards)
+    assert plan.local_rows(8) == slice(0, 8)
+    custom = ScenarioShardPlan.make(axis="scn")
+    assert custom.axis == "scn" and custom.mesh.axis_names == ("scn",)
+
+
+SHARD_STREAM_SCRIPT = r"""
+import jax
+import numpy as np
+import repro.core as core
+from repro.parallel.sharding import ScenarioShardPlan, scenario_plan
+
+assert jax.device_count() == 2
+plan = scenario_plan()
+assert plan.n_shards == 2
+# shard_batch pads to a shard multiple and commits to the mesh
+import jax.numpy as jnp
+tree, B = plan.shard_batch((jnp.ones((3, 8)), jnp.arange(3.0)), 3)
+assert B == 4 and tree[0].shape == (4, 8)
+assert tree[0].sharding.spec == jax.sharding.PartitionSpec("scenario")
+
+tl = core.synthetic_timeline(1.0, 0.3)
+cfg = core.WaveformConfig(dt=0.002, steps=3, jitter_s=0.002)
+gpu = lambda m: core.GpuPowerSmoothing(mpf_frac=m, ramp_up_w_per_s=2000,
+                                       ramp_down_w_per_s=2000,
+                                       stop_delay_s=1.0)
+spec = core.example_specs(job_mw=0.05)["moderate"]
+kw = dict(workloads={"w": tl, "w2": core.synthetic_timeline(2.0, 0.25)},
+          fleets=[128, 256],
+          configs={"none": None, "a": (gpu(0.8), None), "b": (gpu(0.65), None)},
+          specs=spec, wave_cfg=cfg, key=0)
+ns = core.Study(**kw).run()                                    # unsharded
+sh = core.Study(**kw, shard_devices=True).run(stream=5)        # sharded+chunked
+pl = core.Study(**kw, plan=plan).run(stream=3)                 # explicit plan
+assert len(sh) == len(ns) == len(pl) == 12
+assert sh.records == pl.records
+for a, b in zip(sh.records, ns.records):
+    assert a["spec_ok"] == b["spec_ok"]
+    np.testing.assert_allclose(a["energy_overhead"], b["energy_overhead"],
+                               rtol=1e-5, atol=1e-8)
+print("SHARD_STREAM_OK")
+"""
+
+
+def test_sharded_plus_chunked_matches_unsharded():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", SHARD_STREAM_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD_STREAM_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# serve path: streaming + metrics-only retention
+# ---------------------------------------------------------------------------
+
+def test_service_streams_and_retains_metrics_only():
+    from repro.serve.power import PowerComplianceService
+    svc = PowerComplianceService(wave_cfg=_cfg(steps=4),
+                                 mpf_grid=(0.8,), cap_fracs=(1.0,),
+                                 stream_chunk=2)
+    calls = []
+    tl = _tl()
+    answer = svc.query(tl, N_CHIPS, "moderate",
+                       on_chunk=lambda d, t, e: calls.append((d, t)))
+    assert calls and calls[-1][0] == calls[-1][1] == 4
+    # the retained result is columnar metrics only — no waveforms
+    assert svc.last_result.waveforms is None
+    ref = PowerComplianceService(wave_cfg=_cfg(steps=4), mpf_grid=(0.8,),
+                                 cap_fracs=(1.0,)).query(tl, N_CHIPS,
+                                                         "moderate")
+    assert {p["config"]: p["energy_overhead"] for p in answer["passing"]} \
+        == {p["config"]: p["energy_overhead"] for p in ref["passing"]}
+    # cache hits do not re-run the study (no further on_chunk calls)
+    n_calls = len(calls)
+    assert svc.query(tl, N_CHIPS, "moderate",
+                     on_chunk=lambda d, t, e: calls.append((d, t))) is answer
+    assert len(calls) == n_calls
