@@ -270,6 +270,91 @@ def design_section():
     return "\n".join(lines)
 
 
+def serve_section():
+    """§Serve — the amortized compliance-query path (learned warm-start
+    design, coalesced batching, answer cache), numbers from
+    BENCH_serve.json (benchmarks/serve_bench.py)."""
+    lines = ["\n## §Serve — amortized compliance queries (warm-start, "
+             "coalescing, answer cache)\n",
+             "The serve path (`PowerComplianceService`) turns the heavy "
+             "machinery above into a query service, and amortizes it at "
+             "three levels — measured by `python -m benchmarks.serve_bench` "
+             "into `BENCH_serve.json` (`--smoke` is the CI mode; the full "
+             "run trains the predictor on a 72-cell Study sweep and writes "
+             "the artifact).\n",
+             "**Learned warm-start design** (`serve/warmstart.py`). "
+             "`design()` cold is solver-minutes; most production queries "
+             "are near previously-solved workloads. A small MLP maps a "
+             "17-dim spectral fingerprint (Goertzel amplitudes at the "
+             "grid-critical bins, swing, mean, fleet size, spec limits — "
+             "`extract_features`) to design seeds (MPF, battery capacity, "
+             "target tau). `engine.design(method=\"warmstart\")` expands "
+             "the seed through a capacity ladder, re-validates every rung "
+             "under the **hard tau=0 semantics**, and returns the cheapest "
+             "passing rung (`aux[\"warmstart_path\"]=\"fast\"`); if no "
+             "rung passes it escalates to gradient polish from the seed, "
+             "then to full `method=\"hybrid\"` — so the verdict "
+             "(feasible/infeasible) is always identical to the solver it "
+             "amortizes, the prediction only moves wall-clock. Training "
+             "data comes from one Study-driven sweep "
+             "(`benchmarks/warmstart_data.py`: scenarios x catalog x tau "
+             "ladder, labels = cheapest passing config per cell), "
+             "checkpoints via `ckpt/checkpoint.py` "
+             "(`WarmStartPredictor.save/load`, bit-exact round-trip).\n",
+             "**Cross-query compiled reuse.** Executables are keyed by "
+             "(trace length, spec *family*, mitigation structure) only: "
+             "`UtilitySpec.family()` erases thresholds to a canonical "
+             "static form and `UtilitySpec.limits()` re-injects them as "
+             "traced scalars, so querying new fleets, new thresholds, or "
+             "new workload mixes reuses the same compiled pipeline "
+             "(`test_no_retrace_*` pins `_cache_size()` constant).\n",
+             "**Concurrency-safe batched service.** The service front-ends "
+             "the Study executor with a lock-protected true-LRU answer "
+             "cache (eviction + recency tested), single-flight dedup (N "
+             "identical concurrent queries elect one leader; followers "
+             "wait on an `Event` and inherit a retry if the leader fails), "
+             "memoized per-workload synthesis/features, and "
+             "`query_many`/`handle_many` which coalesce N distinct queries "
+             "into ONE Study execution (per-query PRNG keys are folded "
+             "from *local* row indices and multi-query runs use per-length "
+             "bucket padding, so coalesced answers are bit-identical to "
+             "serial — pinned by `json.dumps` equality in "
+             "`test_serve_service.py`).\n"]
+    bench = os.path.join(ROOT, "BENCH_serve.json")
+    if os.path.exists(bench):
+        with open(bench) as fh:
+            b = json.load(fh)
+        d, s = b["design"], b["service"]
+        lines.append(
+            f"Measured (benchmarks/serve_bench.py, {b['n_chips']} chips, "
+            "tight spec, full run):\n\n"
+            "| path | cold s | warm s | vs cold hybrid |\n"
+            "|---|---|---|---|\n"
+            f"| design hybrid | {d['hybrid']['cold_s']} | "
+            f"{d['hybrid']['warm_s']} | — |\n"
+            f"| design warm-start | {d['warmstart']['cold_s']} | "
+            f"**{d['warmstart']['warm_s']}** | "
+            f"**{d['speedup_warm_vs_cold_hybrid']}x** |\n\n"
+            f"Same energy overhead ({d['hybrid']['energy_overhead']}) on "
+            f"both paths. Service: cache-hit p50 "
+            f"**{s['cache_hit_p50_us']} µs** / p99 "
+            f"{s['cache_hit_p99_us']} µs over 300 reps; "
+            f"{s['singleflight']['threads']} concurrent identical queries "
+            f"-> {s['singleflight']['study_runs']} study run "
+            f"({s['singleflight']['waits']} single-flight waits); "
+            f"{s['coalesce']['queries']} distinct queries coalesced -> "
+            f"{s['coalesce']['study_runs']} study run, compiled-executable "
+            f"count {s['compiled_executables']['before']} -> "
+            f"{s['compiled_executables']['after']} (no retrace). Hot-path "
+            "cost gates: `python -m benchmarks.roofline --kernels` asserts "
+            "jaxpr-exact FLOPs/bytes of the sliding-Goertzel monitor, the "
+            "fingerprint extractor, the warm-start MLP, and the ballast "
+            "tile against recorded budgets (deterministic counts; a "
+            "breach fails CI) and merges them into `BENCH_kernels.json` "
+            "under `per_kernel`.")
+    return "\n".join(lines)
+
+
 def kernels_section():
     """§Kernels — the telemetry backstop's sliding-Goertzel monitor on the
     streaming Pallas kernel, numbers from BENCH_kernels.json
@@ -538,6 +623,7 @@ def main():
     lines.append(power_sweep_section())
     lines.append(streaming_section())
     lines.append(design_section())
+    lines.append(serve_section())
     lines.append(kernels_section())
 
     lines.append("""

@@ -12,9 +12,17 @@ Also: MODEL_FLOPS (6*N*D train / 2*N_active*tokens inference), the
 useful-compute ratio MODEL_FLOPS/HLO_FLOPS, the dominant term, a roofline
 fraction (useful compute time / dominant term = the score), and a
 suggestion for the dominant bottleneck. Emits CSV + artifacts/roofline.json.
+
+``--kernels`` is the hot-path cost regression gate (the CI mode): it
+re-derives the jaxpr-exact FLOPs/bytes of the serve and backstop hot
+kernels at fixed reference shapes, asserts each stays inside its
+recorded budget (these counts are deterministic, so a budget breach
+means someone made the kernel do more work), and merges the counts into
+``BENCH_kernels.json`` under ``"per_kernel"``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 from typing import Dict
@@ -25,6 +33,18 @@ from repro.configs import get_config
 PEAK = 197e12
 HBM = 819e9
 LINK = 50e9
+
+KERNELS_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_kernels.json")
+
+# jaxpr-exact costs at the reference shapes below, with ~20% headroom;
+# deterministic, so a breach = the hot path genuinely got heavier
+KERNEL_BUDGETS = {
+    "sliding_goertzel": {"max_flops": 5.1e6, "max_bytes": 32.1e6},
+    "goertzel_fingerprint": {"max_flops": 0.73e6, "max_bytes": 1.8e6},
+    "warmstart_mlp": {"max_flops": 0.78e6, "max_bytes": 0.28e6},
+    "ballast": {"max_flops": 10.4e9, "max_bytes": 103.2e6},
+}
 
 SUGGEST = {
     "compute": ("cut non-useful FLOPs: triangular-chunk attention schedule, "
@@ -75,7 +95,84 @@ def analyze(cell: Dict) -> Dict:
     }
 
 
+def kernel_costs() -> Dict[str, Dict[str, float]]:
+    """jaxpr-exact FLOPs/bytes of the serve + backstop hot kernels at
+    fixed reference shapes: the backstop's sliding Goertzel monitor
+    (1e5-sample trace, 2000-sample window, 4 bins), the serve feature
+    extractor's spectral fingerprint (2e4 samples, 7 grid-critical
+    bins), the warm-start MLP (batch 64), and the ballast burn tile
+    (1024x256x256, 64 iterations)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.spectrum import GRID_CRITICAL_HZ, goertzel_bin_amplitudes_jax
+    from repro.kernels.ballast.ref import ballast_ref
+    from repro.kernels.goertzel.ref import sliding_bin_power_jnp
+    from repro.launch.hlo_analysis import jaxpr_costs
+    from repro.serve.warmstart import (N_FEATURES, init_warmstart,
+                                       warmstart_forward)
+
+    x = jnp.zeros(100_000, jnp.float32)
+    xf = jnp.zeros(20_000, jnp.float32)
+    params = init_warmstart(jax.random.PRNGKey(0))
+    xb = jnp.zeros((64, N_FEATURES), jnp.float32)
+    a = jnp.zeros((1024, 256), jnp.float32)
+    b = jnp.zeros((256, 256), jnp.float32)
+    costs = {
+        "sliding_goertzel": jaxpr_costs(
+            lambda x: sliding_bin_power_jnp(x, 0.001, (0.5, 1.0, 2.0, 9.0),
+                                            2000), x),
+        "goertzel_fingerprint": jaxpr_costs(
+            lambda x: goertzel_bin_amplitudes_jax(x, 0.002,
+                                                  GRID_CRITICAL_HZ), xf),
+        "warmstart_mlp": jaxpr_costs(warmstart_forward, params, xb),
+        "ballast": jaxpr_costs(lambda a, b: ballast_ref(a, b, 64), a, b),
+    }
+    for name, c in costs.items():
+        c["intensity_flops_per_byte"] = round(c["flops"] / c["bytes"], 3)
+    return costs
+
+
+def check_kernels() -> None:
+    """Derive the hot-kernel costs, gate them against the budgets (a
+    breach fails CI), and merge into BENCH_kernels.json."""
+    costs = kernel_costs()
+    failures = []
+    for name, c in costs.items():
+        budget = KERNEL_BUDGETS[name]
+        if c["flops"] > budget["max_flops"]:
+            failures.append(f"{name}: flops {c['flops']:.3g} > budget "
+                            f"{budget['max_flops']:.3g}")
+        if c["bytes"] > budget["max_bytes"]:
+            failures.append(f"{name}: bytes {c['bytes']:.3g} > budget "
+                            f"{budget['max_bytes']:.3g}")
+        emit(f"roofline/kernel_{name}", 0.0, {
+            "flops": f"{c['flops']:.4g}", "bytes": f"{c['bytes']:.4g}",
+            "intensity": c["intensity_flops_per_byte"]})
+    assert not failures, "hot-path cost regression:\n  " + \
+        "\n  ".join(failures)
+
+    merged: Dict = {}
+    if os.path.exists(KERNELS_OUT):
+        with open(KERNELS_OUT) as fh:
+            merged = json.load(fh)
+    merged["per_kernel"] = costs
+    with open(KERNELS_OUT, "w") as fh:
+        json.dump(merged, fh, indent=2)
+        fh.write("\n")
+    print(f"kernels OK: {len(costs)} hot paths inside budget; merged into "
+          f"{os.path.abspath(KERNELS_OUT)}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", action="store_true",
+                    help="hot-path FLOPs/bytes regression gate (CI mode); "
+                         "skips the dry-run roofline table")
+    args = ap.parse_args()
+    if args.kernels:
+        check_kernels()
+        return
     rows = []
     for mesh in ("single", "multi"):
         for key, cell in sorted(load_cells(mesh).items()):

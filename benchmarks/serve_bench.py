@@ -1,0 +1,224 @@
+"""Amortized serve path — BENCH_serve.json.
+
+Measures the three serve-layer amortization levels against the cold
+solver they replace:
+
+  warm-start design   ``design(method="warmstart")`` (learned seed +
+                      one vmapped hard ladder evaluation) vs the full
+                      ``hybrid`` solver, cold (incl. compile) and warm;
+                      verdicts must be identical and every answer hard
+                      tau=0 re-validated.
+  answer cache        repeated-query latency through the service's
+                      lock-protected LRU (p50/p99), plus single-flight:
+                      N identical concurrent queries -> ONE Study run.
+  coalescing + reuse  ``query_many`` fusing N distinct misses into one
+                      streaming execution, and the (length, spec family,
+                      structure) jit keying holding the compiled-
+                      executable count flat across new fleet sizes and
+                      spec thresholds.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+Hard invariants (asserted, also under ``--smoke``): warm-started and
+hybrid designs agree on feasibility and both pass the spec; cache-hit
+p50 is sub-millisecond; N identical concurrent queries run the Study
+exactly once; N distinct coalesced queries run it exactly once; no new
+executables compile when fleet size or spec thresholds change.  The
+full run additionally asserts warm warm-start design is >= 5x faster
+than the cold hybrid solve it amortizes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from typing import Dict
+
+import numpy as np
+
+import repro.core as core
+from repro.core import engine
+from repro.serve.power import PowerComplianceService
+from benchmarks.common import emit
+from benchmarks.warmstart_data import build_dataset, sweep_scenarios
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+N_CHIPS = 512
+
+
+def train_predictor(cfg, epochs: int):
+    """A small predictor trained on the 4-cell sweep (the bench needs a
+    representative warm-start, not a production one)."""
+    from repro.serve.warmstart import train_warmstart
+    X, Y, _ = build_dataset(sweep_scenarios(smoke=True), cfg, verbose=False)
+    pred, hist = train_warmstart(X, Y, epochs=epochs)
+    return pred, float(hist["loss"][-1])
+
+
+def bench_design(cfg, pred, smoke: bool) -> Dict:
+    """Cold/warm hybrid vs warm-start on a sweep-adjacent problem, with
+    verdict parity."""
+    tl = core.synthetic_timeline(period_s=1.8, comm_frac=0.28)
+    w = core.aggregate(core.chip_waveform(tl, cfg), N_CHIPS, cfg)
+    spec = core.example_specs(job_mw=float(w.mean()) / 1e6)["tight"]
+
+    t0 = time.perf_counter()
+    sol_h = engine.design(spec, w, cfg.dt, N_CHIPS, method="hybrid")
+    cold_h = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sol_h = engine.design(spec, w, cfg.dt, N_CHIPS, method="hybrid")
+    warm_h = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sol_w = engine.design(spec, w, cfg.dt, N_CHIPS, method="warmstart",
+                          warmstart=pred)
+    cold_w = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sol_w = engine.design(spec, w, cfg.dt, N_CHIPS, method="warmstart",
+                          warmstart=pred)
+    warm_w = time.perf_counter() - t0
+
+    # verdict parity: the warm-start path must agree with the solver it
+    # amortizes, and both answers carry a hard tau=0 validation report
+    assert (sol_h is None) == (sol_w is None), \
+        "warmstart and hybrid disagree on feasibility"
+    assert sol_h is not None and sol_h["report"].ok and sol_w["report"].ok, \
+        "a returned design failed hard re-validation"
+    if not smoke:
+        assert warm_w * 5.0 <= cold_h, (
+            f"warm warmstart {warm_w:.3f}s not >=5x faster than cold "
+            f"hybrid {cold_h:.3f}s")
+    emit("serve/design_hybrid", warm_h * 1e6, {"cold_s": round(cold_h, 2)})
+    emit("serve/design_warmstart", warm_w * 1e6,
+         {"cold_s": round(cold_w, 2), "path": sol_w["aux"]["warmstart_path"]})
+    return {
+        "hybrid": {"cold_s": round(cold_h, 3), "warm_s": round(warm_h, 3),
+                   "energy_overhead": round(sol_h["energy_overhead"], 5)},
+        "warmstart": {"cold_s": round(cold_w, 3), "warm_s": round(warm_w, 3),
+                      "energy_overhead": round(sol_w["energy_overhead"], 5),
+                      "path": sol_w["aux"]["warmstart_path"]},
+        "speedup_warm_vs_cold_hybrid": round(cold_h / warm_w, 1),
+        "speedup_warm_vs_warm_hybrid": round(warm_h / warm_w, 1),
+    }
+
+
+def bench_service(cfg, smoke: bool) -> Dict:
+    """Cache-hit latency, single-flight, coalescing, compiled reuse.
+
+    ``stream_chunk=4`` = the 4-config catalog row count, so single and
+    coalesced executions share one compiled batch shape and the
+    executable-count assertion isolates *content* changes (fleet size,
+    spec thresholds, workloads) from batch-shape changes."""
+    svc = PowerComplianceService(wave_cfg=cfg, mpf_grid=(0.8,),
+                                 cap_fracs=(1.0,), stream_chunk=4)
+    tl = core.synthetic_timeline(period_s=1.0, comm_frac=0.25)
+    svc.query(tl, N_CHIPS, "moderate")          # populate
+
+    reps = 50 if smoke else 300
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        svc.query(tl, N_CHIPS, "moderate")
+        lat.append(time.perf_counter() - t0)
+    p50 = float(np.percentile(lat, 50)) * 1e6
+    p99 = float(np.percentile(lat, 99)) * 1e6
+    assert p50 < 1000.0, f"cache-hit p50 {p50:.0f}us not sub-millisecond"
+    emit("serve/cache_hit", p50, {"p99_us": round(p99, 1), "reps": reps})
+
+    # single-flight: N identical concurrent misses -> exactly one Study run
+    sf = PowerComplianceService(wave_cfg=cfg, mpf_grid=(0.8,),
+                                cap_fracs=(1.0,), stream_chunk=4)
+    n_threads, errs = 8, []
+
+    def hammer():
+        try:
+            sf.query(tl, N_CHIPS, "moderate")
+        except Exception as e:     # pragma: no cover - surfaced below
+            errs.append(e)
+
+    ts = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+    assert sf.stats["study_runs"] == 1, \
+        f"single-flight ran the Study {sf.stats['study_runs']}x"
+
+    # coalescing + compiled reuse: distinct (workload, fleet, spec
+    # threshold) misses share one execution and the already-compiled
+    # (length, family, structure) executables
+    n_exec_before = engine._mitigate_vmapped._cache_size()
+    co = PowerComplianceService(wave_cfg=cfg, mpf_grid=(0.8,),
+                                cap_fracs=(1.0,), stream_chunk=4)
+    queries = [{"workload": tl, "n_chips": n, "spec": s}
+               for n, s in ((256, "moderate"), (1024, "lenient"),
+                            (4096, "tight"))]
+    t0 = time.perf_counter()
+    answers = co.query_many(queries)
+    coalesce_s = time.perf_counter() - t0
+    assert co.stats["study_runs"] == 1, \
+        f"coalescing ran the Study {co.stats['study_runs']}x"
+    assert all(a is not None and "error" not in a for a in answers)
+    n_exec_after = engine._mitigate_vmapped._cache_size()
+    assert n_exec_after == n_exec_before, (
+        f"new fleet sizes / spec thresholds retraced: "
+        f"{n_exec_before} -> {n_exec_after} executables")
+    emit("serve/coalesce3", coalesce_s * 1e6,
+         {"study_runs": co.stats["study_runs"],
+          "executables": n_exec_after})
+    return {
+        "cache_hit_p50_us": round(p50, 1),
+        "cache_hit_p99_us": round(p99, 1),
+        "singleflight": {"threads": n_threads,
+                         "study_runs": sf.stats["study_runs"],
+                         "waits": sf.stats["singleflight_waits"]},
+        "coalesce": {"queries": len(queries),
+                     "study_runs": co.stats["study_runs"],
+                     "wall_s": round(coalesce_s, 3)},
+        "compiled_executables": {"before": n_exec_before,
+                                 "after": n_exec_after},
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small problem, invariants only, no JSON artifact")
+    args = ap.parse_args(argv)
+
+    cfg = core.WaveformConfig(dt=0.005, steps=4 if args.smoke else 8,
+                              jitter_s=0.005)
+    t0 = time.perf_counter()
+    pred, loss = train_predictor(cfg, epochs=120 if args.smoke else 400)
+    train_s = time.perf_counter() - t0
+    print(f"# predictor trained in {train_s:.1f}s (final loss {loss:.2e})")
+
+    design = bench_design(cfg, pred, args.smoke)
+    service = bench_service(cfg, args.smoke)
+
+    if args.smoke:
+        print(f"smoke OK: verdict parity, cache-hit p50 "
+              f"{service['cache_hit_p50_us']:.0f}us, single-flight "
+              f"{service['singleflight']['study_runs']} run, coalesce "
+              f"{service['coalesce']['study_runs']} run, executables "
+              f"{service['compiled_executables']['before']} -> "
+              f"{service['compiled_executables']['after']}")
+        return
+
+    result = {
+        "n_chips": N_CHIPS,
+        "predictor": {"train_s": round(train_s, 1), "final_loss": loss},
+        "design": design,
+        "service": service,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+    print("wrote", os.path.abspath(OUT_PATH))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Warm-start training data + predictor checkpoint — the amortization
+sweep behind ``engine.design(method="warmstart")``.
+
+A Study-style grid of (workload period/comm-mix/MoE-notch, fleet size,
+spec tier) cells is solved with the full ``hybrid`` designer (hard
+tau=0 validated), each solution's battery latency is refined over a
+small tau ladder with ONE vmapped ``_eval_candidates`` call, and each
+cell contributes one (spectral feature vector, (MPF, capacity, tau))
+training pair.  ``train_warmstart`` fits the MLP predictor on the
+scale-free targets and the checkpoint lands under ``--ckpt-dir`` via
+``ckpt/checkpoint.py`` — the artifact ``PowerComplianceService(
+warmstart=<dir>)`` and ``serve_bench`` load.
+
+  PYTHONPATH=src python -m benchmarks.warmstart_data [--smoke] \
+      [--ckpt-dir warmstart_ckpt] [--epochs 400]
+
+The hard invariants (asserted, also under ``--smoke``): training loss
+decreases; the trained predictor's ``design(method="warmstart")``
+answer on a sweep cell passes its spec under hard tau=0 re-validation
+(the train -> predict -> revalidate round-trip).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import repro.core as core
+from repro.core import engine
+from repro.core.hardware import DEFAULT_HW
+from benchmarks.common import emit
+
+TAU_LADDER = (5.0, 10.0, 15.0, 30.0)
+DEFAULT_CKPT = os.path.join(os.path.dirname(__file__), "..", "warmstart_ckpt")
+
+
+def sweep_scenarios(smoke: bool = False) -> List[Dict]:
+    """The (workload, fleet, spec) training grid: square-wave periods and
+    comm mixes spanning the paper band, MoE-notch variants, three fleet
+    scales, all three spec tiers."""
+    if smoke:
+        return [
+            {"period_s": 2.0, "comm_frac": 0.25, "moe_notch": False,
+             "n_chips": 512, "spec": "moderate"},
+            {"period_s": 0.8, "comm_frac": 0.3, "moe_notch": False,
+             "n_chips": 512, "spec": "tight"},
+            {"period_s": 1.4, "comm_frac": 0.2, "moe_notch": True,
+             "n_chips": 1024, "spec": "moderate"},
+            {"period_s": 2.0, "comm_frac": 0.35, "moe_notch": False,
+             "n_chips": 1024, "spec": "tight"},
+        ]
+    out = []
+    for period_s in (0.6, 1.0, 1.6, 2.4):
+        for comm_frac, moe in ((0.2, False), (0.35, False), (0.25, True)):
+            for n_chips in (512, 2048):
+                for spec in ("lenient", "moderate", "tight"):
+                    out.append({"period_s": period_s, "comm_frac": comm_frac,
+                                "moe_notch": moe, "n_chips": n_chips,
+                                "spec": spec})
+    return out
+
+
+def _refine_tau(spec, w, dt: float, n_chips: int, mpf: float, cap: float,
+                swing: float, hw) -> float:
+    """Cheapest passing battery latency for a solved (MPF, capacity):
+    one vmapped hard evaluation over the tau ladder."""
+    if cap <= 0:
+        return TAU_LADDER[1]
+    cands = [(mpf, cap)] * len(TAU_LADDER)
+    _, ok, overhead, _, _ = engine._eval_candidates(
+        spec, w, dt, n_chips, cands, swing=swing, hw=hw,
+        target_tau_s=list(TAU_LADDER))
+    ok, overhead = np.asarray(ok), np.asarray(overhead)
+    if not ok.any():
+        return TAU_LADDER[1]
+    best = int(np.flatnonzero(ok)[np.argmin(overhead[ok])])
+    return TAU_LADDER[best]
+
+
+def build_dataset(scenarios: Sequence[Dict], cfg, *, hw=DEFAULT_HW,
+                  method: str = "hybrid", verbose: bool = True
+                  ) -> Tuple[np.ndarray, np.ndarray, List[Dict]]:
+    """Solve each sweep cell and return (features [N,F], targets [N,3]
+    as physical (mpf_frac, capacity_j, tau_s), per-cell meta).  Cells the
+    solver finds infeasible are skipped (logged)."""
+    from repro.serve.warmstart import extract_features
+
+    X, Y, meta = [], [], []
+    for i, sc in enumerate(scenarios):
+        tl = core.synthetic_timeline(period_s=sc["period_s"],
+                                     comm_frac=sc["comm_frac"],
+                                     moe_notch=sc["moe_notch"])
+        w = core.aggregate(core.chip_waveform(tl, cfg, hw),
+                           sc["n_chips"], cfg, hw)
+        spec = core.example_specs(job_mw=float(w.mean()) / 1e6)[sc["spec"]]
+        swing = float(w.max() - w.min())
+        t0 = time.perf_counter()
+        sol = engine.design(spec, w, cfg.dt, sc["n_chips"], method=method,
+                            hw=hw)
+        if sol is None or not sol["report"].ok:
+            if verbose:
+                print(f"# cell {i}: infeasible, skipped ({sc})")
+            continue
+        mpf = float(sol["mpf_frac"])
+        cap = float(sol["battery_capacity_j"])
+        tau = _refine_tau(spec, w, cfg.dt, sc["n_chips"], mpf, cap, swing,
+                          hw)
+        X.append(extract_features(spec, w, cfg.dt, sc["n_chips"]))
+        Y.append([mpf, cap, tau])
+        meta.append(dict(sc, mpf_frac=mpf, battery_capacity_j=cap,
+                         target_tau_s=tau,
+                         solve_s=round(time.perf_counter() - t0, 2)))
+        if verbose:
+            print(f"# cell {i}: mpf={mpf:.3f} cap={cap / 1e6:.3f}MJ "
+                  f"tau={tau:g}s in {meta[-1]['solve_s']}s")
+    if not X:
+        raise RuntimeError("sweep produced no feasible training cells")
+    return (np.stack(X).astype(np.float32),
+            np.asarray(Y, np.float32), meta)
+
+
+def train_and_check(X: np.ndarray, Y: np.ndarray, scenarios, cfg, *,
+                    hw=DEFAULT_HW, epochs: int = 400,
+                    ckpt_dir: Optional[str] = None):
+    """Fit the predictor, checkpoint it, and run the train -> predict ->
+    revalidate round-trip on the first sweep cell."""
+    from repro.serve.warmstart import WarmStartPredictor, train_warmstart
+
+    pred, hist = train_warmstart(X, Y, epochs=epochs)
+    losses = hist["loss"]
+    assert losses[-1] < losses[0], \
+        f"training loss did not decrease: {losses[0]} -> {losses[-1]}"
+    if ckpt_dir:
+        pred.save(ckpt_dir)
+        pred = WarmStartPredictor.load(ckpt_dir)
+
+    sc = scenarios[0]
+    tl = core.synthetic_timeline(period_s=sc["period_s"],
+                                 comm_frac=sc["comm_frac"],
+                                 moe_notch=sc["moe_notch"])
+    w = core.aggregate(core.chip_waveform(tl, cfg, hw), sc["n_chips"],
+                       cfg, hw)
+    spec = core.example_specs(job_mw=float(w.mean()) / 1e6)[sc["spec"]]
+    sol = engine.design(spec, w, cfg.dt, sc["n_chips"], method="warmstart",
+                        warmstart=pred, hw=hw)
+    assert sol is not None and sol["report"].ok, \
+        "warm-started design failed hard re-validation"
+    return pred, hist, sol
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="4-cell sweep, short training, temp checkpoint")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help=f"checkpoint directory (default {DEFAULT_CKPT}; "
+                         "a temp dir under --smoke)")
+    ap.add_argument("--epochs", type=int, default=400)
+    ap.add_argument("--method", default="hybrid",
+                    choices=("grid", "gradient", "hybrid"),
+                    help="target-generating solver")
+    args = ap.parse_args(argv)
+
+    cfg = core.WaveformConfig(dt=0.005, steps=4 if args.smoke else 8,
+                              jitter_s=0.005)
+    scenarios = sweep_scenarios(args.smoke)
+    epochs = 120 if args.smoke else args.epochs
+    ckpt_dir = args.ckpt_dir or (tempfile.mkdtemp(prefix="warmstart_")
+                                 if args.smoke else DEFAULT_CKPT)
+
+    t0 = time.perf_counter()
+    X, Y, meta = build_dataset(scenarios, cfg, method=args.method)
+    sweep_s = time.perf_counter() - t0
+    print(f"# dataset: {len(X)}/{len(scenarios)} feasible cells "
+          f"in {sweep_s:.1f}s")
+
+    t0 = time.perf_counter()
+    pred, hist, sol = train_and_check(X, Y, scenarios, cfg, epochs=epochs,
+                                      ckpt_dir=ckpt_dir)
+    train_s = time.perf_counter() - t0
+    emit("warmstart/train", train_s * 1e6, {
+        "cells": len(X), "epochs": epochs,
+        "loss0": round(float(hist["loss"][0]), 6),
+        "loss": round(float(hist["loss"][-1]), 6)})
+    print(f"# round-trip: warmstart path={sol['aux']['warmstart_path']} "
+          f"mpf={sol['mpf_frac']:.3f} "
+          f"cap={sol['battery_capacity_j'] / 1e6:.3f}MJ -> spec ok")
+    print(f"{'smoke OK' if args.smoke else 'wrote'}: checkpoint at "
+          f"{os.path.abspath(ckpt_dir)} "
+          f"(loss {hist['loss'][0]:.4f} -> {hist['loss'][-1]:.6f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ from repro.core.study import (MitigationConfig, Scenario, Study, StudyResult)
 from repro.core.telemetry import TelemetrySource
 from repro.core.waveform import WaveformConfig
 from repro.serve.power import PowerComplianceService, default_catalog
+from repro.serve.warmstart import WarmStartPredictor, train_warmstart
 
 __all__ = [
     # the declarative study surface
@@ -45,6 +46,7 @@ __all__ = [
     "stream_batches", "StreamChunk", "ScenarioShardPlan", "scenario_plan",
     # the serve path
     "PowerComplianceService", "default_catalog",
+    "WarmStartPredictor", "train_warmstart",
     # scenario ingredients
     "IterationTimeline", "Phase", "synthetic_timeline", "from_dryrun_cell",
     "load_cell", "WaveformConfig", "TelemetrySource",

@@ -178,7 +178,7 @@ def _synth_one(levels, shifts, n_chips, n_valid, cfg: WaveformConfig,
 
 
 def _mitigate_one(chip, dc_raw, shifts, n_chips, dev, rack, dev_on, rack_on,
-                  key, n_valid, cfg: WaveformConfig, hw: Hardware,
+                  key, n_valid, limits, cfg: WaveformConfig, hw: Hardware,
                   spec: Optional[UtilitySpec], spectra: bool,
                   chip_outputs: bool = True) -> Dict:
     """Per-config suffix of one scenario inside vmap.
@@ -237,7 +237,7 @@ def _mitigate_one(chip, dc_raw, shifts, n_chips, dev, rack, dev_on, rack_on,
         out["bands"] = critical_band_report_jax(dc_raw, cfg.dt)
         out["bands_mitigated"] = critical_band_report_jax(dc, cfg.dt)
     if spec is not None:
-        ok, flags, metrics = spec.validate_jax(dc, cfg.dt)
+        ok, flags, metrics = spec.validate_jax(dc, cfg.dt, limits)
         out["spec_ok"] = ok
         out["spec_flags"] = flags
         out["spec_metrics"] = metrics
@@ -259,23 +259,28 @@ def _swing_stats_masked(w, mask, n_valid) -> Dict[str, jnp.ndarray]:
 
 
 def _simulate_one(levels, shifts, n_chips, dev, rack, dev_on, rack_on, key,
-                  n_valid, cfg, hw, spec, spectra) -> Dict:
+                  n_valid, limits, cfg, hw, spec, spectra) -> Dict:
     chip, dc_raw = _synth_one(levels, shifts, n_chips, n_valid, cfg, hw)
     return _mitigate_one(chip, dc_raw, shifts, n_chips, dev, rack, dev_on,
-                         rack_on, key, n_valid, cfg, hw, spec, spectra)
+                         rack_on, key, n_valid, limits, cfg, hw, spec,
+                         spectra)
 
 
 # ``levels`` (argnum 0) is the one O(B*n) host->device input of every
 # pipeline call; donating it lets XLA reuse its buffer for the same-shape
 # waveform outputs, so a streaming chunk holds one buffer fewer in flight.
+# ``spec`` is the spec's *family* (shape structure only — static) and
+# ``limits`` its traced thresholds, so same-family specs share the
+# executable (see UtilitySpec.family()).
 @functools.partial(jax.jit, donate_argnums=(0,),
                    static_argnames=("cfg", "hw", "spec", "spectra"))
 def _simulate_vmapped(levels, shifts, n_chips, dev, rack, dev_on, rack_on,
-                      keys, n_valid, *, cfg: WaveformConfig, hw: Hardware,
-                      spec: Optional[UtilitySpec], spectra: bool):
+                      keys, n_valid, limits, *, cfg: WaveformConfig,
+                      hw: Hardware, spec: Optional[UtilitySpec],
+                      spectra: bool):
     return jax.vmap(
         lambda L, S, N, D, R, Do, Ro, K, V: _simulate_one(
-            L, S, N, D, R, Do, Ro, K, V, cfg, hw, spec, spectra)
+            L, S, N, D, R, Do, Ro, K, V, limits, cfg, hw, spec, spectra)
     )(levels, shifts, n_chips, dev, rack, dev_on, rack_on, keys, n_valid)
 
 
@@ -291,7 +296,7 @@ def _synth_vmapped(levels, shifts, n_chips, n_valid, *, cfg: WaveformConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "hw", "spec", "spectra",
                                              "chip_outputs"))
 def _mitigate_vmapped(chip_u, dcraw_u, u_idx, shifts, n_chips, dev, rack,
-                      dev_on, rack_on, keys, n_valid, *,
+                      dev_on, rack_on, keys, n_valid, limits, *,
                       cfg: WaveformConfig, hw: Hardware,
                       spec: Optional[UtilitySpec], spectra: bool,
                       chip_outputs: bool):
@@ -300,8 +305,8 @@ def _mitigate_vmapped(chip_u, dcraw_u, u_idx, shifts, n_chips, dev, rack,
     seed) and ``u_idx`` maps each scenario row to its prefix."""
     return jax.vmap(
         lambda U, S, N, D, R, Do, Ro, K, V: _mitigate_one(
-            chip_u[U], dcraw_u[U], S, N, D, R, Do, Ro, K, V, cfg, hw,
-            spec, spectra, chip_outputs)
+            chip_u[U], dcraw_u[U], S, N, D, R, Do, Ro, K, V, limits, cfg,
+            hw, spec, spectra, chip_outputs)
     )(u_idx, shifts, n_chips, dev, rack, dev_on, rack_on, keys, n_valid)
 
 
@@ -498,6 +503,11 @@ def simulate_batch(
     dev, dev_on = _normalize_mits(dev_list, B, "device_mitigation")
     rack, rack_on = _normalize_mits(rack_list, B, "rack_mitigation")
     keys_arr = _normalize_keys(keys, B)
+    # family/limits split: the spec's *structure* is the static jit key,
+    # its numeric thresholds ride in as traced scalars — every same-family
+    # spec (lenient/moderate/tight at any job power) shares one executable
+    family = None if spec is None else spec.family()
+    limits = None if spec is None else spec.limits()
 
     shard = _resolve_plan(plan, shard_devices)
     out_B = B
@@ -523,15 +533,15 @@ def simulate_batch(
                     rack, dev_on, rack_on, keys_arr, n_valid_arr)
         if shard is not None:
             row_args, out_B = shard.shard_batch(row_args, B)
-        res = _mitigate_vmapped(chip_u, dcraw_u, *row_args,
-                                cfg=cfg, hw=hw, spec=spec, spectra=spectra,
+        res = _mitigate_vmapped(chip_u, dcraw_u, *row_args, limits,
+                                cfg=cfg, hw=hw, spec=family, spectra=spectra,
                                 chip_outputs=chip_outputs)
     else:
         args = (jnp.asarray(np.stack(level_rows), jnp.float32), shifts,
                 chips_f, dev, rack, dev_on, rack_on, keys_arr, n_valid_arr)
         if shard is not None:
             args, out_B = shard.shard_batch(args, B)
-        res = _simulate_vmapped(*args, cfg=cfg, hw=hw, spec=spec,
+        res = _simulate_vmapped(*args, limits, cfg=cfg, hw=hw, spec=family,
                                 spectra=spectra)
     if host_arrays:
         res = jax.tree.map(
@@ -665,6 +675,9 @@ def stream_batches(
      B) = _prepare_rows(timelines, n_chips, seeds, device_mitigation,
                         rack_mitigation, levels, cfg, hw)
     spec_list = list(specs) if isinstance(specs, (list, tuple)) else [specs]
+    # per-slot family/limits split, computed once for the whole stream
+    fam_lims = [(None, None) if sp is None else (sp.family(), sp.limits())
+                for sp in spec_list]
     keys_arr = _normalize_keys(keys, B)
 
     lens = [len(r) for r in level_rows]
@@ -711,7 +724,8 @@ def stream_batches(
                 if sp is None and not do_bands:
                     per_spec.append(None)
                     continue
-                per_spec.append(_analyze_vmapped(None, mit, spec=sp,
+                fam, lim = fam_lims[si]
+                per_spec.append(_analyze_vmapped(None, mit, lim, spec=fam,
                                                  dt=cfg.dt, bands=do_bands))
             gres.append((g, per_spec))
         return lo, hi, res, gres
@@ -862,8 +876,8 @@ def apply_batch(mitigations: Sequence, w: np.ndarray, dt: float
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("spec", "dt"))
-def _validate_vmapped(ws, *, spec: UtilitySpec, dt: float):
-    return jax.vmap(lambda w: spec.validate_jax(w, dt))(ws)
+def _validate_vmapped(ws, limits, *, spec: UtilitySpec, dt: float):
+    return jax.vmap(lambda w: spec.validate_jax(w, dt, limits))(ws)
 
 
 def validate_many(ws: np.ndarray, spec: UtilitySpec, dt: float
@@ -871,7 +885,8 @@ def validate_many(ws: np.ndarray, spec: UtilitySpec, dt: float
     """Validate B same-length waveforms [B, n] against one spec in a single
     vmapped call: (ok [B], per-row SpecReports)."""
     ok, flags, metrics = _validate_vmapped(
-        jnp.asarray(np.asarray(ws), jnp.float32), spec=spec, dt=dt)
+        jnp.asarray(np.asarray(ws), jnp.float32), spec.limits(),
+        spec=spec.family(), dt=dt)
     ok = np.asarray(ok)
     flags, metrics = jax.tree.map(np.asarray, (flags, metrics))
     reports = [report_from_arrays(ok[i],
@@ -882,8 +897,10 @@ def validate_many(ws: np.ndarray, spec: UtilitySpec, dt: float
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "dt", "bands"))
-def _analyze_vmapped(raw, mit, *, spec: Optional[UtilitySpec], dt: float,
-                     bands: bool):
+def _analyze_vmapped(raw, mit, limits, *, spec: Optional[UtilitySpec],
+                     dt: float, bands: bool):
+    """``spec`` is the family (static structure); ``limits`` the traced
+    thresholds — see ``UtilitySpec.family()``."""
     def one(r, m):
         out: Dict = {}
         if bands:
@@ -891,7 +908,7 @@ def _analyze_vmapped(raw, mit, *, spec: Optional[UtilitySpec], dt: float,
                 out["bands"] = critical_band_report_jax(r, dt)
             out["bands_mitigated"] = critical_band_report_jax(m, dt)
         if spec is not None:
-            ok, flags, metrics = spec.validate_jax(m, dt)
+            ok, flags, metrics = spec.validate_jax(m, dt, limits)
             out["spec_ok"], out["spec_flags"] = ok, flags
             out["spec_metrics"] = metrics
         return out
@@ -911,7 +928,8 @@ def analyze_batch(dc_raw: Optional[np.ndarray], dc_mitigated: np.ndarray,
     res = _analyze_vmapped(
         None if dc_raw is None else jnp.asarray(dc_raw, jnp.float32),
         jnp.asarray(dc_mitigated, jnp.float32),
-        spec=spec, dt=dt, bands=bands)
+        None if spec is None else spec.limits(),
+        spec=None if spec is None else spec.family(), dt=dt, bands=bands)
     return jax.tree.map(np.asarray, res)
 
 
@@ -925,8 +943,11 @@ def _select_on(on, yes, no):
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "dt"))
-def _design_eval(gpu_b, bat_b, gpu_on, bat_on, w, n_chips, *,
+def _design_eval(gpu_b, bat_b, gpu_on, bat_on, w, n_chips, limits, *,
                  spec: UtilitySpec, dt: float):
+    """``spec`` is the family; ``limits`` the traced thresholds — one
+    executable serves every same-structure spec the serve path designs
+    against."""
     def one(gpu, bat, g_on, b_on):
         out = w
         if gpu is not None:
@@ -935,7 +956,7 @@ def _design_eval(gpu_b, bat_b, gpu_on, bat_on, w, n_chips, *,
         if bat is not None:
             out_b, _ = bat.apply_jax(out, dt)
             out = _select_on(b_on, out_b, out)
-        ok, flags, metrics = spec.validate_jax(out, dt)
+        ok, flags, metrics = spec.validate_jax(out, dt, limits)
         return out, ok, energy_overhead_jax(w, out), flags, metrics
 
     return jax.vmap(one)(gpu_b, bat_b, gpu_on, bat_on)
@@ -955,31 +976,41 @@ def _rank_feasible(ok: np.ndarray, overhead: np.ndarray,
 
 
 def _design_pair(spec: UtilitySpec, mpf: float, cap: float, n_chips: int,
-                 swing: float, hw: Hardware
+                 swing: float, hw: Hardware,
+                 target_tau_s: Optional[float] = None
                  ) -> Tuple[Optional[GpuPowerSmoothing],
                             Optional[RackBattery]]:
     """The concrete (device, rack) mitigation objects a design candidate
     stands for — the single construction point shared by the grid search,
     the gradient refiner's hard re-validation, and the winner handed back
-    to callers.  ``mpf`` / ``cap`` of 0 mean the stage is off."""
+    to callers.  ``mpf`` / ``cap`` of 0 mean the stage is off.
+    ``target_tau_s`` optionally overrides the battery's grid-target EMA
+    horizon (the warm-start predictor's third output — response latency);
+    it is a pytree leaf, so mixed-tau candidates still stack."""
     gpu = (GpuPowerSmoothing(
         mpf_frac=mpf, hw=hw,
         ramp_up_w_per_s=spec.time.ramp_up_w_per_s / n_chips,
         ramp_down_w_per_s=spec.time.ramp_down_w_per_s / n_chips)
         if mpf > 0 else None)
+    tau_kw = {} if target_tau_s is None else {
+        "target_tau_s": float(target_tau_s)}
     bat = (RackBattery(capacity_j=cap, max_discharge_w=swing,
-                       max_charge_w=swing) if cap > 0 else None)
+                       max_charge_w=swing, **tau_kw) if cap > 0 else None)
     return gpu, bat
 
 
 def _eval_candidates(spec: UtilitySpec, w: np.ndarray, dt: float,
                      n_chips: int, candidates: Sequence[Tuple[float, float]],
-                     *, swing: float, hw: Hardware):
+                     *, swing: float, hw: Hardware,
+                     target_tau_s: Optional[Sequence[Optional[float]]] = None):
     """Hard (exact-semantics) evaluation of ``(mpf, cap)`` candidates in
-    one vmapped call: ``(outs, ok, overhead, flags, metrics)``."""
+    one vmapped call: ``(outs, ok, overhead, flags, metrics)``.
+    ``target_tau_s`` optionally carries one battery-latency override per
+    candidate (None entries keep the default)."""
     B = len(candidates)
-    pairs = [_design_pair(spec, m, c, n_chips, swing, hw)
-             for m, c in candidates]
+    taus = [None] * B if target_tau_s is None else list(target_tau_s)
+    pairs = [_design_pair(spec, m, c, n_chips, swing, hw, target_tau_s=t)
+             for (m, c), t in zip(candidates, taus)]
     gpus, gpu_on = _normalize_mits([g for g, _ in pairs], B,
                                    "design gpu candidates")
     bats, bat_on = _normalize_mits([b for _, b in pairs], B,
@@ -987,7 +1018,7 @@ def _eval_candidates(spec: UtilitySpec, w: np.ndarray, dt: float,
     return _design_eval(gpus, bats, gpu_on, bat_on,
                         jnp.asarray(w, jnp.float32),
                         jnp.asarray(float(n_chips), jnp.float32),
-                        spec=spec, dt=dt)
+                        spec.limits(), spec=spec.family(), dt=dt)
 
 
 def design_grid(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int,
@@ -1052,7 +1083,7 @@ _GPU_GATE_PIVOT = 0.15
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "dt", "steps"))
-def _design_descend(x0, gpu_t, bat_t, w, n_chips, lo, hi, hyper, *,
+def _design_descend(x0, gpu_t, bat_t, w, n_chips, lo, hi, hyper, limits, *,
                     spec: UtilitySpec, dt: float, steps: int):
     """Vmapped multi-start Adam descent on the smooth design objective.
 
@@ -1086,7 +1117,8 @@ def _design_descend(x0, gpu_t, bat_t, w, n_chips, lo, hi, hyper, *,
                               / (tau * mpf_max))
         chip_out = g_on * smoothed + (1.0 - g_on) * per_chip
         out, _ = bat.apply_jax(chip_out * n_chips, dt)
-        viol, _ = spec.loss_jax(out, dt, margin=hyper["margin"])
+        viol, _ = spec.loss_jax(out, dt, margin=hyper["margin"],
+                                limits=limits)
         overhead = energy_overhead_jax(w, out)
         return (viol + hyper["overhead_weight"] * jnp.maximum(overhead, 0.0)
                 + hyper["size_weight"] * (x["cap"] + 0.25 * x["mpf"]))
@@ -1186,7 +1218,7 @@ def design_gradient(spec: UtilitySpec, w: np.ndarray, dt: float,
     xf, losses = _design_descend(
         x0, gpu_t, bat_t, jnp.asarray(w), jnp.asarray(float(n_chips),
                                                       jnp.float32),
-        lo, hi, hyper, spec=spec, dt=dt, steps=steps)
+        lo, hi, hyper, spec.limits(), spec=spec.family(), dt=dt, steps=steps)
 
     # hard re-validation: each final iterate with a geometric capacity
     # ladder around it (the margin leaves the iterate a little above the
@@ -1241,12 +1273,117 @@ def design_gradient(spec: UtilitySpec, w: np.ndarray, dt: float,
     }
 
 
+# capacity rungs the warm-start fast path walks around a predicted seed:
+# sub-1.0 rungs reclaim an over-provisioned prediction, the >1.0 rungs
+# rescue an under-provisioned one without falling back to the polisher
+_WARMSTART_CAP_LADDER = (0.8, 0.9, 1.0, 1.15, 1.4, 2.0)
+
+
+def design_warmstart(spec: UtilitySpec, w: np.ndarray, dt: float,
+                     n_chips: int, *, predictor,
+                     swing: Optional[float] = None,
+                     hw: Hardware = DEFAULT_HW,
+                     features=None,
+                     period_hint_s: float = 2.0,
+                     top_k: int = 4,
+                     polish_steps: int = 40,
+                     **gradient_kwargs) -> Optional[Dict]:
+    """Amortized (MPF, capacity, battery-latency) design from a learned
+    seed — milliseconds warm instead of the solver's seconds, with the
+    answer still exactly verified.
+
+    ``predictor(spec, w, dt, n_chips, features=features)`` returns
+    ``[(mpf_frac, capacity_j, target_tau_s), ...]`` seeds (the serve
+    layer's ``WarmStartPredictor``).  The fast path expands each seed
+    into a small capacity ladder (plus battery-only variants) and runs
+    ONE vmapped hard tau=0 evaluation — a passing rung is ranked by the
+    solvers' (overhead, capacity, mpf) preference and returned.  Only
+    when the whole ladder misses does it escalate: a short gradient
+    polish seeded from the predictions, then the full ``hybrid`` solver —
+    so the verdict (feasible or not) always matches the solver this path
+    replaces, and every returned config is hard-revalidated.
+    ``aux["warmstart_path"]`` records which tier answered.
+    """
+    w = np.asarray(w, np.float32)
+    swing = float(w.max() - w.min()) if swing is None else float(swing)
+    preds = predictor(spec, w, dt, n_chips, features=features)
+    dedup: Dict[Tuple[float, float], float] = {}
+    for mpf, cap, tau in preds:
+        mpf = float(np.clip(mpf, 0.0, hw.chip.mpf_max))
+        if mpf < _GPU_GATE_PIVOT * hw.chip.mpf_max:
+            mpf = 0.0                       # snap a gated-off device stage
+        cap = max(float(cap), 0.0)
+        tau = float(tau)
+        for f in _WARMSTART_CAP_LADDER:
+            ck = round(cap * f, 3)
+            if mpf == 0.0 and ck <= 0.0:
+                continue            # no-mitigation rung: nothing to verify
+            dedup.setdefault((mpf, ck), tau)
+            if mpf > 0 and ck > 0:          # battery-only variant
+                dedup.setdefault((0.0, ck), tau)
+    candidates = list(dedup)
+    taus = [dedup[c] for c in candidates]
+    if candidates:
+        outs, ok, overhead, flags, metrics = _eval_candidates(
+            spec, w, dt, n_chips, candidates, swing=swing, hw=hw,
+            target_tau_s=taus)
+        ok = np.asarray(ok)
+        if ok.any():
+            overhead = np.asarray(overhead)
+            ranked = _rank_feasible(ok, overhead, candidates)
+            idx = int(ranked[0])
+            mpf, cap = candidates[idx]
+            row = jax.tree.map(lambda a: np.asarray(a)[idx],
+                               (flags, metrics))
+            gpu_sel, bat_sel = _design_pair(spec, mpf, cap, n_chips, swing,
+                                            hw, target_tau_s=taus[idx])
+            return {
+                "mpf_frac": mpf,
+                "battery_capacity_j": cap,
+                "target_tau_s": taus[idx],
+                "energy_overhead": float(overhead[idx]),
+                "report": report_from_arrays(ok[idx], row[0], row[1]),
+                "device_mitigation": gpu_sel,
+                "rack_mitigation": bat_sel,
+                "mitigated": np.asarray(outs)[idx],
+                "alternatives": [{
+                    "mpf_frac": candidates[i][0],
+                    "battery_capacity_j": candidates[i][1],
+                    "energy_overhead": float(overhead[i]),
+                } for i in ranked[:top_k]],
+                "method": "warmstart",
+                "aux": {"warmstart_path": "fast"},
+            }
+    # ladder missed: short polish from the predicted seeds, then the full
+    # solver — feasibility verdicts stay identical to method="hybrid"
+    sol = design_gradient(spec, w, dt, n_chips, swing=swing, hw=hw,
+                          seeds=[(m, c) for m, c, _ in preds] or None,
+                          steps=polish_steps, period_hint_s=period_hint_s,
+                          top_k=top_k, **gradient_kwargs)
+    path = "polish"
+    if sol is None:
+        sol = design(spec, w, dt, n_chips, method="hybrid", hw=hw,
+                     period_hint_s=period_hint_s, top_k=top_k,
+                     **gradient_kwargs)
+        path = "hybrid_fallback"
+    if sol is None:
+        return None
+    sol = dict(sol)
+    sol["method"] = "warmstart"
+    sol["aux"] = dict(sol.get("aux") or {}, warmstart_path=path)
+    return sol
+
+
 def design(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int, *,
            method: str = "hybrid", hw: Hardware = DEFAULT_HW,
            period_hint_s: float = 2.0,
            mpf_grid: Optional[Sequence[float]] = None,
            cap_grid: Optional[Sequence[float]] = None,
-           top_k: int = 4, **gradient_kwargs) -> Optional[Dict]:
+           top_k: int = 4,
+           warmstart=None,
+           features=None,
+           polish_steps: int = 40,
+           **gradient_kwargs) -> Optional[Dict]:
     """The one (MPF, battery-capacity) design entry point.
 
     method="grid"      the batched coarse grid search (``design_grid``);
@@ -1255,12 +1392,26 @@ def design(spec: UtilitySpec, w: np.ndarray, dt: float, n_chips: int, *,
     method="hybrid"    coarse grid first, gradient refinement seeded from
                        its top-k feasible configs — never worse than the
                        grid (the seeds are re-validated candidates), and
-                       finds the compliance frontier *between* grid points.
+                       finds the compliance frontier *between* grid points;
+    method="warmstart" learned-seed fast path (``design_warmstart``) —
+                       pass the predictor via ``warmstart=`` (and
+                       optionally precomputed ``features=``); falls back
+                       through gradient polish to hybrid, so verdicts
+                       match the solver it amortizes.
 
     ``smoothing.design_mitigation`` remains the public face over this.
     """
     w = np.asarray(w, np.float32)
     swing = float(w.max() - w.min())
+    if method == "warmstart":
+        if warmstart is None:
+            raise ValueError(
+                "method='warmstart' needs a predictor: design(..., "
+                "warmstart=WarmStartPredictor.load(...))")
+        return design_warmstart(spec, w, dt, n_chips, predictor=warmstart,
+                                swing=swing, hw=hw, features=features,
+                                period_hint_s=period_hint_s, top_k=top_k,
+                                polish_steps=polish_steps, **gradient_kwargs)
     if mpf_grid is None:
         # the hardware caps how high a floor is programmable
         mpf_grid = [m for m in (0.0, 0.5, 0.65, 0.8, 0.9)

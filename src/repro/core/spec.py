@@ -5,9 +5,20 @@ range (max deviation within a sliding window) — Fig. 4. Frequency-domain:
 a critical band and a cap on the fraction of AC spectral energy inside it.
 
 ``UtilitySpec.validate`` is the numpy reference; ``validate_jax`` is the
-pure traced mirror the batched scenario engine jits/vmaps (spec thresholds
-are static, the waveform is the traced input), returning per-violation
-boolean flags instead of a string list so verdicts vectorize.
+pure traced mirror the batched scenario engine jits/vmaps, returning
+per-violation boolean flags instead of a string list so verdicts
+vectorize.
+
+A spec splits into two halves with different compilation roles.  Its
+*family* (``family()``) is everything that fixes computation shape —
+band edges (which select FFT bins), the ramp/dynamic-range window sizes,
+and whether a bin-amplitude check exists at all — and stays a static jit
+argument.  Its *limits* (``limits()``) are the pure numeric thresholds
+the metrics are compared against, and can be traced: ``validate_jax`` /
+``loss_jax`` accept ``limits=`` overrides, so one compiled executable
+serves every spec of the same family (lenient / moderate / tight at any
+job scale).  This is what lets the serve path answer a stream of
+differently-sized jobs without retracing per query.
 
 ``loss_jax`` turns the same metrics into a *smooth scalar objective* for
 gradient-based mitigation design (core/engine.py ``design_gradient``):
@@ -32,6 +43,12 @@ from repro.core.spectrum import (band_amplitude_w, band_amplitude_w_jax,
 
 VIOLATION_ORDER = ("ramp_up", "ramp_down", "dynamic_range",
                    "band_energy", "band_amplitude")
+
+# the traced-threshold keys of ``UtilitySpec.limits()`` (band_amplitude_w
+# is present only when the family declares that check)
+LIMIT_KEYS = ("ramp_up_w_per_s", "ramp_down_w_per_s", "dynamic_range_w",
+              "max_energy_fraction", "min_ac_rms_frac",
+              "max_bin_amplitude_w")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +78,48 @@ class UtilitySpec:
     name: str
     time: TimeDomainSpec
     freq: FrequencyDomainSpec
+
+    # -- the family / limits split (compiled-executable reuse) --------------
+
+    def limits(self) -> Dict[str, jnp.ndarray]:
+        """The numeric thresholds as a traced-friendly dict of f32 scalars.
+
+        Feed one family's executable a different spec's limits and it
+        judges under that spec without retracing.  The bin-amplitude key
+        is present iff the check exists (its existence is structural —
+        part of the family)."""
+        lim = {
+            "ramp_up_w_per_s": jnp.asarray(self.time.ramp_up_w_per_s,
+                                           jnp.float32),
+            "ramp_down_w_per_s": jnp.asarray(self.time.ramp_down_w_per_s,
+                                             jnp.float32),
+            "dynamic_range_w": jnp.asarray(self.time.dynamic_range_w,
+                                           jnp.float32),
+            "max_energy_fraction": jnp.asarray(self.freq.max_energy_fraction,
+                                               jnp.float32),
+            "min_ac_rms_frac": jnp.asarray(self.freq.min_ac_rms_frac,
+                                           jnp.float32),
+        }
+        if self.freq.max_bin_amplitude_w is not None:
+            lim["max_bin_amplitude_w"] = jnp.asarray(
+                self.freq.max_bin_amplitude_w, jnp.float32)
+        return lim
+
+    def family(self) -> "UtilitySpec":
+        """The shape-determining residue of this spec: limits canonicalized
+        to 1.0, name dropped.  Two specs with equal families compile to the
+        SAME executable when their ``limits()`` are passed as traced
+        arguments — the compiled-catalog reuse key of the serve path."""
+        return UtilitySpec(
+            "family",
+            TimeDomainSpec(ramp_up_w_per_s=1.0, ramp_down_w_per_s=1.0,
+                           dynamic_range_w=1.0, window_s=self.time.window_s,
+                           ramp_window_s=self.time.ramp_window_s),
+            FrequencyDomainSpec(
+                band_hz=self.freq.band_hz, max_energy_fraction=1.0,
+                max_bin_amplitude_w=(None if self.freq.max_bin_amplitude_w
+                                     is None else 1.0),
+                min_ac_rms_frac=1.0))
 
     def validate(self, w: np.ndarray, dt: float) -> "SpecReport":
         v: List[str] = []
@@ -140,42 +199,50 @@ class UtilitySpec:
             m["band_bin_amplitude_w"] = band_amplitude_w_jax(w, dt, f_lo, f_hi)
         return m
 
-    def validate_jax(self, w: jnp.ndarray, dt: float
+    def validate_jax(self, w: jnp.ndarray, dt: float,
+                     limits: Optional[Dict[str, jnp.ndarray]] = None
                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray],
                                 Dict[str, jnp.ndarray]]:
         """Traced mirror of ``validate``: (ok, violation flags, metrics).
 
-        Waveform length and dt are static (they fix window/bin shapes);
-        thresholds come from this (static) spec.  Use ``report_from_arrays``
-        to rebuild a ``SpecReport`` from one row of vmapped outputs.
+        Waveform length and dt are static (they fix window/bin shapes).
+        Thresholds default to this spec's own values; passing ``limits``
+        (another same-family spec's ``limits()``) judges under those
+        thresholds instead — the engine passes ``self.family()`` as the
+        static spec and the real limits as a traced pytree, so distinct
+        specs reuse one executable.  Use ``report_from_arrays`` to rebuild
+        a ``SpecReport`` from one row of vmapped outputs.
         """
+        lim = self.limits() if limits is None else limits
         m = self._metrics_jax(w, dt)
         flags: Dict[str, jnp.ndarray] = {}
         false = jnp.asarray(False)
         if "max_ramp_up_w_per_s" in m:
-            flags["ramp_up"] = m["max_ramp_up_w_per_s"] > self.time.ramp_up_w_per_s
+            flags["ramp_up"] = (m["max_ramp_up_w_per_s"]
+                                > lim["ramp_up_w_per_s"])
             flags["ramp_down"] = (m["max_ramp_down_w_per_s"]
-                                  > self.time.ramp_down_w_per_s)
+                                  > lim["ramp_down_w_per_s"])
         else:
             flags["ramp_up"] = flags["ramp_down"] = false
         if "dynamic_range_w" in m:
             flags["dynamic_range"] = (m["dynamic_range_w"]
-                                      > self.time.dynamic_range_w)
+                                      > lim["dynamic_range_w"])
         else:
             flags["dynamic_range"] = false
-        material = m["ac_rms_frac"] >= self.freq.min_ac_rms_frac
+        material = m["ac_rms_frac"] >= lim["min_ac_rms_frac"]
         flags["band_energy"] = material & (m["band_energy_fraction"]
-                                           > self.freq.max_energy_fraction)
+                                           > lim["max_energy_fraction"])
         if "band_bin_amplitude_w" in m:
             flags["band_amplitude"] = (m["band_bin_amplitude_w"]
-                                       > self.freq.max_bin_amplitude_w)
+                                       > lim["max_bin_amplitude_w"])
         else:
             flags["band_amplitude"] = false
         ok = ~(flags["ramp_up"] | flags["ramp_down"] | flags["dynamic_range"]
                | flags["band_energy"] | flags["band_amplitude"])
         return ok, flags, m
 
-    def loss_jax(self, w: jnp.ndarray, dt: float, *, margin: float = 0.0
+    def loss_jax(self, w: jnp.ndarray, dt: float, *, margin: float = 0.0,
+                 limits: Optional[Dict[str, jnp.ndarray]] = None
                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
         """Smooth scalar compliance objective: ``(total, components)``.
 
@@ -187,8 +254,10 @@ class UtilitySpec:
         of its solution has slack.  The band-energy materiality gate
         relaxes to a sigmoid (the hard ``>=`` would zero the gradient at
         the gate); everything upstream uses hard max/min reductions, whose
-        subgradients are exact on the active window.
+        subgradients are exact on the active window.  ``limits`` overrides
+        the thresholds like ``validate_jax``'s (family/limits split).
         """
+        lims = self.limits() if limits is None else limits
         m = self._metrics_jax(w, dt)
         zero = jnp.asarray(0.0, jnp.float32)
 
@@ -198,16 +267,17 @@ class UtilitySpec:
 
         comps: Dict[str, jnp.ndarray] = {
             "ramp_up": (hinge(m["max_ramp_up_w_per_s"],
-                              self.time.ramp_up_w_per_s)
+                              lims["ramp_up_w_per_s"])
                         if "max_ramp_up_w_per_s" in m else zero),
             "ramp_down": (hinge(m["max_ramp_down_w_per_s"],
-                                self.time.ramp_down_w_per_s)
+                                lims["ramp_down_w_per_s"])
                           if "max_ramp_down_w_per_s" in m else zero),
             "dynamic_range": (hinge(m["dynamic_range_w"],
-                                    self.time.dynamic_range_w)
+                                    lims["dynamic_range_w"])
                               if "dynamic_range_w" in m else zero),
         }
-        min_frac = max(self.freq.min_ac_rms_frac, 1e-9)
+        min_frac = jnp.maximum(jnp.asarray(lims["min_ac_rms_frac"],
+                                           jnp.float32), 1e-9)
         material = jax.nn.sigmoid((m["ac_rms_frac"] / min_frac - 1.0) / 0.25)
         # far below materiality the sigmoid tail would still leak a loss
         # on numerically-flat waveforms (whose band fraction is noise);
@@ -215,9 +285,9 @@ class UtilitySpec:
         material = jnp.where(m["ac_rms_frac"] < 0.5 * min_frac, 0.0,
                              material)
         comps["band_energy"] = material * hinge(m["band_energy_fraction"],
-                                                self.freq.max_energy_fraction)
+                                                lims["max_energy_fraction"])
         comps["band_amplitude"] = (hinge(m["band_bin_amplitude_w"],
-                                         self.freq.max_bin_amplitude_w)
+                                         lims["max_bin_amplitude_w"])
                                    if "band_bin_amplitude_w" in m else zero)
         total = sum(comps[v] for v in VIOLATION_ORDER)
         return total, comps

@@ -13,6 +13,48 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# the serve path's grid-critical probe frequencies: inter-area (<1 Hz),
+# plant-coupling (1-2.5 Hz), the paper band's center, and low torsional
+# bins — the spectral fingerprint the warm-start predictor reads
+GRID_CRITICAL_HZ = (0.25, 0.5, 1.0, 2.0, 3.0, 5.0, 9.0)
+
+
+def goertzel_bin_amplitudes(x: np.ndarray, dt: float,
+                            freqs: Tuple[float, ...] = GRID_CRITICAL_HZ
+                            ) -> np.ndarray:
+    """Single-bin DFT amplitudes (watts) of the AC component at ``freqs``.
+
+    This is the Goertzel evaluation the sliding monitor kernel performs,
+    collapsed to one full-trace window: a modulated sum per target bin,
+    O(n*K) with no FFT plan — the cheap spectral fingerprint the serve
+    path's feature extractor uses (``serve/warmstart.py``).  Amplitude
+    convention matches ``spectrum`` sans Hann window: a pure sine of
+    amplitude A at a bin frequency reports ~A.
+    """
+    x = np.asarray(x, np.float64)
+    n = len(x)
+    if n == 0:
+        return np.zeros(len(freqs))
+    xac = x - x.mean()
+    t = np.arange(n) * dt
+    phases = np.exp(-2j * np.pi * np.asarray(freqs)[:, None] * t[None, :])
+    return np.abs(phases @ xac) * 2.0 / n
+
+
+def goertzel_bin_amplitudes_jax(x: jnp.ndarray, dt: float,
+                                freqs: Tuple[float, ...] = GRID_CRITICAL_HZ
+                                ) -> jnp.ndarray:
+    """jnp mirror of ``goertzel_bin_amplitudes`` (phases are static)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[-1]
+    xac = x - x.mean()
+    t = np.arange(n) * dt
+    ph = np.exp(-2j * np.pi * np.asarray(freqs)[:, None] * t[None, :])
+    re = jnp.asarray(ph.real, jnp.float32) @ xac
+    im = jnp.asarray(ph.imag, jnp.float32) @ xac
+    return jnp.sqrt(re * re + im * im) * 2.0 / n
+
+
 def spectrum(x: np.ndarray, dt: float) -> Tuple[np.ndarray, np.ndarray]:
     """One-sided amplitude spectrum of the AC component."""
     x = np.asarray(x, np.float64)

@@ -170,6 +170,178 @@ def _as_seq(x) -> list:
 
 
 # ---------------------------------------------------------------------------
+# row-level execution (the core behind Study.run and the serve layer's
+# cross-query coalescing)
+# ---------------------------------------------------------------------------
+
+def _structure_groups(rows) -> List[List[int]]:
+    """Row indices grouped by (device, rack) pytree structure.  A None
+    stage is a wildcard: baseline rows batch with the first concrete
+    structure (the engine masks them off row-wise)."""
+    def struct(m):
+        return None if m is None else jax.tree.structure(m)
+
+    dev_first = next((struct(c.device) for _, _, c, _ in rows
+                      if c.device is not None), None)
+    rack_first = next((struct(c.rack) for _, _, c, _ in rows
+                       if c.rack is not None), None)
+    groups: Dict[Tuple, List[int]] = {}
+    for r, (_, _, c, _) in enumerate(rows):
+        k = (struct(c.device) if c.device is not None else dev_first,
+             struct(c.rack) if c.rack is not None else rack_first)
+        groups.setdefault(k, []).append(r)
+    return list(groups.values())
+
+
+def run_rows(workloads: Mapping[str, IterationTimeline],
+             rows: Sequence[Tuple[str, int, MitigationConfig, int]],
+             specs: Sequence[Tuple[Optional[str], Optional[UtilitySpec]]],
+             *, wave_cfg: Optional[WaveformConfig] = None,
+             hw: Hardware = DEFAULT_HW,
+             keys: Optional[Sequence] = None,
+             padding: str = "auto",
+             stream: Union[None, bool, int] = None,
+             sample_chips: int = 64,
+             keep_waveforms: bool = False,
+             shard_devices: bool = False,
+             plan: Optional[ScenarioShardPlan] = None,
+             on_chunk: Optional[Callable[[int, int, float], None]] = None,
+             levels: Optional[Dict[str, np.ndarray]] = None
+             ) -> "StudyResult":
+    """Run an explicit list of pipeline rows through the streaming chunked
+    executor and return the columnar ``StudyResult``.
+
+    This is ``Study.run`` with the row list made explicit: each row is a
+    ``(workload_name, n_chips, MitigationConfig, seed)`` tuple and ``keys``
+    optionally supplies one PRNG key per row.  ``Study.run`` builds its
+    cartesian grid and delegates here; the serve layer's ``handle_many``
+    calls it directly with the *union* row list of N coalesced queries
+    (each query's rows carrying the keys that query would draw alone, so
+    coalescing is bit-identical to running the queries one at a time).
+    ``levels`` optionally supplies precomputed ``phase_levels`` arrays per
+    workload name (the serve layer's memoized synthesis).
+
+    Rows are grouped by mitigation *structure* (a GPU-floor grid and a
+    Firefly grid cannot stack into one batched pytree; disabled rows join
+    any group); ``padding="pad"`` fuses each structure group's mixed
+    lengths into one padded call stream while ``"bucket"`` streams each
+    length separately (``"auto"`` pads iff lengths mix).  ``stream``
+    picks the chunk size as in ``Study.run``.
+    """
+    cfg = wave_cfg or WaveformConfig()
+    if padding not in PADDING_MODES:
+        raise ValueError(f"padding must be one of {PADDING_MODES}")
+    if stream is None or stream is False:
+        chunk_size = None
+    elif stream is True:
+        chunk_size = DEFAULT_STREAM_CHUNK
+    else:
+        chunk_size = int(stream)
+        if chunk_size < 1:
+            raise ValueError(f"stream chunk size must be >= 1, got {stream}")
+    rows = list(rows)
+    specs = list(specs)
+    if levels is None:
+        levels = {}
+    needed = {w for w, _, _, _ in rows}
+    levels = dict(levels)
+    for w in needed:
+        if w not in levels:
+            levels[w] = phase_levels(workloads[w], cfg, hw)
+    row_len = [len(levels[w]) for w, _, _, _ in rows]
+    mode = padding
+    if mode == "auto":
+        mode = "pad" if len(set(row_len)) > 1 else "bucket"
+    if keys is not None:
+        keys = list(keys)
+        if len(keys) != len(rows):
+            raise ValueError(f"keys: got {len(keys)}, expected {len(rows)}")
+
+    cols = _empty_columns(len(rows) * len(specs))
+    waveforms = [None] * len(rows) if keep_waveforms else None
+    total, done = len(rows), 0
+    t0 = time.perf_counter()
+    for sg_rows in _structure_groups(rows):
+        if mode == "pad":
+            calls = [sg_rows]
+        else:
+            by_len: Dict[int, List[int]] = {}
+            for r in sg_rows:
+                by_len.setdefault(row_len[r], []).append(r)
+            calls = [idx for _, idx in sorted(by_len.items())]
+        for idx in calls:
+            lens = {row_len[r] for r in idx}
+            chunks = stream_batches(
+                [workloads[rows[r][0]] for r in idx],
+                [rows[r][1] for r in idx], cfg,
+                device_mitigation=[rows[r][2].device for r in idx],
+                rack_mitigation=[rows[r][2].rack for r in idx],
+                specs=[sp for _, sp in specs],
+                hw=hw, seeds=[rows[r][3] for r in idx],
+                keys=None if keys is None else [keys[r] for r in idx],
+                sample_chips=sample_chips,
+                levels=[levels[rows[r][0]] for r in idx],
+                pad_to=max(lens) if len(lens) > 1 else None,
+                chunk_size=chunk_size or len(idx),
+                bands=True, keep_waveforms=keep_waveforms,
+                dedup=True, shard_devices=shard_devices,
+                plan=plan)
+            for ch in chunks:
+                _fill_chunk(cols, waveforms, rows, row_len, idx, ch,
+                            specs=specs, workloads=workloads, dt=cfg.dt)
+                done += len(ch)
+                if on_chunk is not None:
+                    on_chunk(done, total, time.perf_counter() - t0)
+    return StudyResult(columns=cols, waveforms=waveforms)
+
+
+def _fill_chunk(cols: Dict[str, np.ndarray], waveforms, rows, row_len,
+                idx: List[int], ch: StreamChunk, *, specs, workloads,
+                dt: float) -> None:
+    """Write one ``StreamChunk``'s metrics into the columnar record
+    store (record position = pipeline row * n_specs + spec index)."""
+    S = len(specs)
+    for j in range(len(ch)):
+        r = idx[ch.start + j]
+        wname, n_chips, config, seed = rows[r]
+        L = row_len[r]
+        base = {
+            "row": r, "workload": wname, "n_chips": n_chips,
+            "config": config.name, "seed": seed,
+            "period_s": float(workloads[wname].period_s),
+            "n_samples": L,
+            "mean_mw": float(ch.swing["mean_w"][j]) / 1e6,
+            "swing_mw": float(ch.swing["swing_w"][j]) / 1e6,
+            "swing_mitigated_mw":
+                float(ch.swing_mitigated["swing_w"][j]) / 1e6,
+            "energy_overhead": float(ch.energy_overhead[j]),
+            "paper_band_frac":
+                float(ch.bands_mitigated["paper_band_0p2_3hz"][j]),
+            "designed": False,
+        }
+        for si, (spec_name, spec) in enumerate(specs):
+            p = r * S + si
+            for k, v in base.items():
+                cols[k][p] = v
+            cols["spec"][p] = spec_name
+            if spec is not None:
+                report = ch.report(si, j)
+                cols["spec_ok"][p] = report.ok
+                cols["violations"][p] = report.violations
+                cols["metrics"][p] = report.metrics
+            else:
+                cols["spec_ok"][p] = None
+                cols["violations"][p] = ()
+                cols["metrics"][p] = {}
+        if waveforms is not None:
+            waveforms[r] = {
+                "t": np.arange(L) * dt,
+                "dc_raw": np.asarray(ch.dc_raw[j, :L]),
+                "dc_mitigated": np.asarray(ch.dc_mitigated[j, :L]),
+            }
+
+
+# ---------------------------------------------------------------------------
 # the study
 # ---------------------------------------------------------------------------
 
@@ -297,107 +469,23 @@ class Study:
         grid total, and the wall-clock seconds since ``run`` started —
         the progress hook long sweeps (``sweep_bench``, the serve CLI)
         surface to operators.
+
+        The body is the module-level ``run_rows`` over this study's
+        cartesian row list — callers with an explicit (possibly
+        heterogeneous) row set, like the serve layer's coalesced
+        ``handle_many``, drive ``run_rows`` directly.
         """
-        cfg, hw = self.wave_cfg, self.hw
-        mode = padding or self.padding
-        if mode not in PADDING_MODES:
-            raise ValueError(f"padding must be one of {PADDING_MODES}")
-        if stream is None or stream is False:
-            chunk_size = None
-        elif stream is True:
-            chunk_size = DEFAULT_STREAM_CHUNK
-        else:
-            chunk_size = int(stream)
-            if chunk_size < 1:
-                raise ValueError(f"stream chunk size must be >= 1, got {stream}")
-        levels = {w: phase_levels(tl, cfg, hw)
-                  for w, tl in self.workloads.items()}
         rows = self.rows()
-        row_len = [len(levels[w]) for w, _, _, _ in rows]
-        if mode == "auto":
-            mode = "pad" if len(set(row_len)) > 1 else "bucket"
         keys = ([self.scenario_key(r) for r in range(len(rows))]
                 if self.key is not None else None)
-
-        cols = _empty_columns(len(rows) * len(self.specs))
-        waveforms = [None] * len(rows) if self.keep_waveforms else None
-        total, done = len(rows), 0
-        t0 = time.perf_counter()
-        for sg_rows in self._structure_groups(rows):
-            if mode == "pad":
-                calls = [sg_rows]
-            else:
-                by_len: Dict[int, List[int]] = {}
-                for r in sg_rows:
-                    by_len.setdefault(row_len[r], []).append(r)
-                calls = [idx for _, idx in sorted(by_len.items())]
-            for idx in calls:
-                lens = {row_len[r] for r in idx}
-                chunks = stream_batches(
-                    [self.workloads[rows[r][0]] for r in idx],
-                    [rows[r][1] for r in idx], cfg,
-                    device_mitigation=[rows[r][2].device for r in idx],
-                    rack_mitigation=[rows[r][2].rack for r in idx],
-                    specs=[sp for _, sp in self.specs],
-                    hw=hw, seeds=[rows[r][3] for r in idx],
-                    keys=None if keys is None else [keys[r] for r in idx],
-                    sample_chips=self.sample_chips,
-                    levels=[levels[rows[r][0]] for r in idx],
-                    pad_to=max(lens) if len(lens) > 1 else None,
-                    chunk_size=chunk_size or len(idx),
-                    bands=True, keep_waveforms=self.keep_waveforms,
-                    dedup=True, shard_devices=self.shard_devices,
-                    plan=self.plan)
-                for ch in chunks:
-                    self._fill_chunk(cols, waveforms, rows, row_len, idx, ch)
-                    done += len(ch)
-                    if on_chunk is not None:
-                        on_chunk(done, total, time.perf_counter() - t0)
-        return StudyResult(columns=cols, waveforms=waveforms)
-
-    def _fill_chunk(self, cols: Dict[str, np.ndarray], waveforms, rows,
-                    row_len, idx: List[int], ch: StreamChunk) -> None:
-        """Write one ``StreamChunk``'s metrics into the columnar record
-        store (record position = pipeline row * n_specs + spec index)."""
-        S = len(self.specs)
-        for j in range(len(ch)):
-            r = idx[ch.start + j]
-            wname, n_chips, config, seed = rows[r]
-            L = row_len[r]
-            base = {
-                "row": r, "workload": wname, "n_chips": n_chips,
-                "config": config.name, "seed": seed,
-                "period_s": float(self.workloads[wname].period_s),
-                "n_samples": L,
-                "mean_mw": float(ch.swing["mean_w"][j]) / 1e6,
-                "swing_mw": float(ch.swing["swing_w"][j]) / 1e6,
-                "swing_mitigated_mw":
-                    float(ch.swing_mitigated["swing_w"][j]) / 1e6,
-                "energy_overhead": float(ch.energy_overhead[j]),
-                "paper_band_frac":
-                    float(ch.bands_mitigated["paper_band_0p2_3hz"][j]),
-                "designed": False,
-            }
-            for si, (spec_name, spec) in enumerate(self.specs):
-                p = r * S + si
-                for k, v in base.items():
-                    cols[k][p] = v
-                cols["spec"][p] = spec_name
-                if spec is not None:
-                    report = ch.report(si, j)
-                    cols["spec_ok"][p] = report.ok
-                    cols["violations"][p] = report.violations
-                    cols["metrics"][p] = report.metrics
-                else:
-                    cols["spec_ok"][p] = None
-                    cols["violations"][p] = ()
-                    cols["metrics"][p] = {}
-            if waveforms is not None:
-                waveforms[r] = {
-                    "t": np.arange(L) * self.wave_cfg.dt,
-                    "dc_raw": np.asarray(ch.dc_raw[j, :L]),
-                    "dc_mitigated": np.asarray(ch.dc_mitigated[j, :L]),
-                }
+        return run_rows(
+            self.workloads, rows, self.specs,
+            wave_cfg=self.wave_cfg, hw=self.hw, keys=keys,
+            padding=padding or self.padding, stream=stream,
+            sample_chips=self.sample_chips,
+            keep_waveforms=self.keep_waveforms,
+            shard_devices=self.shard_devices, plan=self.plan,
+            on_chunk=on_chunk)
 
     def optimize(self, *, method: str = "hybrid",
                  seed: Optional[int] = None,
@@ -473,24 +561,9 @@ class Study:
                     records.append(rec)
         return StudyResult(records=records)
 
-    @staticmethod
-    def _structure_groups(rows) -> List[List[int]]:
-        """Row indices grouped by (device, rack) pytree structure.  A None
-        stage is a wildcard: baseline rows batch with the first concrete
-        structure (the engine masks them off row-wise)."""
-        def struct(m):
-            return None if m is None else jax.tree.structure(m)
-
-        dev_first = next((struct(c.device) for _, _, c, _ in rows
-                          if c.device is not None), None)
-        rack_first = next((struct(c.rack) for _, _, c, _ in rows
-                           if c.rack is not None), None)
-        groups: Dict[Tuple, List[int]] = {}
-        for r, (_, _, c, _) in enumerate(rows):
-            k = (struct(c.device) if c.device is not None else dev_first,
-                 struct(c.rack) if c.rack is not None else rack_first)
-            groups.setdefault(k, []).append(r)
-        return list(groups.values())
+    # row grouping by mitigation structure (module-level; kept as a
+    # staticmethod alias for existing callers)
+    _structure_groups = staticmethod(_structure_groups)
 
 
 

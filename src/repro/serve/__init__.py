@@ -1,10 +1,18 @@
 from repro.serve.engine import ServeEngine
 
+_POWER = ("PowerComplianceService", "default_catalog")
+_WARMSTART = ("WarmStartPredictor", "train_warmstart", "extract_features",
+              "init_warmstart", "warmstart_forward", "FEATURE_NAMES")
+
 
 def __getattr__(name):
     # lazy: keeps `python -m repro.serve.power` from importing the module
-    # twice (once here, once as __main__)
-    if name in ("PowerComplianceService", "default_catalog"):
+    # twice (once here, once as __main__), and keeps the LLM serve engine
+    # importable without pulling in the compliance/warm-start stack
+    if name in _POWER:
         from repro.serve import power
         return getattr(power, name)
+    if name in _WARMSTART:
+        from repro.serve import warmstart
+        return getattr(warmstart, name)
     raise AttributeError(name)

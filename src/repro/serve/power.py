@@ -7,14 +7,34 @@ configurations keep it inside the utility spec, and at what energy cost?
 
 ``PowerComplianceService`` answers it through the Study API: a query
 builds the candidate catalog (baseline + MPF floors + batteries + their
-pairings, sized off the job's raw swing), declares a one-workload Study,
-runs it on the *streaming* chunked executor, and returns the passing
-configs ranked by worst-case energy overhead.  When NO catalog config
-passes, the service falls back to on-demand design: the engine's
-grid/gradient/hybrid solver synthesizes a (MPF, battery) configuration
-for this exact query and returns it (with ranked alternatives) under
-``"designed"``.  Answers are cached per (workload, fleet, spec) so
-repeated queries are dictionary lookups.
+pairings, sized off the job's raw swing), runs it on the *streaming*
+chunked executor, and returns the passing configs ranked by worst-case
+energy overhead.  When NO catalog config passes, the service falls back
+to on-demand design: the engine's grid/gradient/hybrid/warmstart solver
+synthesizes a (MPF, battery) configuration for this exact query and
+returns it (with ranked alternatives) under ``"designed"``.
+
+The serve path is amortized at three levels:
+
+* **Answer cache** — a lock-protected true-LRU (``cache_size`` entries,
+  ``move_to_end`` on hit, oldest-out eviction) keyed per (workload,
+  fleet, spec, padding); repeated queries are dictionary lookups.
+  Identical *concurrent* misses are single-flighted: one leader thread
+  runs the Study, followers wait on its event and read the cached
+  answer — N identical in-flight queries execute the underlying Study
+  exactly once (``stats["study_runs"]``).
+* **Workload memo** — phase-level synthesis, the chip waveform, the
+  aggregated fleet waveform/swing, and the warm-start spectral feature
+  vector (Goertzel bins etc.) are memoized per workload / per
+  (workload, fleet) / per (workload, fleet, spec), so a cache-*miss*
+  for a seen workload skips synthesis + FFT/Goertzel recompute.
+* **Query coalescing** — ``query_many`` / ``handle_many`` fuse N
+  distinct misses into ONE padded ``run_rows`` execution over the union
+  row list (each query's rows carrying the PRNG keys that query would
+  draw alone, so coalescing is bit-identical to serial queries), and the
+  engine's (trace length, spec *family*, mitigation structure) jit
+  keying means new (workload, fleet, spec-threshold) shapes reuse the
+  already-compiled executables instead of retracing.
 
 Memory bound: the service never retains whole-study waveforms.  A query
 holds O(``stream_chunk`` * trace length) waveform samples on device
@@ -24,8 +44,8 @@ waveforms), and the answer cache holds O(``cache_size``) JSON-sized
 dicts — so resident memory is independent of how many scenarios a
 query's catalog expands to.
 
-``handle`` is the JSON boundary (dict in, JSON-safe dict out) a service
-framework would mount; the module is also a CLI:
+``handle`` / ``handle_many`` are the JSON boundary (dict in, JSON-safe
+dict out) a service framework would mount; the module is also a CLI:
 
   PYTHONPATH=src python -m repro.serve.power \
       --period-s 2.0 --comm-frac 0.25 --n-chips 512 --spec moderate
@@ -35,6 +55,8 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import threading
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.engine import design
@@ -44,8 +66,9 @@ from repro.core.phases import (IterationTimeline, from_dryrun_cell,
 from repro.core.smoothing.battery import RackBattery
 from repro.core.smoothing.gpu_floor import GpuPowerSmoothing
 from repro.core.spec import UtilitySpec, example_specs
-from repro.core.study import MitigationConfig, Study, StudyResult
-from repro.core.waveform import WaveformConfig, aggregate, chip_waveform
+from repro.core.study import MitigationConfig, StudyResult, run_rows
+from repro.core.waveform import (WaveformConfig, aggregate, chip_waveform,
+                                 phase_levels)
 
 
 def default_catalog(swing_w: float, *,
@@ -78,8 +101,15 @@ class PowerComplianceService:
     """Serve-path wrapper: compliance queries over a mitigation catalog.
 
     One instance holds the waveform/telemetry configuration, the catalog
-    knobs, the PRNG root, and the answer cache; ``query`` takes the
-    (workload, fleet, spec) triple.
+    knobs, the PRNG root, the answer LRU, and the workload memo;
+    ``query`` takes the (workload, fleet, spec) triple.  The instance is
+    thread-safe: all cache/memo state sits behind one lock, and
+    identical concurrent misses are single-flighted.
+
+    ``design_method="warmstart"`` routes the no-catalog-config-passes
+    fallback through the learned warm-start path (``warmstart=`` takes a
+    ``serve.warmstart.WarmStartPredictor`` or a checkpoint directory);
+    every such answer is still hard tau=0 re-validated by the engine.
     """
 
     def __init__(self, *, wave_cfg: Optional[WaveformConfig] = None,
@@ -91,7 +121,9 @@ class PowerComplianceService:
                  cache_size: int = 128,
                  design_fallback: bool = True,
                  design_method: str = "hybrid",
-                 stream_chunk: int = 256):
+                 warmstart=None,
+                 stream_chunk: int = 256,
+                 memo_size: int = 32):
         self.wave_cfg = wave_cfg or WaveformConfig(dt=0.002, steps=10,
                                                    jitter_s=0.002)
         self.hw = hw
@@ -99,12 +131,149 @@ class PowerComplianceService:
         self.cap_fracs = tuple(cap_fracs)
         self.seeds = tuple(seeds)
         self.key = key
-        self.cache_size = cache_size
+        self.cache_size = int(cache_size)
         self.design_fallback = design_fallback
         self.design_method = design_method
+        if isinstance(warmstart, str):
+            from repro.serve.warmstart import WarmStartPredictor
+            warmstart = WarmStartPredictor.load(warmstart)
+        self.warmstart = warmstart
+        if design_method == "warmstart" and warmstart is None:
+            raise ValueError("design_method='warmstart' needs a warmstart= "
+                             "predictor (object or checkpoint directory)")
         self.stream_chunk = int(stream_chunk)
-        self._cache: Dict[Tuple, Dict] = {}
+        self.memo_size = int(memo_size)
         self.last_result: Optional[StudyResult] = None
+        # all mutable state below is guarded by _lock; the heavy work
+        # (synthesis, Study execution, design) runs OUTSIDE the lock
+        self._lock = threading.Lock()
+        self._cache: "OrderedDict[Tuple, Dict]" = OrderedDict()
+        self._inflight: Dict[Tuple, threading.Event] = {}
+        self._wl_memo: "OrderedDict[Tuple, Dict]" = OrderedDict()
+        self._agg_memo: "OrderedDict[Tuple, Dict]" = OrderedDict()
+        self._feat_memo: "OrderedDict[Tuple, object]" = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0, "study_runs": 0,
+                      "evictions": 0, "singleflight_waits": 0,
+                      "feature_hits": 0, "feature_misses": 0}
+
+    # -- caches -------------------------------------------------------------
+
+    def _workload_key(self, workload) -> Union[int, str]:
+        try:
+            return hash(workload)
+        except TypeError:
+            return repr(workload)
+
+    def _cache_key(self, workload, n_chips, spec, padding) -> Tuple:
+        wk = self._workload_key(workload)
+        sk = spec if isinstance(spec, str) else (spec.name, repr(spec))
+        return (wk, int(n_chips), sk, padding, self.wave_cfg, self.seeds)
+
+    @staticmethod
+    def _memo_get(memo: OrderedDict, key):
+        hit = memo.get(key)
+        if hit is not None:
+            memo.move_to_end(key)
+        return hit
+
+    def _memo_put(self, memo: OrderedDict, key, value) -> None:
+        memo[key] = value
+        memo.move_to_end(key)
+        while len(memo) > self.memo_size:
+            memo.popitem(last=False)
+
+    def _workload_state(self, workload) -> Dict:
+        """Per-workload synthesis memo: phase levels + one chip's trace."""
+        wk = self._workload_key(workload)
+        with self._lock:
+            hit = self._memo_get(self._wl_memo, wk)
+        if hit is not None:
+            return hit
+        cfg, hw = self.wave_cfg, self.hw
+        state = {"levels": phase_levels(workload, cfg, hw),
+                 "chip_w": chip_waveform(workload, cfg, hw)}
+        with self._lock:
+            self._memo_put(self._wl_memo, wk, state)
+        return state
+
+    def _fleet_state(self, workload, n_chips: int) -> Dict:
+        """Per-(workload, fleet) memo: the aggregated datacenter waveform
+        (the jitter realization the catalog Study judges under, so a
+        fallback-designed config is validated on the waveform the rest of
+        the answer describes) plus its swing/mean summary."""
+        wk = (self._workload_key(workload), int(n_chips), self.seeds[0])
+        with self._lock:
+            hit = self._memo_get(self._agg_memo, wk)
+        if hit is not None:
+            return hit
+        cfg, hw = self.wave_cfg, self.hw
+        w = aggregate(self._workload_state(workload)["chip_w"], n_chips,
+                      cfg, hw, seed=self.seeds[0])
+        state = {"w": w, "swing": float(w.max() - w.min()),
+                 "mean_mw": float(w.mean()) / 1e6}
+        with self._lock:
+            self._memo_put(self._agg_memo, wk, state)
+        return state
+
+    def _features(self, workload, n_chips: int, spec: UtilitySpec):
+        """Memoized warm-start feature vector (Goertzel fingerprint +
+        spec thresholds); repeated design() misses for a seen workload
+        skip the synthesis + spectral recompute."""
+        fk = (self._workload_key(workload), int(n_chips),
+              spec.name, repr(spec))
+        with self._lock:
+            hit = self._memo_get(self._feat_memo, fk)
+            if hit is not None:
+                self.stats["feature_hits"] += 1
+                return hit
+            self.stats["feature_misses"] += 1
+        from repro.serve.warmstart import extract_features
+        f = extract_features(spec, self._fleet_state(workload, n_chips)["w"],
+                             self.wave_cfg.dt, n_chips)
+        with self._lock:
+            self._memo_put(self._feat_memo, fk, f)
+        return f
+
+    def cache_len(self) -> int:
+        with self._lock:
+            return len(self._cache)
+
+    # -- single-flight answer cache -----------------------------------------
+
+    def _lookup_or_lead(self, key: Tuple):
+        """('hit', answer) for a cached key; ('lead', None) after claiming
+        leadership of a miss.  Followers of an in-flight identical query
+        block on the leader's event, then loop: on leader success the
+        answer is in the cache, on leader failure one follower claims
+        leadership and retries."""
+        while True:
+            with self._lock:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    self._cache.move_to_end(key)
+                    self.stats["hits"] += 1
+                    return "hit", hit
+                ev = self._inflight.get(key)
+                if ev is None:
+                    self._inflight[key] = threading.Event()
+                    self.stats["misses"] += 1
+                    return "lead", None
+                self.stats["singleflight_waits"] += 1
+            ev.wait()
+
+    def _finish(self, key: Tuple, answer: Optional[Dict]) -> None:
+        """Leader epilogue: publish the answer (None on failure), release
+        the in-flight slot, wake the followers."""
+        with self._lock:
+            if answer is not None:
+                self._cache[key] = answer
+                self._cache.move_to_end(key)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                    self.stats["evictions"] += 1
+            ev = self._inflight.pop(key, None)
+        if ev is not None:
+            ev.set()
 
     # -- the query ----------------------------------------------------------
 
@@ -116,37 +285,154 @@ class PowerComplianceService:
         """(workload, fleet, spec) -> which catalog configs pass, ranked by
         worst-case (over seeds) energy overhead.
 
-        The catalog Study runs on the streaming executor
-        (``Study.run(stream=stream_chunk)``): metrics-only answers, no
-        whole-study waveform retention.  ``on_chunk(done, total,
-        elapsed_s)`` optionally reports progress (cache hits answer
-        without invoking it)."""
-        cache_key = self._cache_key(workload, n_chips, spec, padding)
-        if cache_key in self._cache:
-            return self._cache[cache_key]
+        The catalog rows run on the streaming executor via ``run_rows``
+        (the same path ``query_many`` coalesces over): metrics-only
+        answers, no whole-study waveform retention.  ``on_chunk(done,
+        total, elapsed_s)`` optionally reports progress (cache hits and
+        single-flight followers answer without invoking it)."""
+        key = self._cache_key(workload, n_chips, spec, padding)
+        state, hit = self._lookup_or_lead(key)
+        if state == "hit":
+            return hit
+        answer = None
+        try:
+            answer = self._execute(
+                [(workload, int(n_chips), spec, workload_name, padding)],
+                on_chunk=on_chunk)[0]
+        finally:
+            self._finish(key, answer)
+        return answer
 
+    def query_many(self, queries: Sequence[Dict], *, on_chunk=None
+                   ) -> List[Dict]:
+        """Answer N queries, coalescing every cache miss into ONE padded
+        streaming execution over the union row list.
+
+        Each query is a dict with keys ``workload`` (IterationTimeline),
+        ``n_chips``, and optional ``spec`` / ``workload_name`` /
+        ``padding`` (the ``query`` signature).  Hits come from the LRU,
+        duplicate misses (within the batch or against other threads)
+        single-flight, and the distinct misses run as one ``run_rows``
+        call — each query's rows carrying the PRNG keys it would draw
+        alone, so the coalesced answers are bit-identical to N serial
+        ``query`` calls."""
+        norm = []
+        for q in queries:
+            workload = q["workload"]
+            n_chips = int(q["n_chips"])
+            spec = q.get("spec", "moderate")
+            name = q.get("workload_name", "workload")
+            padding = q.get("padding", "auto")
+            norm.append((workload, n_chips, spec, name, padding))
+        keys = [self._cache_key(w, n, s, p) for w, n, s, _, p in norm]
+
+        answers: List[Optional[Dict]] = [None] * len(norm)
+        lead_idx: List[int] = []
+        follow_idx: List[int] = []
+        claimed: Dict[Tuple, int] = {}
+        for i, key in enumerate(keys):
+            if key in claimed:          # duplicate within this batch
+                follow_idx.append(i)
+                continue
+            state, hit = self._lookup_or_lead(key)
+            if state == "hit":
+                answers[i] = hit
+            else:
+                claimed[key] = i
+                lead_idx.append(i)
+
+        if lead_idx:
+            got: Optional[List[Dict]] = None
+            try:
+                got = self._execute([norm[i] for i in lead_idx],
+                                    on_chunk=on_chunk)
+            finally:
+                for j, i in enumerate(lead_idx):
+                    ans = None if got is None else got[j]
+                    answers[i] = ans
+                    self._finish(keys[i], ans)
+
+        for i in follow_idx:
+            # the leader for this key is in answers already (same batch)
+            # or another thread; either way the cache has it now
+            state, hit = self._lookup_or_lead(keys[i])
+            if state == "hit":
+                answers[i] = hit
+            else:               # leader failed and we inherited the lead
+                try:
+                    answers[i] = self._execute([norm[i]])[0]
+                finally:
+                    self._finish(keys[i], answers[i])
+        return answers
+
+    # -- execution (misses only; runs outside the lock) ---------------------
+
+    def _execute(self, queries: Sequence[Tuple], *, on_chunk=None
+                 ) -> List[Dict]:
+        """Run N cache-missed queries as ONE union ``run_rows`` execution
+        and build their answers.  Workload slots are prefixed ``q{j}:``
+        and spec slots ``s{j}:`` so per-query records filter back out;
+        row PRNG keys are folded from each query's LOCAL row index, so
+        the union run is bit-identical to running each query alone."""
         cfg, hw = self.wave_cfg, self.hw
-        # the same jitter realization the catalog Study judges under, so a
-        # fallback-designed config is validated on the waveform the rest
-        # of the answer describes
-        w = aggregate(chip_waveform(workload, cfg, hw), n_chips, cfg, hw,
-                      seed=self.seeds[0])
-        swing = float(w.max() - w.min())
-        mean_mw = float(w.mean()) / 1e6
-        if isinstance(spec, str):
-            spec = example_specs(job_mw=mean_mw)[spec]
+        workloads: Dict[str, IterationTimeline] = {}
+        levels: Dict[str, object] = {}
+        rows: List[Tuple[str, int, MitigationConfig, int]] = []
+        keys = [] if self.key is not None else None
+        specs: List[Tuple[str, UtilitySpec]] = []
+        resolved = []
+        if self.key is not None:
+            import jax
+            root = (self.key if not isinstance(self.key, int)
+                    else jax.random.PRNGKey(self.key))
 
-        study = Study({workload_name: workload}, fleets=[n_chips],
-                      configs=default_catalog(swing, mpf_grid=self.mpf_grid,
-                                              cap_fracs=self.cap_fracs,
-                                              hw=hw),
-                      specs=spec, seeds=self.seeds, wave_cfg=cfg, hw=hw,
-                      key=self.key, padding=padding)
-        result = study.run(stream=self.stream_chunk, on_chunk=on_chunk)
+        for j, (workload, n_chips, spec, name, _padding) in enumerate(queries):
+            fs = self._fleet_state(workload, n_chips)
+            if isinstance(spec, str):
+                spec = example_specs(job_mw=fs["mean_mw"])[spec]
+            qname, sname = f"q{j}:{name}", f"s{j}:{spec.name}"
+            workloads[qname] = workload
+            levels[qname] = self._workload_state(workload)["levels"]
+            catalog = default_catalog(fs["swing"], mpf_grid=self.mpf_grid,
+                                      cap_fracs=self.cap_fracs, hw=hw)
+            local = 0
+            for c in catalog:
+                for s in self.seeds:
+                    rows.append((qname, n_chips, c, s))
+                    if keys is not None:
+                        keys.append(jax.random.fold_in(root, local))
+                    local += 1
+            specs.append((sname, spec))
+            resolved.append((qname, sname, spec, catalog, fs))
+
+        with self._lock:
+            self.stats["study_runs"] += 1
+        # bucket, not pad: padding to the union's max length changes the
+        # XLA reduction tree shape (1e-8-level float drift), and the
+        # coalesced answers must be bit-identical to serial queries —
+        # per-length calls inside ONE run_rows still share dispatch and
+        # the compiled (length, family, structure) executables
+        mode = queries[0][4] if len(queries) == 1 else "bucket"
+        result = run_rows(workloads, rows, specs, wave_cfg=cfg, hw=hw,
+                          keys=keys, padding=mode,
+                          stream=self.stream_chunk,
+                          on_chunk=on_chunk)
         self.last_result = result
 
-        passing_names = result.passing_configs()
-        by_config = {c: result.filter(config=c) for c in passing_names}
+        answers = []
+        for j, (workload, n_chips, spec_in, name, _padding) in enumerate(
+                queries):
+            qname, sname, spec, catalog, fs = resolved[j]
+            sub = result.filter(workload=qname, spec=sname)
+            answers.append(self._build_answer(
+                workload, n_chips, spec, name, catalog, fs, sub))
+        return answers
+
+    def _build_answer(self, workload, n_chips: int, spec: UtilitySpec,
+                      name: str, catalog, fs: Dict,
+                      sub: StudyResult) -> Dict:
+        passing_names = sub.passing_configs()
+        by_config = {c: sub.filter(config=c) for c in passing_names}
         passing = [{
             "config": c,
             "energy_overhead":
@@ -157,9 +443,15 @@ class PowerComplianceService:
         designed = None
         if not passing and self.design_fallback:
             # no catalog config passes: design one on demand (the engine's
-            # grid/gradient/hybrid solver on this query's waveform)
-            sol = design(spec, w, cfg.dt, n_chips, method=self.design_method,
-                         hw=self.hw)
+            # grid/gradient/hybrid/warmstart solver on this query's
+            # waveform; warmstart reads the memoized feature vector and
+            # hard tau=0 re-validates whatever it returns)
+            kwargs: Dict = {}
+            if self.design_method == "warmstart":
+                kwargs["warmstart"] = self.warmstart
+                kwargs["features"] = self._features(workload, n_chips, spec)
+            sol = design(spec, fs["w"], self.wave_cfg.dt, n_chips,
+                         method=self.design_method, hw=self.hw, **kwargs)
             if sol is not None:
                 mit = sol["mitigated"]
                 designed = {
@@ -172,34 +464,36 @@ class PowerComplianceService:
                     "alternatives": sol["alternatives"],
                     "designed": True,
                 }
+                if "warmstart_path" in sol.get("aux", {}):
+                    designed["warmstart_path"] = sol["aux"]["warmstart_path"]
                 passing = [designed]
-        answer = {
-            "workload": workload_name,
+        return {
+            "workload": name,
             "n_chips": int(n_chips),
             "spec": spec.name,
-            "mean_mw": round(mean_mw, 4),
-            "raw_swing_mw": round(swing / 1e6, 4),
-            "n_configs": len(study.configs),
-            "n_scenarios": study.n_rows,
+            "mean_mw": round(fs["mean_mw"], 4),
+            "raw_swing_mw": round(fs["swing"] / 1e6, 4),
+            "n_configs": len(catalog),
+            "n_scenarios": len(catalog) * len(self.seeds),
             "compliant": bool(passing),
             "recommended": passing[0]["config"] if passing else None,
             "passing": passing,
             "designed": designed,
         }
-        if len(self._cache) >= self.cache_size:
-            self._cache.pop(next(iter(self._cache)))
-        self._cache[cache_key] = answer
-        return answer
-
-    def _cache_key(self, workload, n_chips, spec, padding) -> Tuple:
-        try:
-            wk = hash(workload)
-        except TypeError:
-            wk = repr(workload)
-        sk = spec if isinstance(spec, str) else (spec.name, repr(spec))
-        return (wk, int(n_chips), sk, padding, self.wave_cfg, self.seeds)
 
     # -- JSON boundary ------------------------------------------------------
+
+    def _parse_workload(self, wl) -> Tuple[IterationTimeline, str]:
+        if isinstance(wl, dict) and "cell" in wl:
+            cell = load_cell(wl["cell"])
+            return from_dryrun_cell(cell, self.hw), f"{cell.get('arch', 'cell')}"
+        if isinstance(wl, dict):
+            tl = synthetic_timeline(
+                period_s=float(wl.get("period_s", 1.0)),
+                comm_frac=float(wl.get("comm_frac", 0.25)),
+                moe_notch=bool(wl.get("moe_notch", False)))
+            return tl, wl.get("name", "synthetic")
+        raise TypeError(f"unsupported workload request: {wl!r}")
 
     def handle(self, request: Dict, *, on_chunk=None) -> Dict:
         """One request dict -> one JSON-safe answer dict.
@@ -212,19 +506,7 @@ class PowerComplianceService:
         JSON boundary) threaded to ``query`` — the CLI's ``--progress``.
         """
         try:
-            wl = request["workload"]
-            if isinstance(wl, dict) and "cell" in wl:
-                cell = load_cell(wl["cell"])
-                tl = from_dryrun_cell(cell, self.hw)
-                name = f"{cell.get('arch', 'cell')}"
-            elif isinstance(wl, dict):
-                tl = synthetic_timeline(
-                    period_s=float(wl.get("period_s", 1.0)),
-                    comm_frac=float(wl.get("comm_frac", 0.25)),
-                    moe_notch=bool(wl.get("moe_notch", False)))
-                name = wl.get("name", "synthetic")
-            else:
-                raise TypeError(f"unsupported workload request: {wl!r}")
+            tl, name = self._parse_workload(request["workload"])
             answer = self.query(tl, int(request["n_chips"]),
                                 request.get("spec", "moderate"),
                                 workload_name=name, on_chunk=on_chunk)
@@ -233,6 +515,33 @@ class PowerComplianceService:
             # OSError: a bad --cell path must come back as an error dict,
             # not escape the dict-in/dict-out service boundary
             return {"error": f"{type(e).__name__}: {e}"}
+
+    def handle_many(self, requests: Sequence[Dict], *, on_chunk=None
+                    ) -> List[Dict]:
+        """N request dicts -> N JSON-safe answer dicts, positionally.
+
+        Parse failures come back as ``{"error": ...}`` in place; the
+        parseable remainder is answered by ``query_many`` — cache hits
+        from the LRU, all misses coalesced into one padded streaming
+        execution."""
+        parsed: List[Optional[Dict]] = []
+        out: List[Optional[Dict]] = [None] * len(requests)
+        for i, req in enumerate(requests):
+            try:
+                tl, name = self._parse_workload(req["workload"])
+                parsed.append({"workload": tl,
+                               "n_chips": int(req["n_chips"]),
+                               "spec": req.get("spec", "moderate"),
+                               "workload_name": name})
+            except (KeyError, TypeError, ValueError, OSError) as e:
+                out[i] = {"error": f"{type(e).__name__}: {e}"}
+                parsed.append(None)
+        live = [i for i, p in enumerate(parsed) if p is not None]
+        answers = self.query_many([parsed[i] for i in live],
+                                  on_chunk=on_chunk) if live else []
+        for i, ans in zip(live, answers):
+            out[i] = json.loads(json.dumps(ans, default=float))
+        return out
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -247,6 +556,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--n-chips", type=int, default=512)
     ap.add_argument("--spec", default="moderate",
                     choices=("lenient", "moderate", "tight"))
+    ap.add_argument("--design-method", default="hybrid",
+                    choices=("grid", "gradient", "hybrid", "warmstart"),
+                    help="fallback solver when no catalog config passes")
+    ap.add_argument("--warmstart", default=None,
+                    help="WarmStartPredictor checkpoint directory "
+                         "(required for --design-method warmstart)")
     ap.add_argument("--progress", action="store_true",
                     help="report streaming sweep progress on stderr")
     args = ap.parse_args(argv)
@@ -259,7 +574,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         def on_chunk(done: int, total: int, elapsed: float) -> None:
             print(f"# {done}/{total} scenarios in {elapsed:.1f}s",
                   file=sys.stderr)
-    service = PowerComplianceService()
+    service = PowerComplianceService(design_method=args.design_method,
+                                     warmstart=args.warmstart)
     answer = service.handle({"workload": workload, "n_chips": args.n_chips,
                              "spec": args.spec}, on_chunk=on_chunk)
     print(json.dumps(answer, indent=2))

@@ -1,0 +1,278 @@
+"""Learned warm-start for the serve path's design fallback.
+
+The ROADMAP's "learned warm-start" item: a cache miss that falls through
+to ``engine.design`` pays seconds of grid/gradient solving.  This module
+amortizes that with a small MLP mapping a workload's *spectral
+fingerprint* — the grid-critical Goertzel bin amplitudes, swing, trace
+length, fleet size, and the spec's normalized thresholds
+(``core/spectrum.py``) — to design seeds ``(mpf_frac, capacity_j,
+target_tau_s)``.  ``engine.design(method="warmstart",
+warmstart=predictor)`` expands the seed into a hard tau=0-validated
+candidate ladder (one vmapped call, milliseconds), so answers stay
+exactly verified while warm latency drops ~two orders of magnitude; see
+``engine.design_warmstart`` for the escalation tiers that keep verdicts
+identical to the solver this replaces.
+
+The model is deliberately tiny (a residual GELU block from
+``models/mlp.py`` between two dense projections, a few thousand
+parameters) and trains in seconds with the shared Adam core
+(``train.trainer.make_regression_train_step`` over ``core/optim.py``).
+Targets are scale-free — mpf as a fraction of the hardware cap, capacity
+in units of ``2s * swing`` (the engine's default ``cap_scale`` at its
+2 s period hint), tau in units of the battery's 30 s default — so one
+checkpoint serves any job power.  Checkpoints ride the so-far-unused
+``ckpt/checkpoint.py`` (npy leaves + JSON manifest; the manifest's
+``extra`` carries the model meta so ``WarmStartPredictor.load`` is
+self-describing).  ``benchmarks/warmstart_data.py`` generates the
+training sweep.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import restore_pytree, save_pytree
+from repro.core.hardware import DEFAULT_HW
+from repro.core.optim import adam_init
+from repro.core.spec import UtilitySpec
+from repro.core.spectrum import GRID_CRITICAL_HZ, goertzel_bin_amplitudes
+from repro.models.layers import dense_init
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.train.trainer import make_regression_train_step
+
+# capacity targets are in units of (CAP_PERIOD_S * swing) — the engine's
+# default cap_scale at its 2 s period hint; tau targets in units of the
+# battery's default EMA horizon
+CAP_PERIOD_S = 2.0
+TAU_SCALE_S = 30.0
+
+FEATURE_NAMES: Tuple[str, ...] = (
+    "log10_n_chips", "log10_mean_w", "swing_frac", "trace_s",
+    *(f"goertzel_{f:g}hz_frac" for f in GRID_CRITICAL_HZ),
+    "dominant_critical_hz",
+    "ramp_up_frac_per_s", "ramp_down_frac_per_s", "dynamic_range_frac",
+    "max_energy_fraction", "log10_min_ac_rms_frac",
+)
+N_FEATURES = len(FEATURE_NAMES)
+N_TARGETS = 3   # (mpf_frac / mpf_max, cap_j / (2s * swing), tau_s / 30s)
+
+# indices the predictor reads back to denormalize capacity: swing_w =
+# swing_frac * 10**log10_mean_w (both computed from the same waveform)
+_F_LOG_MEAN = FEATURE_NAMES.index("log10_mean_w")
+_F_SWING_FRAC = FEATURE_NAMES.index("swing_frac")
+
+
+def extract_features(spec: UtilitySpec, w: np.ndarray, dt: float,
+                     n_chips: int) -> np.ndarray:
+    """The [N_FEATURES] spectral fingerprint of one (workload waveform,
+    fleet, spec) query.
+
+    Waveform terms are scale-normalized by the mean draw (the Goertzel
+    amplitudes become modulation *fractions*), spec thresholds likewise —
+    the same workload at 10 MW and 100 MW maps to the same point, which
+    is exactly the invariance the scale-free targets need.  O(n * K)
+    Goertzel sums, no FFT plan; the serve layer memoizes the result per
+    (workload, fleet) so repeated misses don't recompute synthesis +
+    analysis.
+    """
+    w = np.asarray(w, np.float64)
+    mean = max(float(w.mean()), 1e-9)
+    swing = float(w.max() - w.min())
+    amps = goertzel_bin_amplitudes(w, dt) / mean
+    dom = float(GRID_CRITICAL_HZ[int(np.argmax(amps))])
+    feats = [
+        np.log10(max(float(n_chips), 1.0)),
+        np.log10(mean),
+        swing / mean,
+        len(w) * dt,
+        *amps.tolist(),
+        dom,
+        spec.time.ramp_up_w_per_s / mean,
+        spec.time.ramp_down_w_per_s / mean,
+        spec.time.dynamic_range_w / mean,
+        spec.freq.max_energy_fraction,
+        np.log10(max(spec.freq.min_ac_rms_frac, 1e-12)),
+    ]
+    return np.asarray(feats, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+def init_warmstart(key, *, n_features: int = N_FEATURES, d_model: int = 32,
+                   d_ff: int = 64, n_targets: int = N_TARGETS,
+                   dtype=jnp.float32) -> Dict:
+    """features -> d_model embed -> residual GELU MLP block -> targets.
+
+    The embed takes ``n_features + 1`` inputs: the model-side dense
+    layers are bias-free (``models/layers.dense_init``), which pins a
+    pure composition to f(0) = 0 — a constant-one input channel restores
+    the bias pathway so the net can express the mean design (normalized
+    features sit near 0 for typical queries)."""
+    ks = jax.random.split(key, 3)
+    return {"w_embed": dense_init(ks[0], n_features + 1, d_model, dtype),
+            "mlp": init_mlp(ks[1], d_model, d_ff, "gelu", dtype),
+            "w_head": dense_init(ks[2], d_model, n_targets, dtype)}
+
+
+def warmstart_forward(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """[B, F] normalized features -> [B, T] normalized targets."""
+    ones = jnp.ones((*x.shape[:-1], 1), x.dtype)
+    h = jnp.concatenate([x, ones], axis=-1) @ params["w_embed"]
+    h = h + mlp_forward(params["mlp"], h, "gelu")
+    return h @ params["w_head"]
+
+
+@jax.jit
+def _predict_normalized(params: Dict, norm: Dict, x: jnp.ndarray
+                        ) -> jnp.ndarray:
+    x = (jnp.asarray(x, jnp.float32) - norm["mean"]) / norm["std"]
+    return warmstart_forward(params, x)
+
+
+class WarmStartPredictor:
+    """The trained warm-start model + feature normalization + meta.
+
+    Callable with the engine's predictor protocol —
+    ``predictor(spec, w, dt, n_chips, features=None)`` returns
+    ``[(mpf_frac, capacity_j, target_tau_s)]`` seeds in physical units —
+    so an instance plugs straight into
+    ``design(method="warmstart", warmstart=predictor)`` and into
+    ``PowerComplianceService(warmstart=...)``.
+    """
+
+    def __init__(self, params: Dict, norm: Dict, meta: Dict):
+        self.params = params
+        self.norm = norm
+        self.meta = dict(meta)
+
+    # -- inference ----------------------------------------------------------
+
+    def predict_normalized(self, features: np.ndarray) -> np.ndarray:
+        """[B, F] raw features -> [B, T] scale-free targets."""
+        x = np.atleast_2d(np.asarray(features, np.float32))
+        return np.asarray(_predict_normalized(self.params, self.norm, x))
+
+    def __call__(self, spec: UtilitySpec, w: np.ndarray, dt: float,
+                 n_chips: int, features: Optional[np.ndarray] = None
+                 ) -> List[Tuple[float, float, float]]:
+        f = (extract_features(spec, w, dt, n_chips)
+             if features is None else np.asarray(features, np.float32))
+        out = self.predict_normalized(f)[0]
+        swing = float(f[_F_SWING_FRAC]) * 10.0 ** float(f[_F_LOG_MEAN])
+        mpf_max = float(self.meta.get("mpf_max", DEFAULT_HW.chip.mpf_max))
+        mpf = float(np.clip(out[0], 0.0, 1.0)) * mpf_max
+        cap = max(float(out[1]), 0.0) * CAP_PERIOD_S * swing
+        # tau clamped to a sane controller range: [1/6, 4] x 30 s
+        tau = float(np.clip(out[2], 1.0 / 6.0, 4.0)) * TAU_SCALE_S
+        return [(mpf, cap, tau)]
+
+    # -- persistence (ckpt/checkpoint.py) -----------------------------------
+
+    def save(self, directory: str, step: int = 0) -> str:
+        return save_pytree(directory,
+                           {"params": self.params, "norm": self.norm},
+                           step, extra=self.meta)
+
+    @classmethod
+    def load(cls, directory: str) -> "WarmStartPredictor":
+        with open(os.path.join(directory, "manifest.json")) as fh:
+            meta = json.load(fh)["extra"]
+        template = {
+            "params": init_warmstart(
+                jax.random.PRNGKey(0),
+                n_features=int(meta["n_features"]),
+                d_model=int(meta["d_model"]), d_ff=int(meta["d_ff"]),
+                n_targets=int(meta.get("n_targets", N_TARGETS))),
+            "norm": {"mean": jnp.zeros(int(meta["n_features"])),
+                     "std": jnp.ones(int(meta["n_features"]))},
+        }
+        tree, manifest = restore_pytree(directory, template)
+        return cls(tree["params"], tree["norm"], manifest["extra"])
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def normalize_targets(targets: np.ndarray, swings: np.ndarray,
+                      mpf_max: float) -> np.ndarray:
+    """Physical (mpf_frac, capacity_j, tau_s) [N, 3] -> scale-free [N, 3]."""
+    t = np.asarray(targets, np.float64)
+    s = np.maximum(np.asarray(swings, np.float64), 1e-9)
+    return np.stack([t[:, 0] / max(mpf_max, 1e-9),
+                     t[:, 1] / (CAP_PERIOD_S * s),
+                     t[:, 2] / TAU_SCALE_S], axis=1).astype(np.float32)
+
+
+def swings_from_features(features: np.ndarray) -> np.ndarray:
+    """Recover each sample's raw swing (watts) from its feature row."""
+    f = np.atleast_2d(np.asarray(features, np.float64))
+    return f[:, _F_SWING_FRAC] * 10.0 ** f[:, _F_LOG_MEAN]
+
+
+def train_warmstart(features: np.ndarray, targets: np.ndarray, *,
+                    mpf_max: float = DEFAULT_HW.chip.mpf_max,
+                    d_model: int = 32, d_ff: int = 64,
+                    epochs: int = 400, batch_size: int = 64,
+                    lr: float = 3e-3, weight_decay: float = 1e-4,
+                    seed: int = 0,
+                    ) -> Tuple[WarmStartPredictor, Dict[str, List[float]]]:
+    """Fit a ``WarmStartPredictor`` on solved designs.
+
+    ``features`` [N, F] from ``extract_features``; ``targets`` [N, 3]
+    *physical* ``(mpf_frac, capacity_j, target_tau_s)`` from the solver
+    (``benchmarks/warmstart_data.py`` generates both).  Each sample's
+    swing for capacity normalization is recovered from its own feature
+    row.  Returns the predictor and a history dict (per-epoch MSE in
+    normalized target space).
+    """
+    x = np.asarray(features, np.float32)
+    if x.ndim != 2 or x.shape[1] != N_FEATURES:
+        raise ValueError(f"features must be [N, {N_FEATURES}], got {x.shape}")
+    y = normalize_targets(targets, swings_from_features(x), mpf_max)
+    n = len(x)
+    mean = x.mean(axis=0)
+    std = np.maximum(x.std(axis=0), 1e-6)
+    norm = {"mean": jnp.asarray(mean, jnp.float32),
+            "std": jnp.asarray(std, jnp.float32)}
+
+    params = init_warmstart(jax.random.PRNGKey(seed), d_model=d_model,
+                            d_ff=d_ff)
+    opt = adam_init(params)
+    step = make_regression_train_step(
+        functools.partial(_forward_normalized_closure, norm), lr=lr,
+        weight_decay=weight_decay)
+
+    rng = np.random.default_rng(seed)
+    batch_size = max(1, min(batch_size, n))
+    losses: List[float] = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        ep = []
+        for lo in range(0, n, batch_size):
+            sel = order[lo:lo + batch_size]
+            params, opt, m = step(params, opt, jnp.asarray(x[sel]),
+                                  jnp.asarray(y[sel]))
+            ep.append(float(m["loss"]))
+        losses.append(float(np.mean(ep)))
+    meta = {"n_features": N_FEATURES, "n_targets": N_TARGETS,
+            "d_model": d_model, "d_ff": d_ff, "mpf_max": float(mpf_max),
+            "cap_period_s": CAP_PERIOD_S, "tau_scale_s": TAU_SCALE_S,
+            "n_train": int(n), "final_loss": losses[-1] if losses else None,
+            "feature_names": list(FEATURE_NAMES)}
+    return WarmStartPredictor(params, norm, meta), {"loss": losses}
+
+
+def _forward_normalized_closure(norm, params, x):
+    """Module-level forward with the normalization baked in (closing over
+    ``norm`` with functools.partial keeps the jitted step cacheable)."""
+    xn = (x - norm["mean"]) / norm["std"]
+    return warmstart_forward(params, xn)

@@ -85,6 +85,44 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan=None,
 
 
 # ---------------------------------------------------------------------------
+# Small-model regression step (the serve path's warm-start predictor)
+# ---------------------------------------------------------------------------
+
+def make_regression_train_step(forward, *, lr: float = 1e-3,
+                               grad_clip: float = 10.0,
+                               weight_decay: float = 0.0):
+    """Jitted MSE regression step over the shared pure-JAX Adam core
+    (``core/optim.py`` — the same moment kernel ``design_gradient`` and
+    the AdamW training step wrap).
+
+    ``forward(params, x)`` maps a ``[B, F]`` feature batch to ``[B, T]``
+    predictions; the returned ``train_step(params, opt_state, x, y)``
+    gives ``(params, opt_state, metrics)`` with ``metrics["loss"]`` the
+    batch MSE.  Initialize ``opt_state`` with ``core.optim.adam_init``.
+    This is what trains the serve layer's ``WarmStartPredictor``
+    (features -> design seeds) — a few thousand parameters, so one jit
+    with the whole batch resident is the right scale.
+    """
+    from repro.core.optim import adam_init  # noqa: F401  (re-exported use)
+    from repro.core.optim import adam_update
+    from repro.core.optim import clip_by_global_norm as clip_core
+
+    def loss_fn(params, x, y):
+        pred = forward(params, x)
+        return jnp.mean(jnp.square(pred - y))
+
+    @jax.jit
+    def train_step(params, opt_state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        grads, gnorm = clip_core(grads, grad_clip)
+        params, opt_state = adam_update(params, grads, opt_state, lr,
+                                        weight_decay=weight_decay)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
 # Compressed-gradient data-parallel step (distributed-optimization trick)
 # ---------------------------------------------------------------------------
 

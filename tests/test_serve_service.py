@@ -1,0 +1,171 @@
+"""PowerComplianceService concurrency + amortization: true-LRU answer
+cache, single-flight dedup of identical in-flight queries, coalesced
+``query_many``/``handle_many`` parity, memoized workload features, and
+compiled-executable reuse across query shapes."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import engine
+from repro.serve.power import PowerComplianceService
+
+
+CFG = core.WaveformConfig(dt=0.01, steps=3, jitter_s=0.01)
+
+
+def _service(**kw):
+    kw.setdefault("wave_cfg", CFG)
+    kw.setdefault("mpf_grid", (0.8,))
+    kw.setdefault("cap_fracs", (1.0,))
+    kw.setdefault("stream_chunk", 4)
+    return PowerComplianceService(**kw)
+
+
+def _tl(period_s=1.0, comm_frac=0.25, moe=False):
+    return core.synthetic_timeline(period_s=period_s, comm_frac=comm_frac,
+                                   moe_notch=moe)
+
+
+# -- LRU ---------------------------------------------------------------------
+
+def test_lru_caps_resident_entries_and_evicts_oldest():
+    svc = _service(cache_size=2)
+    a, b, c = _tl(1.0), _tl(1.4), _tl(0.7)
+    svc.query(a, 512)
+    svc.query(b, 512)
+    svc.query(a, 512)              # refresh a: b is now the LRU entry
+    svc.query(c, 512)              # evicts b, not a
+    assert svc.cache_len() == 2
+    assert svc.stats["evictions"] == 1
+    runs = svc.stats["study_runs"]
+    svc.query(a, 512)              # still cached
+    assert svc.stats["study_runs"] == runs
+    svc.query(b, 512)              # evicted: must re-run
+    assert svc.stats["study_runs"] == runs + 1
+
+
+def test_cache_hit_is_same_answer_without_rerun():
+    svc = _service()
+    first = svc.query(_tl(), 512)
+    again = svc.query(_tl(), 512)
+    assert again == first
+    assert svc.stats == dict(svc.stats, hits=1, misses=1, study_runs=1)
+
+
+# -- single-flight -----------------------------------------------------------
+
+def test_concurrent_identical_queries_run_study_once():
+    svc = _service()
+    n, results, errs = 8, [None] * 8, []
+
+    def hammer(i):
+        try:
+            results[i] = svc.query(_tl(), 512)
+        except Exception as e:      # pragma: no cover - surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+    assert svc.stats["study_runs"] == 1
+    assert svc.stats["misses"] == 1
+    assert all(r == results[0] for r in results)
+    # cache stays consistent afterwards
+    assert svc.query(_tl(), 512) == results[0]
+
+
+# -- coalescing --------------------------------------------------------------
+
+def test_query_many_coalesces_and_matches_serial():
+    serial = _service()
+    ans = [serial.query(_tl(1.0), 512, "moderate"),
+           serial.query(_tl(1.4), 1024, "lenient"),
+           serial.query(_tl(0.7, moe=True), 2048, "tight")]
+    assert serial.stats["study_runs"] == 3
+
+    co = _service()
+    got = co.query_many([
+        {"workload": _tl(1.0), "n_chips": 512, "spec": "moderate"},
+        {"workload": _tl(1.4), "n_chips": 1024, "spec": "lenient"},
+        {"workload": _tl(0.7, moe=True), "n_chips": 2048, "spec": "tight"},
+    ])
+    assert co.stats["study_runs"] == 1
+    for a, b in zip(ans, got):
+        a = dict(a, workload=None)          # names differ; physics must not
+        b = dict(b, workload=None)
+        assert json.dumps(a, default=float, sort_keys=True) == \
+            json.dumps(b, default=float, sort_keys=True)
+
+
+def test_query_many_duplicates_and_hits():
+    svc = _service()
+    first = svc.query(_tl(1.0), 512)
+    got = svc.query_many([
+        {"workload": _tl(1.0), "n_chips": 512},    # cache hit
+        {"workload": _tl(1.4), "n_chips": 512},    # miss (leads)
+        {"workload": _tl(1.4), "n_chips": 512},    # duplicate of the miss
+    ])
+    assert got[0] == first
+    assert got[1] == got[2]
+    assert svc.stats["study_runs"] == 2            # first + one coalesced
+
+
+def test_handle_many_json_boundary():
+    svc = _service()
+    out = svc.handle_many([
+        {"workload": {"period_s": 1.0, "comm_frac": 0.25}, "n_chips": 256},
+        {"workload": "garbage", "n_chips": 1},
+        {"workload": {"period_s": 1.3, "comm_frac": 0.3}, "n_chips": 128},
+    ])
+    assert "error" in out[1]
+    assert out[0]["n_chips"] == 256 and out[2]["n_chips"] == 128
+    assert out[0] == svc.handle(
+        {"workload": {"period_s": 1.0, "comm_frac": 0.25}, "n_chips": 256})
+
+
+# -- memoized features -------------------------------------------------------
+
+def test_feature_memo_skips_recompute():
+    svc = _service()
+    tl = _tl()
+    spec = core.example_specs(job_mw=1.0)["moderate"]
+    f1 = svc._features(tl, 512, spec)
+    f2 = svc._features(tl, 512, spec)
+    assert svc.stats["feature_misses"] == 1
+    assert svc.stats["feature_hits"] == 1
+    np.testing.assert_array_equal(f1, f2)
+    # a different fleet is a different fingerprint
+    svc._features(tl, 1024, spec)
+    assert svc.stats["feature_misses"] == 2
+
+
+def test_workload_memo_reuses_synthesis():
+    svc = _service()
+    tl = _tl()
+    s1 = svc._workload_state(tl)
+    s2 = svc._workload_state(tl)
+    assert s1 is s2
+    a1 = svc._fleet_state(tl, 512)
+    a2 = svc._fleet_state(tl, 512)
+    assert a1 is a2
+
+
+# -- compiled reuse ----------------------------------------------------------
+
+def test_no_retrace_across_fleets_and_spec_thresholds():
+    svc = _service()
+    tl = _tl()
+    svc.query(tl, 512, "moderate")
+    n_exec = engine._mitigate_vmapped._cache_size()
+    svc.query(tl, 1024, "lenient")
+    svc.query(tl, 4096, "tight")
+    svc.query_many([{"workload": tl, "n_chips": 256, "spec": s}
+                    for s in ("moderate", "lenient")])
+    assert engine._mitigate_vmapped._cache_size() == n_exec, \
+        "new fleet sizes / spec thresholds retraced the pipeline"

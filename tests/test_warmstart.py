@@ -1,0 +1,150 @@
+"""Warm-start design amortization: spectral fingerprint, predictor
+training/checkpointing, the hard-revalidated ``design(method="warmstart")``
+path, and the spec family/limits split that keys compiled executables."""
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import engine
+from repro.core.spectrum import (GRID_CRITICAL_HZ, goertzel_bin_amplitudes,
+                                 goertzel_bin_amplitudes_jax)
+
+
+def _problem(n_chips=512, steps=3, dt=0.01, period_s=1.0, comm_frac=0.3,
+             spec_name="moderate"):
+    tl = core.synthetic_timeline(period_s=period_s, comm_frac=comm_frac)
+    cfg = core.WaveformConfig(dt=dt, steps=steps, jitter_s=dt)
+    w = core.aggregate(core.chip_waveform(tl, cfg), n_chips, cfg)
+    spec = core.example_specs(job_mw=float(w.mean()) / 1e6)[spec_name]
+    return w, cfg, spec
+
+
+# -- spectral fingerprint ---------------------------------------------------
+
+def test_goertzel_reports_pure_tone_amplitude():
+    dt, n, amp, f0 = 0.002, 4000, 3e5, 2.0
+    t = np.arange(n) * dt
+    x = 5e8 + amp * np.sin(2 * np.pi * f0 * t)
+    amps = goertzel_bin_amplitudes(x, dt, GRID_CRITICAL_HZ)
+    i0 = GRID_CRITICAL_HZ.index(f0)
+    assert amps[i0] == pytest.approx(amp, rel=0.02)
+    others = np.delete(amps, i0)
+    assert others.max() < 0.1 * amp
+
+
+def test_goertzel_jax_mirror_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = 1e8 + 1e6 * rng.normal(size=3000)
+    a_np = goertzel_bin_amplitudes(x, 0.004, GRID_CRITICAL_HZ)
+    a_jx = np.asarray(goertzel_bin_amplitudes_jax(x, 0.004, GRID_CRITICAL_HZ))
+    np.testing.assert_allclose(a_jx, a_np, rtol=2e-3, atol=1.0)
+
+
+def test_features_finite_and_swing_recovered():
+    from repro.serve.warmstart import (FEATURE_NAMES, extract_features,
+                                      swings_from_features)
+    w, cfg, spec = _problem()
+    f = extract_features(spec, w, cfg.dt, 512)
+    assert f.shape == (len(FEATURE_NAMES),) and np.isfinite(f).all()
+    swing = float(w.max() - w.min())
+    got = float(swings_from_features(f[None])[0])
+    assert got == pytest.approx(swing, rel=1e-3)
+
+
+# -- training + checkpoint --------------------------------------------------
+
+def _toy_dataset(w, cfg, spec, n_chips=512):
+    from repro.serve.warmstart import extract_features
+    f = extract_features(spec, w, cfg.dt, n_chips)
+    rng = np.random.default_rng(0)
+    X = np.tile(f, (48, 1)) + rng.normal(0, 0.01, (48, len(f))).astype(
+        np.float32)
+    X[0] = f
+    swing = float(w.max() - w.min())
+    Y = np.tile(np.asarray([0.7, swing * 1.2, 15.0], np.float32), (48, 1))
+    return f, X, Y
+
+
+def test_train_loss_decreases_and_predicts_training_point():
+    from repro.serve.warmstart import train_warmstart
+    w, cfg, spec = _problem()
+    f, X, Y = _toy_dataset(w, cfg, spec)
+    pred, hist = train_warmstart(X, Y, epochs=200, batch_size=24, seed=0)
+    assert hist["loss"][-1] < 0.01 * hist["loss"][0]
+    mpf, cap, tau = pred(spec, w, cfg.dt, 512, features=f)[0]
+    assert mpf == pytest.approx(0.7, abs=0.08)
+    assert cap == pytest.approx(float(Y[0, 1]), rel=0.15)
+    assert tau == pytest.approx(15.0, abs=3.0)
+
+
+def test_checkpoint_roundtrip_bit_exact(tmp_path):
+    from repro.serve.warmstart import WarmStartPredictor, train_warmstart
+    w, cfg, spec = _problem()
+    f, X, Y = _toy_dataset(w, cfg, spec)
+    pred, _ = train_warmstart(X, Y, epochs=40, batch_size=24, seed=0)
+    pred.save(str(tmp_path))
+    pred2 = WarmStartPredictor.load(str(tmp_path))
+    np.testing.assert_array_equal(pred.predict_normalized(f),
+                                  pred2.predict_normalized(f))
+    assert pred2.meta["n_features"] == pred.meta["n_features"]
+
+
+# -- the design path --------------------------------------------------------
+
+def test_design_warmstart_fast_path_hard_passes():
+    w, cfg, spec = _problem()
+    swing = float(w.max() - w.min())
+    # a stub predictor near the known-feasible battery sizing: the fast
+    # ladder path must return a hard tau=0 validated config
+    stub = lambda spec, w, dt, n, features=None: [(0.0, swing * 1.2, 30.0)]
+    sol = engine.design(spec, w, cfg.dt, 512, method="warmstart",
+                        warmstart=stub)
+    assert sol is not None and sol["report"].ok
+    assert sol["aux"]["warmstart_path"] == "fast"
+    assert sol["method"] == "warmstart"
+    assert sol["target_tau_s"] == 30.0
+
+
+def test_design_warmstart_verdict_matches_hybrid_on_bad_seeds():
+    # a predictor that misses badly: the escalation tiers must still
+    # agree with the solver the warm start amortizes
+    w, cfg, spec = _problem()
+    bad = lambda spec, w, dt, n, features=None: [(0.05, 1.0, 5.0)]
+    sol_w = engine.design(spec, w, cfg.dt, 512, method="warmstart",
+                         warmstart=bad)
+    sol_h = engine.design(spec, w, cfg.dt, 512, method="hybrid")
+    assert (sol_w is None) == (sol_h is None)
+    assert sol_w["report"].ok and sol_h["report"].ok
+    assert sol_w["aux"]["warmstart_path"] in ("polish", "hybrid_fallback")
+
+
+def test_design_warmstart_requires_predictor():
+    w, cfg, spec = _problem()
+    with pytest.raises(ValueError, match="warmstart"):
+        engine.design(spec, w, cfg.dt, 512, method="warmstart")
+
+
+# -- spec family/limits split (the cross-query compiled-reuse keying) -------
+
+def test_family_limits_validation_parity():
+    w, cfg, _ = _problem()
+    for name in ("lenient", "moderate", "tight"):
+        spec = core.example_specs(job_mw=float(w.mean()) / 1e6)[name]
+        report = spec.validate(np.asarray(w), cfg.dt)
+        ok_fam = bool(np.asarray(
+            spec.family().validate_jax(w, cfg.dt, spec.limits())[0]))
+        assert ok_fam == report.ok
+
+
+def test_no_retrace_across_spec_thresholds():
+    w, cfg, _ = _problem()
+    ws = np.stack([w, w * 1.01])
+    spec_a = core.example_specs(job_mw=10.0)["moderate"]
+    spec_b = core.example_specs(job_mw=25.0)["moderate"]
+    engine.validate_many(ws, spec_a, cfg.dt)
+    size_after_first = engine._validate_vmapped._cache_size()
+    ok_a, _ = engine.validate_many(ws, spec_a, cfg.dt)
+    ok_b, _ = engine.validate_many(ws, spec_b, cfg.dt)
+    assert engine._validate_vmapped._cache_size() == size_after_first, \
+        "new spec thresholds retraced the validation executable"
+    assert ok_a.shape == ok_b.shape == (2,)
