@@ -355,6 +355,81 @@ def serve_section():
     return "\n".join(lines)
 
 
+def control_section():
+    """§Control — the grid-interactive control plane's closed-loop run,
+    numbers from BENCH_control.json (benchmarks/control_bench.py)."""
+    lines = ["\n## §Control — grid-interactive closed loop "
+             "(online detection -> intervention dispatch)\n",
+             "`repro/control/` closes the loop on the serve path: a "
+             "`ControlLoop` replays telemetry tick by tick "
+             "(`ReplaySource`), runs the sliding-Goertzel monitor "
+             "*incrementally* (`sliding_bin_power(..., carry=)` — the "
+             "online chunked path is bit-identical to one offline call on "
+             "the concatenated trace, asserted below), feeds "
+             "slope-projected per-bin amplitudes into the shared "
+             "threshold/hysteresis escalation machine "
+             "(`core/telemetry.escalation_step`, also the backstop's), "
+             "and escalates through an intervention ladder — warm-started "
+             "`design()` -> power cap + ballast floor -> fleet phase "
+             "stagger — applying each to the stream's own future, so the "
+             "loop observably changes what it subsequently measures.  "
+             "Every decision lands in a `ControlLog`; because the "
+             "controller *prevents* the breach, detection lead is "
+             "measured against the counterfactual breach of the raw, "
+             "uncontrolled trace.\n"]
+    bench = os.path.join(ROOT, "BENCH_control.json")
+    if os.path.exists(bench):
+        with open(bench) as fh:
+            b = json.load(fh)
+        lo, de = b["loop"], b["detector"]
+        det, lat, cl = (lo["detection"], lo["dispatch_latency_s"],
+                        lo["closed_loop"])
+        lines.append(
+            f"Measured (benchmarks/control_bench.py, "
+            f"{lo['trace']['duration_s']:.0f} s replay, 9 Hz amplitude "
+            f"ramp, {lo['trace']['n_chips']} chips, "
+            f"'{lo['trace']['spec']}' spec"
+            f"{', smoke' if b.get('smoke') else ''}):\n\n"
+            "| metric | value |\n|---|---|\n"
+            f"| first escalation | t={det['first_escalate_t_s']} s |\n"
+            f"| counterfactual (uncontrolled) breach | "
+            f"t={det['counterfactual_breach_t_s']} s |\n"
+            f"| **detection lead** | **{det['detection_lead_s']:.1f} s "
+            "before breach** |\n"
+            f"| dispatch latency cold (first compile) | "
+            f"{lat['cold_first']:.2f} s |\n"
+            f"| dispatch latency warm p50 / p90 | "
+            f"**{lat['warm_p50']*1e3:.0f} ms** / "
+            f"{lat['warm_p90']*1e3:.0f} ms "
+            f"(max {lat['warm_max']*1e3:.0f} ms, "
+            f"n={lat['n_samples']}) |\n"
+            f"| amplitude recession below release | "
+            f"t={cl['recession_t_s']} s "
+            f"({cl['recession_after_dispatch_s']:.1f} s after dispatch) |\n"
+            f"| interventions dispatched | {cl['n_dispatches']} "
+            f"({', '.join(sorted({a.split(':', 1)[1] for a in cl['interventions'] if a.startswith('dispatch:')}))}) |\n"
+            f"| closed loop wall-clock | "
+            f"{lo['loop_wall_s']['realtime_x']:.0f}x realtime |\n"
+            f"| online detector step (win={de['win']}, "
+            f"{len(FREQS_NOTE)} bins) | "
+            f"{de['step_us']['p50']:.0f} µs per "
+            f"{de['tick_samples'] * lo['trace']['dt']:.1f} s tick "
+            f"({de['realtime_x']:.0f}x realtime) |\n"
+            f"| online == offline monitor | "
+            f"{'bitwise identical' if de['bit_identical_to_offline'] else 'DRIFTED'} "
+            f"over {de['samples']} samples |\n\n"
+            "Run it yourself: `python examples/control_loop_demo.py` "
+            "prints the decision timeline; `repro-serve watch --replay "
+            "ramp --timeline` is the CLI form.")
+    else:
+        lines.append("(run `python -m benchmarks.control_bench` for the "
+                     "measured section)")
+    return "\n".join(lines)
+
+
+FREQS_NOTE = (0.5, 1.0, 2.0, 9.0)   # grid-critical bins the bench watches
+
+
 def kernels_section():
     """§Kernels — the telemetry backstop's sliding-Goertzel monitor on the
     streaming Pallas kernel, numbers from BENCH_kernels.json
@@ -624,6 +699,7 @@ def main():
     lines.append(streaming_section())
     lines.append(design_section())
     lines.append(serve_section())
+    lines.append(control_section())
     lines.append(kernels_section())
 
     lines.append("""

@@ -1,0 +1,62 @@
+"""Closed-loop replay: watch a 9 Hz amplitude ramp get caught and killed.
+
+Synthesizes the canonical escalating trace (a fleet-scale operating
+point whose 9 Hz bin amplitude ramps toward the moderate spec's breach
+level), replays it through the grid-interactive control loop, and prints
+the ``ControlLog`` decision timeline: tick, detected bin, margin,
+chosen intervention, dispatch latency — then the before/after margins
+that show the loop actually closed.
+
+  PYTHONPATH=src python examples/control_loop_demo.py [--max-ticks N]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+from repro import api, control
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-ticks", type=int, default=None,
+                    help="truncate the replay (CI smoke)")
+    ap.add_argument("--duration-s", type=float, default=48.0)
+    args = ap.parse_args()
+
+    dt = 0.002
+    spec = api.example_specs(job_mw=500.0)["moderate"]
+    w = control.synthesize_ramp(dt=dt, duration_s=args.duration_s)
+    print(f"trace: {len(w)} samples @ {dt*1e3:g} ms "
+          f"({len(w)*dt:g} s), dc {w.mean()/1e6:.0f} MW, "
+          f"9 Hz amplitude ramping to 80 MW")
+    print(f"spec:  {spec.name} -> breach at "
+          f"{0.5*spec.time.dynamic_range_w/1e6:.0f} MW per-bin amplitude\n")
+
+    log = control.watch_trace(w, dt, spec=spec, n_chips=512,
+                              max_ticks=args.max_ticks)
+
+    print("decision timeline (tick, bin, amp, margin, level, latency):")
+    print(log.timeline() or "  (no decisions — trace too short?)")
+
+    s = log.summary()
+    print("\nclosed-loop summary:")
+    print(f"  first escalation        t={s['first_escalate_t_s']} s")
+    print(f"  uncontrolled breach at  t={s['counterfactual_breach_t_s']} s"
+          f"  (detection lead {s['detection_lead_s']} s)")
+    print(f"  interventions dispatched: {s['n_dispatches']} "
+          f"(warm latency p50 "
+          f"{(s['dispatch_latency_s']['p50'] or 0)*1e3:.0f} ms)")
+    if s["recession_t_s"] is not None:
+        print(f"  amplitude back below release ({log.release_w/1e6:.0f} MW) "
+              f"at t={s['recession_t_s']} s")
+    # margin before the first dispatch vs after the last recession
+    disp = log.first("dispatch:")
+    if disp is not None:
+        after = max(log.series[-1]["amps_w"])
+        print(f"  worst-bin margin: {disp.margin_w/1e6:+.1f} MW at dispatch "
+              f"-> {(log.trigger_w - after)/1e6:+.1f} MW at end of replay")
+    assert s["n_dispatches"] >= 1 or args.max_ticks is not None
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,9 @@ from repro.core.stratosim import SimResult, simulate, simulate_jit
 from repro.core.study import (MitigationConfig, Scenario, Study, StudyResult)
 from repro.core.telemetry import TelemetrySource
 from repro.core.waveform import WaveformConfig
+from repro.control import (ControlLog, ControlLoop, GridController,
+                           InterventionLadder, OnlineGoertzelDetector,
+                           ReplaySource, synthesize_ramp, watch_trace)
 from repro.serve.power import PowerComplianceService, default_catalog
 from repro.serve.warmstart import WarmStartPredictor, train_warmstart
 
@@ -47,6 +50,10 @@ __all__ = [
     # the serve path
     "PowerComplianceService", "default_catalog",
     "WarmStartPredictor", "train_warmstart",
+    # the grid-interactive control plane
+    "ControlLoop", "ControlLog", "GridController", "InterventionLadder",
+    "OnlineGoertzelDetector", "ReplaySource", "synthesize_ramp",
+    "watch_trace",
     # scenario ingredients
     "IterationTimeline", "Phase", "synthetic_timeline", "from_dryrun_cell",
     "load_cell", "WaveformConfig", "TelemetrySource",

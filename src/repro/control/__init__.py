@@ -1,0 +1,41 @@
+"""repro.control — the grid-interactive control plane.
+
+Closes the loop the paper's monitoring/mitigation sections describe:
+a telemetry stream (live or replayed) flows through the online
+sliding-Goertzel detector (bit-identical to the offline monitor via the
+``sliding_bin_power`` carry API), a per-bin hysteresis controller with
+slope-based early warning decides an escalation level, and an
+intervention ladder (warm-started mitigation re-design → power cap +
+ballast floor → job phase-stagger) is dispatched back into the stream.
+
+    from repro import control
+
+    w = control.synthesize_ramp()                 # 9 Hz amplitude ramp
+    log = control.watch_trace(
+        w, 0.002, spec=api.example_specs(500.0)["moderate"], n_chips=512)
+    print(log.timeline())
+    log.summary()["detection_lead_s"]             # detected before breach
+
+Served via ``PowerComplianceService.watch()`` and
+``repro-serve watch --replay ...``.
+"""
+from repro.control.controller import (ControlDecision, ControllerConfig,
+                                      GridController)
+from repro.control.detector import DetectorFrame, OnlineGoertzelDetector
+from repro.control.interventions import (Intervention, InterventionLadder,
+                                         power_cap_intervention,
+                                         redesign_intervention,
+                                         stagger_intervention)
+from repro.control.log import ControlLog, ControlRecord
+from repro.control.loop import ControlLoop, watch_trace
+from repro.control.stream import ReplaySource, TelemetrySource, synthesize_ramp
+
+__all__ = [
+    "ControlDecision", "ControllerConfig", "GridController",
+    "DetectorFrame", "OnlineGoertzelDetector",
+    "Intervention", "InterventionLadder", "redesign_intervention",
+    "power_cap_intervention", "stagger_intervention",
+    "ControlLog", "ControlRecord",
+    "ControlLoop", "watch_trace",
+    "ReplaySource", "TelemetrySource", "synthesize_ramp",
+]

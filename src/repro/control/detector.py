@@ -1,0 +1,83 @@
+"""Online sliding-Goertzel detector: the offline monitor, run per tick.
+
+``OnlineGoertzelDetector`` wraps the ``sliding_bin_power`` carry API:
+each ``step(chunk)`` consumes one control tick of samples and advances
+the same modulated-prefix-sum state the Pallas kernel carries in VMEM
+scratch, so the amplitudes it reports are *bit-identical* to one offline
+``sliding_bin_power`` call on the concatenated trace (the parity test in
+``tests/test_control.py`` asserts this across uneven tick boundaries).
+On top of the raw amplitudes it maintains per-bin trend slopes over a
+short trailing horizon — the signal the controller's slope-based early
+warning projects forward to act *before* a breach.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels.goertzel.ops import sliding_bin_power, sliding_carry_init
+
+
+@dataclasses.dataclass
+class DetectorFrame:
+    """One tick of detector output, consumed by ``GridController``."""
+    tick: int
+    t_s: float                 # time of the tick's last sample
+    sample_idx: int            # global index of the tick's last sample
+    amps: np.ndarray           # [K] bin amplitudes at the last sample
+    slopes: np.ndarray         # [K] amplitude trend, W/s
+    tick_amps: np.ndarray      # [m, K] per-sample amplitudes of this tick
+    warm: bool                 # one full window has streamed
+
+
+class OnlineGoertzelDetector:
+    """Incremental per-bin amplitude monitor with trend estimation.
+
+    ``mean`` is the DC operating point removed before accumulation
+    (see ``sliding_carry_init``); ``slope_window_s`` bounds the trailing
+    horizon the per-bin slope is estimated over (endpoint difference of
+    tick-end amplitudes — cheap and robust for the controller's
+    project-forward early warning).
+    """
+
+    def __init__(self, dt: float, freqs: Sequence[float], *,
+                 window_s: float = 4.0, mean: float = 0.0,
+                 slope_window_s: Optional[float] = None):
+        self.dt = float(dt)
+        self.freqs = tuple(float(f) for f in freqs)
+        self.win = max(int(window_s / dt), 8)
+        self.carry = sliding_carry_init(self.dt, self.freqs, win=self.win,
+                                        mean=mean)
+        horizon = slope_window_s if slope_window_s is not None else window_s / 2
+        self._hist: Deque[Tuple[float, np.ndarray]] = collections.deque()
+        self._horizon_s = max(float(horizon), self.dt)
+        self._tick = 0
+
+    @property
+    def n_bins(self) -> int:
+        return len(self.freqs)
+
+    def step(self, chunk: np.ndarray) -> DetectorFrame:
+        amps, self.carry = sliding_bin_power(chunk, self.dt, self.freqs,
+                                             win=self.win, carry=self.carry)
+        last_idx = int(self.carry.offset) - 1
+        t_s = last_idx * self.dt
+        latest = amps[-1] if len(amps) else np.zeros(self.n_bins, np.float32)
+        self._hist.append((t_s, latest))
+        while (len(self._hist) > 2
+               and t_s - self._hist[0][0] > self._horizon_s):
+            self._hist.popleft()
+        t0, a0 = self._hist[0]
+        span = t_s - t0
+        slopes = ((latest - a0) / span if span > 0
+                  else np.zeros(self.n_bins, np.float32))
+        frame = DetectorFrame(tick=self._tick, t_s=t_s, sample_idx=last_idx,
+                              amps=np.asarray(latest, np.float32),
+                              slopes=np.asarray(slopes, np.float32),
+                              tick_amps=np.asarray(amps, np.float32),
+                              warm=last_idx >= self.win - 1)
+        self._tick += 1
+        return frame

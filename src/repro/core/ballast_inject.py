@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hardware import DEFAULT_HW, Hardware
 
@@ -52,3 +53,18 @@ def ballast_gflops_for_cell(cell: dict, hw: Hardware = DEFAULT_HW,
     t_comm = coll_bytes / (hw.chip.ici_bw_per_link * hw.chip.ici_links)
     t_exposed = t_comm * (1.0 - overlap)
     return floor_frac * hw.chip.peak_flops_bf16 * t_exposed / 1e9
+
+
+def ballast_gflops_for_floor(w, dt: float, floor_w: float, n_chips: int,
+                             hw: Hardware = DEFAULT_HW,
+                             burn_frac: float = 0.9) -> float:
+    """Size the ballast that holds an observed aggregate trace at a power
+    floor: total GFLOPs to burn the trough deficit (energy below
+    ``floor_w`` over the trace), converted at the chip's FLOP-per-joule
+    at TDP and derated by ``burn_frac`` (ballast GEMMs don't hit peak).
+    This is the control plane's power-cap rung: the cap clamps peaks,
+    this ballast fills the troughs so the clamp band holds from below."""
+    deficit_j = float(np.clip(floor_w - np.asarray(w, np.float64),
+                              0.0, None).sum() * dt)
+    flop_per_j = hw.chip.peak_flops_bf16 / hw.chip.tdp_w
+    return burn_frac * flop_per_j * deficit_j / 1e9

@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.core.smoothing.base import np_apply, register_mitigation
 from repro.core.smoothing.relax import sigmoid_gate
+from repro.core.telemetry import escalation_init, escalation_step, warmup_scale
 from repro.kernels.goertzel.ops import sliding_bin_power
 from repro.kernels.goertzel.ref import sliding_bin_power_jnp
 
@@ -95,25 +96,16 @@ class TelemetryBackstop:
         """One sample of the escalation state machine (shared by the
         post-hoc scan over a monitor's amplitude stream and the fused
         segment scan, whose trailing zero-pad samples ``i >= n`` must
-        not trigger)."""
-        level, above, below, detect = carry
-        # warm-up gate: no triggering off partial-window estimates
-        hit = (worst_i > self.amp_threshold_w) & (i >= win - 1) & (i < n)
-        above = jnp.where(hit, above + 1, 0)
-        below = jnp.where(hit, 0, below + 1)
-        esc = hit & (above >= sustain_n) & (level < 3)
-        detect = jnp.where(esc & (detect < 0), i, detect)
-        level = jnp.where(esc, level + 1, level)
-        above = jnp.where(esc, 0, above)
-        deesc = (~hit) & (below >= cool_n) & (level > 0)
-        level = jnp.where(deesc, level - 1, level)
-        below = jnp.where(deesc, 0, below)
-        return (level, above, below, detect), level
+        not trigger).  Delegates to the shared
+        ``core.telemetry.escalation_step`` so the backstop and the online
+        control-plane detector run identical gating."""
+        return escalation_step(carry, worst_i, i,
+                               threshold=self.amp_threshold_w, win=win, n=n,
+                               sustain_n=sustain_n, cool_n=cool_n)
 
     @staticmethod
     def _esc_init():
-        zero = jnp.asarray(0, jnp.int32)
-        return (zero, zero, zero, jnp.asarray(-1, jnp.int32))
+        return escalation_init()
 
     def _escalate(self, worst, *, win: int, sustain_n: int, cool_n: int):
         """Escalation levels from a fully-materialized amplitude stream
@@ -169,8 +161,7 @@ class TelemetryBackstop:
             idx = s * win + jnp.arange(win, dtype=jnp.int32)
             # warm-up ramp: partial windows renormalize to their true
             # sample count (matches ops.sliding_bin_power)
-            denom = jnp.minimum(idx.astype(jnp.float32) + 1.0, float(win))
-            worst = amps.max(axis=1) * (float(win) / denom)
+            worst = amps.max(axis=1) * warmup_scale(idx, win)
             esc2, levels = jax.lax.scan(
                 lambda c, wi: self._esc_step(c, wi[0], wi[1], win=win, n=n,
                                              sustain_n=sustain_n,

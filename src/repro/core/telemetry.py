@@ -3,15 +3,81 @@
 Datacenter GPUs expose instantaneous/averaged power at 1-100 ms minimum
 latency depending on counter reliability; the controllers consume this
 class so the latency/period trade-off is first-class in every simulation.
+
+This module also holds the *shared monitor gating* helpers — the warm-up
+denominator ramp (``warmup_scale``) and the sustain/cooldown escalation
+state machine (``escalation_init`` / ``escalation_step``) — extracted
+from the telemetry backstop so the offline monitor
+(``TelemetryBackstop``, ``kernels/goertzel/ops.sliding_bin_power``) and
+the online control-plane detector (``repro.control``) run the exact same
+gating math and cannot drift.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# shared monitor gating: warm-up ramp + escalation state machine
+# ---------------------------------------------------------------------------
+
+def warmup_scale(idx, win: int) -> jnp.ndarray:
+    """The sliding monitor's warm-up renormalization ``win / min(i+1, win)``.
+
+    The kernel normalizes every output by ``2/win``; outputs before one
+    full window has streamed (``i < win - 1``) are partial-window
+    estimates and rescale to their true sample count.  ``idx`` is the
+    global sample index (any integer/float dtype); shared by the offline
+    ``sliding_bin_power`` paths and the online chunked detector so the
+    two ramps are bit-identical.
+    """
+    denom = jnp.minimum(jnp.asarray(idx, jnp.float32) + 1.0, float(win))
+    return float(win) / denom
+
+
+def escalation_init() -> Tuple[jnp.ndarray, ...]:
+    """Initial ``(level, above, below, detect)`` escalation carry."""
+    zero = jnp.asarray(0, jnp.int32)
+    return (zero, zero, zero, jnp.asarray(-1, jnp.int32))
+
+
+def escalation_step(carry, amp, idx, *, threshold, win: int, n: int,
+                    sustain_n: int, cool_n: int, max_level: int = 3,
+                    release=None):
+    """One step of the threshold-with-hysteresis escalation state machine.
+
+    ``carry`` is ``(level, above, below, detect)`` from
+    ``escalation_init``; ``amp`` the monitored amplitude at global sample
+    index ``idx``.  Triggering is warm-up gated (no escalation off
+    partial-window estimates, ``idx >= win - 1``) and pad-gated
+    (``idx < n``).  ``amp > threshold`` sustained for ``sustain_n`` steps
+    escalates one level (up to ``max_level``); staying at or below
+    ``release`` (default: ``threshold`` — the backstop's exact historical
+    behavior) for ``cool_n`` steps de-escalates one level.  ``detect``
+    latches the first escalation index.  Pure jnp, so it runs identically
+    inside the backstop's ``lax.scan`` and eagerly in the control plane's
+    per-tick loop.
+    """
+    level, above, below, detect = carry
+    live = (idx >= win - 1) & (idx < n)
+    hit = (amp > threshold) & live
+    rel = threshold if release is None else release
+    clear = ~((amp > rel) & live)
+    above = jnp.where(hit, above + 1, 0)
+    below = jnp.where(clear, below + 1, 0)
+    esc = hit & (above >= sustain_n) & (level < max_level)
+    detect = jnp.where(esc & (detect < 0), idx, detect)
+    level = jnp.where(esc, level + 1, level)
+    above = jnp.where(esc, 0, above)
+    deesc = clear & (below >= cool_n) & (level > 0)
+    level = jnp.where(deesc, level - 1, level)
+    below = jnp.where(deesc, 0, below)
+    return (level, above, below, detect), level
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,11 +2,17 @@
 
 ``bin_power`` — non-overlapping windows (coarse streaming granularity).
 ``sliding_bin_power`` — every-sample sliding window on the streaming
-Pallas kernel: the telemetry backstop's product hot path.
+Pallas kernel: the telemetry backstop's product hot path.  Pass
+``carry=`` (from ``sliding_carry_init``) to run the same monitor
+*incrementally* over a chunked stream: the call consumes one chunk,
+returns ``(amps, carry')``, and the concatenated chunked outputs are
+bit-identical to one offline call on the concatenated trace — the
+control plane's online detector is built on this.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,24 +58,29 @@ def bin_power(x: jax.Array, dt: float, freqs: jax.Array, *, win: int,
     return out[:W] * (float(win) / counts)[:, None]
 
 
+@functools.lru_cache(maxsize=None)
+def _phase_tables(freqs: Tuple[float, ...], dt: float, win: int):
+    """Host-float64 sliding-Goertzel phase tables, shared by the offline
+    full-trace path and the online carry path so both consume bitwise
+    identical [win, K] cos/sin operands and the [2, K] segment rotation.
+    Returned as host numpy (jnp.asarray at the use site) so the cache
+    never captures jit-trace constants."""
+    omega = 2.0 * np.pi * np.asarray(freqs, np.float64) * dt
+    p = np.arange(win, dtype=np.float64)[:, None]
+    cosp = np.cos(omega[None, :] * p).astype(np.float32)
+    sinp = np.sin(omega[None, :] * p).astype(np.float32)
+    rot = np.stack([np.cos(omega * win),
+                    np.sin(omega * win)]).astype(np.float32)
+    return cosp, sinp, rot
+
+
 @functools.partial(jax.jit,
                    static_argnames=("dt", "freqs", "win", "block_s",
                                     "interpret"))
-def sliding_bin_power(x: jax.Array, dt: float, freqs, *, win: int,
-                      block_s: int = 0,
-                      interpret: bool = False) -> jax.Array:
-    """x: [n] power samples -> [n, K] every-sample sliding-window bin
-    amplitudes via the streaming Pallas kernel (``freqs`` must be a
-    hashable static sequence of Hz; ``dt``/``win`` static).
-
-    Semantics match the corrected float64 oracle
-    (``ref.sliding_bin_power_ref``): the trace mean is removed before
-    accumulation — see ``ref.py`` for the numerics rationale — and the
-    first ``win - 1`` outputs are partial-window estimates normalized by
-    the true sample count.  The phase tables are built in float64 on the
-    host, so bin phases stay exact at any trace length.  ``block_s=0``
-    picks a segment block size automatically.
-    """
+def _sliding_bin_power_full(x: jax.Array, dt: float, freqs, *, win: int,
+                            block_s: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """Whole-trace sliding monitor (see ``sliding_bin_power``)."""
     x = jnp.asarray(x, jnp.float32)
     n = x.shape[0]
     xc = x - jnp.mean(x)
@@ -84,16 +95,160 @@ def sliding_bin_power(x: jax.Array, dt: float, freqs, *, win: int,
         xc = jnp.concatenate([xc, jnp.zeros((pad_n,), jnp.float32)])
     xseg = xc.reshape(S_pad, win)
 
-    omega = 2.0 * np.pi * np.asarray(freqs, np.float64) * dt
-    p = np.arange(win, dtype=np.float64)[:, None]
-    cosp = jnp.asarray(np.cos(omega[None, :] * p), jnp.float32)
-    sinp = jnp.asarray(np.sin(omega[None, :] * p), jnp.float32)
-    rot = jnp.asarray(np.stack([np.cos(omega * win), np.sin(omega * win)]),
-                      jnp.float32)
+    cosp, sinp, rot = (jnp.asarray(t) for t in
+                       _phase_tables(tuple(freqs), dt, win))
     out = sliding_goertzel_pallas(xseg, cosp, sinp, rot, block_s=block_s,
                                   interpret=interpret)
     out = out.reshape(S_pad * win, -1)[:n]
     # warm-up ramp: the kernel normalizes every output by 2/win; partial
     # windows (i < win-1) renormalize to their true sample count
-    denom = jnp.minimum(jnp.arange(n, dtype=jnp.float32) + 1.0, float(win))
-    return out * (float(win) / denom)[:, None]
+    from repro.core.telemetry import warmup_scale  # lazy: avoids import cycle
+    idx = jnp.arange(n, dtype=jnp.float32)
+    return out * warmup_scale(idx, win)[:, None]
+
+
+class SlidingCarry(NamedTuple):
+    """Explicit cross-chunk state of the sliding-Goertzel monitor.
+
+    ``seg`` is the *window residue*: the current (mean-removed,
+    zero-padded) window-sized segment buffer with ``fill`` valid samples;
+    ``prev_re``/``prev_im`` are the *rotation-phase state*: the previous
+    segment's modulated prefix tables ([win, K]) that the kernel carries
+    in VMEM scratch across grid cells.  ``offset`` counts samples already
+    emitted (global index of the next sample); ``mean`` is the DC
+    operating point removed from every sample — pass the trace mean for
+    offline parity, the known fleet operating point for live streams.
+    Treat as opaque: build with ``sliding_carry_init``, thread through
+    ``sliding_bin_power(..., carry=)``.
+    """
+    offset: int
+    fill: int
+    seg: jax.Array        # [win] f32
+    prev_re: jax.Array    # [win, K] f32
+    prev_im: jax.Array    # [win, K] f32
+    mean: float
+
+
+def sliding_carry_init(dt: float, freqs, *, win: int,
+                       mean: float = 0.0) -> SlidingCarry:
+    """Fresh monitor state for chunked ``sliding_bin_power`` calls.
+
+    ``mean`` is the DC level subtracted from every incoming sample.  For
+    bit-parity with the offline path on a known trace, pass
+    ``float(trace_mean(x_full))``; for live streams, the fleet's known
+    operating point (the monitor's AC amplitudes are insensitive to
+    small DC error — it shifts only the near-DC bins).
+    """
+    K = len(tuple(freqs))
+    zeros = jnp.zeros((win, K), jnp.float32)
+    return SlidingCarry(offset=0, fill=0,
+                        seg=jnp.zeros((win,), jnp.float32),
+                        prev_re=zeros, prev_im=zeros,
+                        mean=float(np.float32(mean)))
+
+
+@jax.jit
+def trace_mean(x: jax.Array) -> jax.Array:
+    """f32 mean of a trace, computed exactly as the offline monitor's
+    in-graph ``jnp.mean`` — use for ``sliding_carry_init(mean=...)``
+    when chunked output must match the offline call bitwise."""
+    return jnp.mean(jnp.asarray(x, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("win",))
+def _sliding_seg(seg, prev_re, prev_im, cosp, sinp, rot, start, *, win: int):
+    """One segment of the sliding monitor — the jitted jnp mirror of
+    ``_sliding_kernel`` at ``block_s=1``.  Must stay jitted: XLA's fused
+    (FMA-contracted) evaluation of this exact op graph is what the
+    interpret-mode Pallas kernel lowers to; an eager evaluation differs
+    by 1 ulp.  Returns (scaled [win, K] amplitudes, new prefix tables).
+    """
+    x = seg[None]                                            # [1, win]
+    pr = jnp.cumsum(x[:, :, None] * cosp[None], axis=1)      # [1, win, K]
+    pi = jnp.cumsum(x[:, :, None] * (-sinp[None]), axis=1)
+    prev_r = jnp.concatenate([prev_re[None], pr[:-1]], axis=0)
+    prev_i = jnp.concatenate([prev_im[None], pi[:-1]], axis=0)
+    dr = prev_r[:, -1:, :] - prev_r
+    di = prev_i[:, -1:, :] - prev_i
+    rr = rot[0:1, :]
+    ri = rot[1:2, :]
+    mr = pr + rr[None] * dr - ri[None] * di
+    mi = pi + rr[None] * di + ri[None] * dr
+    out = (2.0 / win) * jnp.sqrt(mr * mr + mi * mi)          # [1, win, K]
+    from repro.core.telemetry import warmup_scale  # lazy: avoids import cycle
+    idx = start + jnp.arange(win, dtype=jnp.float32)
+    return out[0] * warmup_scale(idx, win)[:, None], pr[-1], pi[-1]
+
+
+def _sliding_bin_power_carry(x, dt: float, freqs, *, win: int,
+                             carry: SlidingCarry):
+    """Consume one concrete chunk, emitting its [m, K] amplitudes and the
+    advanced carry.  A partial segment is recomputed on its zero-padded
+    window buffer each call (cumsum prefixes at index b are unaffected by
+    the zero tail), and only the newly-valid rows are emitted — so uneven
+    tick sizes, ticks smaller than one window, and a final partial tick
+    all reproduce the offline output bitwise."""
+    cosp, sinp, rot = (jnp.asarray(t) for t in
+                       _phase_tables(tuple(freqs), dt, win))
+    K = cosp.shape[1]
+    xc = np.asarray(x, np.float32) - np.float32(carry.mean)
+    m = xc.shape[0]
+    offset, fill = carry.offset, carry.fill
+    seg = np.asarray(carry.seg)
+    prev_re, prev_im = carry.prev_re, carry.prev_im
+    outs = []
+    pos = 0
+    while pos < m:
+        take = min(win - fill, m - pos)
+        if take:
+            seg = seg.copy()
+            seg[fill:fill + take] = xc[pos:pos + take]
+        new_fill = fill + take
+        start = offset - fill                 # global index of seg row 0
+        out, pr, pi = _sliding_seg(jnp.asarray(seg), prev_re, prev_im,
+                                   cosp, sinp, rot, jnp.float32(start),
+                                   win=win)
+        outs.append(np.asarray(out[fill:new_fill]))
+        if new_fill == win:                   # segment complete: hop
+            prev_re, prev_im = pr, pi
+            seg = np.zeros((win,), np.float32)
+            fill = 0
+        else:
+            fill = new_fill
+        offset += take
+        pos += take
+    amps = (np.concatenate(outs, axis=0) if outs
+            else np.zeros((0, K), np.float32))
+    new_carry = SlidingCarry(offset=offset, fill=fill,
+                             seg=jnp.asarray(seg),
+                             prev_re=prev_re, prev_im=prev_im,
+                             mean=carry.mean)
+    return amps, new_carry
+
+
+def sliding_bin_power(x, dt: float, freqs, *, win: int, block_s: int = 0,
+                      interpret: bool = False, carry: SlidingCarry = None):
+    """x: [n] power samples -> [n, K] every-sample sliding-window bin
+    amplitudes via the streaming Pallas kernel (``freqs`` must be a
+    hashable static sequence of Hz; ``dt``/``win`` static).
+
+    Semantics match the corrected float64 oracle
+    (``ref.sliding_bin_power_ref``): the trace mean is removed before
+    accumulation — see ``ref.py`` for the numerics rationale — and the
+    first ``win - 1`` outputs are partial-window estimates normalized by
+    the true sample count.  The phase tables are built in float64 on the
+    host, so bin phases stay exact at any trace length.  ``block_s=0``
+    picks a segment block size automatically.
+
+    With ``carry=`` (a ``SlidingCarry`` from ``sliding_carry_init``), x
+    is one *chunk* of a longer stream: the call returns
+    ``(amps [len(x), K], carry')`` instead, resuming mid-window from the
+    carried residue/rotation state rather than re-priming — chunked
+    outputs concatenate bit-identically to one offline call on the
+    concatenated trace (given ``mean=trace_mean(full)``).  The carry
+    path requires concrete (non-traced) input.
+    """
+    if carry is None:
+        return _sliding_bin_power_full(x, dt, tuple(freqs), win=win,
+                                       block_s=block_s, interpret=interpret)
+    return _sliding_bin_power_carry(x, dt, tuple(freqs), win=win, carry=carry)

@@ -45,10 +45,19 @@ dicts — so resident memory is independent of how many scenarios a
 query's catalog expands to.
 
 ``handle`` / ``handle_many`` are the JSON boundary (dict in, JSON-safe
-dict out) a service framework would mount; the module is also a CLI:
+dict out) a service framework would mount; the module is also a CLI
+(installed as ``repro-serve``):
 
   PYTHONPATH=src python -m repro.serve.power \
       --period-s 2.0 --comm-frac 0.25 --n-chips 512 --spec moderate
+
+``watch()`` / ``repro-serve watch`` is the grid-interactive entry: it
+closes the ``repro.control`` loop over a replayed (or synthesized)
+telemetry stream — online sliding-Goertzel detection, hysteresis + slope
+early-warning policy, and intervention dispatch through the same
+warm-started design path the query fallback uses:
+
+  PYTHONPATH=src python -m repro.serve.power watch --replay ramp --timeline
 """
 from __future__ import annotations
 
@@ -481,6 +490,59 @@ class PowerComplianceService:
             "designed": designed,
         }
 
+    # -- the control plane --------------------------------------------------
+
+    def watch(self, workload: Optional[IterationTimeline] = None,
+              n_chips: int = 512,
+              spec: Union[str, UtilitySpec] = "moderate", *,
+              replay=None, dt: Optional[float] = None,
+              freqs: Optional[Sequence[float]] = None,
+              tick_s: float = 0.5, window_s: float = 4.0,
+              breach_w: Optional[float] = None, trigger_frac: float = 0.85,
+              release_frac: float = 0.60, lead_s: float = 2.0,
+              sustain_ticks: int = 2, release_ticks: int = 4,
+              dispatch_ticks: int = 1, history_s: float = 8.0,
+              max_ticks: Optional[int] = None) -> Dict:
+        """Close the grid-interactive control loop over one stream.
+
+        ``replay`` is a power trace (array-like, sampled at ``dt``,
+        default the service's waveform dt); without it the stream is the
+        service's own synthesized fleet waveform for ``workload`` —
+        i.e. "watch this job's telemetry".  The loop runs the online
+        sliding-Goertzel detector (bit-identical to the offline
+        monitor), the per-bin hysteresis + slope-early-warning
+        controller, and the intervention ladder whose first rung is this
+        service's design path (``design_method``/``warmstart``).
+        Returns a JSON-safe dict: loop config + the full ``ControlLog``
+        (records, per-tick series, summary with latency percentiles).
+        """
+        from repro.control import watch_trace
+        dt = float(dt if dt is not None else self.wave_cfg.dt)
+        if replay is not None:
+            import numpy as np
+            w = np.asarray(replay, np.float32)
+        else:
+            if workload is None:
+                raise ValueError("watch() needs a workload or a replay=")
+            w = self._fleet_state(workload, n_chips)["w"]
+        if isinstance(spec, str):
+            spec = example_specs(job_mw=float(w.mean()) / 1e6)[spec]
+        method = (self.design_method if self.design_method != "warmstart"
+                  else "warmstart")
+        log = watch_trace(
+            w, dt, spec=spec, n_chips=int(n_chips), freqs=freqs,
+            window_s=window_s, tick_s=tick_s, breach_w=breach_w,
+            trigger_frac=trigger_frac, release_frac=release_frac,
+            lead_s=lead_s, sustain_ticks=sustain_ticks,
+            release_ticks=release_ticks, dispatch_ticks=dispatch_ticks,
+            design_method=method, warmstart=self.warmstart, hw=self.hw,
+            history_s=history_s, max_ticks=max_ticks)
+        out = {"spec": spec.name, "n_chips": int(n_chips), "dt": dt,
+               "tick_s": tick_s, "window_s": window_s,
+               "design_method": method, "timeline": log.timeline()}
+        out.update(log.to_json())
+        return json.loads(json.dumps(out, default=float))
+
     # -- JSON boundary ------------------------------------------------------
 
     def _parse_workload(self, wl) -> Tuple[IterationTimeline, str]:
@@ -544,9 +606,64 @@ class PowerComplianceService:
         return out
 
 
-def main(argv: Optional[Sequence[str]] = None) -> None:
+def _load_replay(arg: str, dt: float):
+    """--replay operand: 'ramp' (the canonical synthesized 9 Hz
+    amplitude-ramp trace), a .npy array, or a JSON list of watts."""
+    import numpy as np
+    if arg == "ramp":
+        from repro.control import synthesize_ramp
+        return synthesize_ramp(dt=dt)
+    if arg.endswith(".npy"):
+        return np.load(arg).astype(np.float32)
+    with open(arg) as f:
+        return np.asarray(json.load(f), np.float32)
+
+
+def _watch_main(argv: Sequence[str]) -> None:
     ap = argparse.ArgumentParser(
-        description="power-spec compliance query (Study API serve path)")
+        prog="repro-serve watch",
+        description="grid-interactive control loop over a replayed stream")
+    ap.add_argument("--replay", default="ramp",
+                    help="'ramp' | trace.npy | trace.json (watts)")
+    ap.add_argument("--dt", type=float, default=0.002)
+    ap.add_argument("--tick-s", type=float, default=0.5)
+    ap.add_argument("--window-s", type=float, default=4.0)
+    ap.add_argument("--n-chips", type=int, default=512)
+    ap.add_argument("--spec", default="moderate",
+                    choices=("lenient", "moderate", "tight"))
+    ap.add_argument("--design-method", default="grid",
+                    choices=("grid", "gradient", "hybrid", "warmstart"))
+    ap.add_argument("--warmstart", default=None,
+                    help="WarmStartPredictor checkpoint directory")
+    ap.add_argument("--dispatch-ticks", type=int, default=1)
+    ap.add_argument("--max-ticks", type=int, default=None)
+    ap.add_argument("--timeline", action="store_true",
+                    help="print the decision timeline instead of JSON")
+    args = ap.parse_args(argv)
+
+    service = PowerComplianceService(design_method=args.design_method,
+                                     warmstart=args.warmstart)
+    answer = service.watch(
+        n_chips=args.n_chips, spec=args.spec,
+        replay=_load_replay(args.replay, args.dt), dt=args.dt,
+        tick_s=args.tick_s, window_s=args.window_s,
+        dispatch_ticks=args.dispatch_ticks, max_ticks=args.max_ticks)
+    if args.timeline:
+        print(answer["timeline"])
+        print(json.dumps(answer["summary"], indent=2))
+    else:
+        answer.pop("timeline", None)
+        print(json.dumps(answer, indent=2))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "watch":
+        return _watch_main(argv[1:])
+    ap = argparse.ArgumentParser(
+        description="power-spec compliance query (Study API serve path); "
+                    "subcommand 'watch' runs the grid-interactive control "
+                    "loop over a replayed stream")
     ap.add_argument("--period-s", type=float, default=2.0)
     ap.add_argument("--comm-frac", type=float, default=0.25)
     ap.add_argument("--moe-notch", action="store_true")

@@ -1,0 +1,265 @@
+"""Grid-interactive control plane: online parity + closed-loop acceptance.
+
+Two pillars:
+
+* The online incremental detector (``sliding_bin_power`` carry API via
+  ``ReplaySource`` + ``OnlineGoertzelDetector``) is *bit-identical* to
+  one offline ``sliding_bin_power`` call on the concatenated trace,
+  across uneven tick boundaries (ticks smaller than one window, a final
+  partial tick).
+* The closed loop on the canonical 9 Hz amplitude-ramp trace: the
+  controller detects the trend before the (counterfactual) breach,
+  dispatches a warm-started mitigation within the tick budget, and the
+  post-intervention amplitude recedes below the release-hysteresis
+  level.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import control
+from repro.core.spec import example_specs
+from repro.core.telemetry import escalation_init, escalation_step
+from repro.kernels.goertzel.ops import (sliding_bin_power,
+                                        sliding_carry_init, trace_mean)
+
+DT = 0.002
+FREQS = (0.5, 1.0, 2.0, 9.0)
+
+
+def _noisy_ramp(n=9000, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n) * DT
+    return (5e8 + 4e7 * np.sin(2 * np.pi * 9.0 * t) * np.clip(t / 10, 0, 1)
+            + 1e5 * rng.normal(size=n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# online == offline parity
+# ---------------------------------------------------------------------------
+
+class TestOnlineOfflineParity:
+    def test_carry_api_uneven_chunks_bit_identical(self):
+        x = _noisy_ramp()
+        win = 2000
+        off = np.asarray(sliding_bin_power(x, DT, FREQS, win=win,
+                                           interpret=True))
+        carry = sliding_carry_init(DT, FREQS, win=win,
+                                   mean=float(trace_mean(x)))
+        # ticks smaller than one window, window-crossing, and a final
+        # partial tick (sums to 9000 = len(x))
+        sizes = [7, 250, 1999, 2000, 3, 1211, 777, 2000, 753]
+        assert sum(sizes) == len(x) and sizes[-1] < win
+        outs = []
+        pos = 0
+        for s in sizes:
+            amps, carry = sliding_bin_power(x[pos:pos + s], DT, FREQS,
+                                            win=win, carry=carry)
+            assert amps.shape == (s, len(FREQS))
+            outs.append(amps)
+            pos += s
+        on = np.concatenate(outs, axis=0)
+        assert on.shape == off.shape
+        assert (on == off).all()
+
+    def test_replay_source_detector_parity(self):
+        """The satellite's exact shape: a trace through ReplaySource in
+        uneven ticks, detector amplitudes bit-identical to offline."""
+        x = _noisy_ramp(seed=3)
+        win = 2000
+        sizes = [900, 37, 2048, 1500, 1, 2000]   # remainder: default tick
+        src = control.ReplaySource(x, DT, tick_s=0.5, tick_sizes=sizes)
+        det = control.OnlineGoertzelDetector(DT, FREQS, window_s=win * DT,
+                                             mean=float(trace_mean(x)))
+        assert det.win == win
+        outs = []
+        while (chunk := src.next_tick()) is not None:
+            outs.append(det.step(chunk).tick_amps)
+        on = np.concatenate(outs, axis=0)
+        off = np.asarray(sliding_bin_power(x, DT, FREQS, win=win,
+                                           interpret=True))
+        assert on.shape == off.shape
+        assert (on == off).all()
+
+    def test_carry_resumes_mid_window(self):
+        """Chunked ticks never re-prime: the first output after a tick
+        boundary mid-window uses the carried residue, not a fresh one."""
+        x = _noisy_ramp(n=5000, seed=1)
+        win = 2000
+        carry = sliding_carry_init(DT, FREQS, win=win,
+                                   mean=float(trace_mean(x)))
+        a1, carry = sliding_bin_power(x[:500], DT, FREQS, win=win,
+                                      carry=carry)
+        assert int(carry.offset) == 500 and int(carry.fill) == 500
+        a2, carry = sliding_bin_power(x[500:], DT, FREQS, win=win,
+                                      carry=carry)
+        assert int(carry.offset) == 5000
+        off = np.asarray(sliding_bin_power(x, DT, FREQS, win=win,
+                                           interpret=True))
+        assert (np.concatenate([a1, a2]) == off).all()
+
+
+# ---------------------------------------------------------------------------
+# shared escalation gating
+# ---------------------------------------------------------------------------
+
+class TestSharedEscalation:
+    def _run(self, amps, **kw):
+        carry = escalation_init()
+        levels = []
+        for i, a in enumerate(amps):
+            carry, lvl = escalation_step(carry, jnp.float32(a),
+                                         jnp.int32(i), **kw)
+            levels.append(int(lvl))
+        return levels
+
+    def test_warmup_gate_blocks_early_triggers(self):
+        kw = dict(threshold=1.0, win=4, n=100, sustain_n=1, cool_n=2)
+        levels = self._run([5.0, 5.0, 5.0, 5.0, 5.0], **kw)
+        # no escalation until i >= win-1 = 3
+        assert levels[:3] == [0, 0, 0] and levels[3] >= 1
+
+    def test_hysteresis_band_holds_level(self):
+        """Between release and trigger the level must neither escalate
+        nor release — the new hysteresis generalization."""
+        kw = dict(threshold=1.0, win=1, n=100, sustain_n=1, cool_n=2,
+                  release=0.5)
+        amps = [2.0] + [0.7] * 10        # escalate, then sit in the band
+        levels = self._run(amps, **kw)
+        assert levels[0] == 1 and all(l == 1 for l in levels[1:])
+        # below the release level it unwinds after cool_n
+        levels = self._run([2.0, 0.4, 0.4, 0.4], **kw)
+        assert levels[-1] == 0
+
+    def test_default_release_matches_backstop_semantics(self):
+        """release=None == the backstop's historical exact-threshold
+        clear condition (the refactor must not drift)."""
+        kw = dict(threshold=1.0, win=1, n=100, sustain_n=2, cool_n=2)
+        amps = [2.0, 2.0, 0.9, 0.9, 2.0, 2.0, 2.0, 2.0]
+        a = self._run(amps, **kw)
+        b = self._run(amps, release=1.0, **kw)
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# interventions
+# ---------------------------------------------------------------------------
+
+class TestInterventions:
+    def test_stagger_nulls_target_bin(self):
+        t = np.arange(20000) * DT
+        w = (5e8 + 5e7 * np.sin(2 * np.pi * 9.0 * t)).astype(np.float32)
+        iv = control.stagger_intervention(9.0, DT, n_groups=4)
+        assert iv.params["comb_attenuation"] < 1e-10
+        out = iv.transform(w, DT)
+        amp = np.asarray(sliding_bin_power(out, DT, (9.0,), win=2000,
+                                           interpret=True))[-1, 0]
+        assert amp < 5e7 * 0.02          # > 50x attenuation at the bin
+
+    def test_power_cap_bounds_amplitude(self):
+        t = np.arange(20000) * DT
+        w = (5e8 + 5e7 * np.sin(2 * np.pi * 9.0 * t)).astype(np.float32)
+        release = 3e7
+        iv = control.power_cap_intervention(w, DT, release_amp_w=release,
+                                            n_chips=512)
+        out = iv.transform(w, DT)
+        assert out.max() <= iv.params["cap_w"] + 1
+        assert out.min() >= iv.params["floor_w"] - 1
+        assert iv.params["ballast_gflops"] > 0
+        amp = np.asarray(sliding_bin_power(out, DT, (9.0,), win=2000,
+                                           interpret=True))[-1, 0]
+        assert amp < release             # square-wave residual < release
+
+    def test_replay_source_closed_loop_physics(self):
+        """Interventions act on the future only, compose over the
+        pristine raw trace, and release restores it."""
+        w = np.arange(100, dtype=np.float32) + 100.0
+        src = control.ReplaySource(w, DT, tick_s=10 * DT)   # 10-sample ticks
+        first = src.next_tick()
+        assert (first == w[:10]).all()
+        iv = control.Intervention(
+            name="halve", params={},
+            transform=lambda f, dt: (f * 0.5).astype(np.float32))
+        src.apply_interventions([iv])
+        second = src.next_tick()
+        assert (second == w[10:20] * 0.5).all()       # future transformed
+        assert (src.observed()[:10] == w[:10]).all()  # past untouched
+        src.apply_interventions([])                   # release
+        third = src.next_tick()
+        assert (third == w[20:30]).all()              # raw restored
+
+
+# ---------------------------------------------------------------------------
+# the closed loop (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ramp_logs():
+    """Cold + warm closed-loop runs on the canonical 9 Hz ramp (the warm
+    run measures post-compilation dispatch latency)."""
+    spec = example_specs(job_mw=500.0)["moderate"]
+    w = control.synthesize_ramp(dt=DT)
+    cold = control.watch_trace(w, DT, spec=spec, n_chips=512)
+    warm = control.watch_trace(w, DT, spec=spec, n_chips=512)
+    return cold, warm
+
+
+class TestClosedLoop:
+    def test_detects_before_breach(self, ramp_logs):
+        cold, _ = ramp_logs
+        s = cold.summary()
+        assert s["first_escalate_t_s"] is not None
+        # the controller acted before the uncontrolled trace would have
+        # crossed the spec's breach amplitude
+        assert s["counterfactual_breach_t_s"] is not None
+        assert s["detection_lead_s"] > 0
+        # and the controlled trace never actually breached
+        assert s["breach_t_s"] is None or \
+            s["breach_t_s"] >= s["first_escalate_t_s"]
+
+    def test_dispatch_within_tick_budget(self, ramp_logs):
+        cold, _ = ramp_logs
+        esc = cold.first("escalate")
+        disp = cold.first("dispatch:")
+        assert disp is not None
+        # dispatch_ticks=1: applied at the end of the deciding tick
+        assert disp.tick == esc.tick
+
+    def test_warm_dispatch_under_one_second(self, ramp_logs):
+        _, warm = ramp_logs
+        lats = warm.dispatch_latencies()
+        assert lats, "warm run dispatched no interventions"
+        assert max(lats) < 1.0
+
+    def test_amplitude_recedes_below_release(self, ramp_logs):
+        cold, _ = ramp_logs
+        s = cold.summary()
+        assert s["n_dispatches"] >= 1
+        assert s["recession_t_s"] is not None
+        # the recession row is genuinely below the release-hysteresis level
+        row = next(r for r in cold.series
+                   if r["t_s"] == s["recession_t_s"])
+        assert max(row["amps_w"]) < cold.release_w < cold.trigger_w
+
+    def test_log_is_json_safe(self, ramp_logs):
+        cold, _ = ramp_logs
+        import json
+        blob = json.loads(cold.dumps())
+        assert blob["summary"]["n_dispatches"] >= 1
+        assert len(blob["series"]) == len(cold.series)
+        assert "tick" in cold.timeline().splitlines()[0]
+
+
+class TestServeWatch:
+    def test_service_watch_replay(self):
+        from repro.serve.power import PowerComplianceService
+        service = PowerComplianceService(design_method="grid")
+        w = control.synthesize_ramp(duration_s=24.0, ramp_start_s=4.0,
+                                    ramp_end_s=16.0, dt=DT)
+        out = service.watch(replay=w, dt=DT, n_chips=512, spec="moderate")
+        assert out["spec"] == "moderate"
+        assert out["summary"]["n_ticks"] > 0
+        assert isinstance(out["timeline"], str)
+        # JSON-safe end to end
+        import json
+        json.dumps(out)
