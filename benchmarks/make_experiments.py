@@ -350,8 +350,15 @@ def serve_section():
             "jaxpr-exact FLOPs/bytes of the sliding-Goertzel monitor, the "
             "fingerprint extractor, the warm-start MLP, and the ballast "
             "tile against recorded budgets (deterministic counts; a "
-            "breach fails CI) and merges them into `BENCH_kernels.json` "
-            "under `per_kernel`.")
+            "breach fails CI), pins each path's exact jaxpr primitive "
+            "histogram (a fusion regression fails with a named "
+            "per-primitive diff), and merges both into "
+            "`BENCH_kernels.json` (`per_kernel`, "
+            "`per_kernel_primitives`). The `repro-lint` recompile gate "
+            "(`--tiers recompile`) re-runs the monitor and the batched "
+            "engine in the same shape bucket and fails CI if any "
+            "tracked jit cache grows — the serve path's compiled-reuse "
+            "guarantee, enforced fleet-wide rather than per-test.")
     return "\n".join(lines)
 
 

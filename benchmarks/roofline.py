@@ -46,6 +46,29 @@ KERNEL_BUDGETS = {
     "ballast": {"max_flops": 10.4e9, "max_bytes": 103.2e6},
 }
 
+# pinned jaxpr primitive histograms (repro.analysis Tier-2 registry,
+# inner scan/cond/pallas bodies included).  FLOPs/bytes budgets have
+# headroom, so a fusion regression that swaps cheap primitives for a
+# materializing pattern can hide under them — the exact primitive mix
+# cannot drift silently: any change fails with a named per-primitive
+# diff.  The ballast burner has no Tier-2 entry (its geometry is gated
+# by the Tier-3 kernel checks); it stays FLOPs/bytes-only here.
+KERNEL_PRIMITIVES = {
+    "sliding_goertzel": ("kernels.sliding_bin_power", {
+        "add": 11, "broadcast_in_dim": 14, "concatenate": 3, "cond": 1,
+        "convert_element_type": 1, "cumsum": 2, "device_put": 3, "div": 2,
+        "dynamic_slice": 2, "eq": 1, "get": 7, "iota": 1, "lt": 6, "min": 1,
+        "mul": 10, "neg": 1, "pallas_call": 1, "pjit": 3, "program_id": 1,
+        "reduce_sum": 1, "reshape": 2, "select_n": 6, "slice": 5, "sqrt": 1,
+        "squeeze": 2, "sub": 4, "swap": 5}),
+    "goertzel_fingerprint": ("serve.fingerprint", {
+        "add": 1, "div": 2, "dot_general": 2, "mul": 3, "reduce_sum": 1,
+        "sqrt": 1, "sub": 1}),
+    "warmstart_mlp": ("serve.warmstart_mlp", {
+        "add": 3, "broadcast_in_dim": 1, "concatenate": 1, "dot_general": 4,
+        "integer_pow": 1, "mul": 4, "tanh": 1}),
+}
+
 SUGGEST = {
     "compute": ("cut non-useful FLOPs: triangular-chunk attention schedule, "
                 "remat policy 'dots' instead of 'full'"),
@@ -133,9 +156,34 @@ def kernel_costs() -> Dict[str, Dict[str, float]]:
     return costs
 
 
+def check_primitives() -> Dict[str, Dict[str, int]]:
+    """Assert the registered hot paths' jaxpr primitive mixes match the
+    pinned histograms; a mismatch fails with a named primitive diff."""
+    from repro.analysis.jaxpr_checks import primitive_counts, primitive_diff
+    from repro.analysis.registry import ENTRY_BY_NAME
+
+    got_all: Dict[str, Dict[str, int]] = {}
+    failures = []
+    for name, (entry, expected) in KERNEL_PRIMITIVES.items():
+        got = dict(primitive_counts(ENTRY_BY_NAME[entry]))
+        got_all[name] = dict(sorted(got.items()))
+        diff = primitive_diff(expected, got)
+        if diff:
+            failures.append(f"{name} ({entry}):\n    " + "\n    ".join(diff))
+        emit(f"roofline/prims_{name}", 0.0, {
+            "primitives": sum(got.values()), "distinct": len(got),
+            "drift": len(diff)})
+    assert not failures, (
+        "hot-path primitive-mix regression (fusion structure changed; "
+        "re-pin KERNEL_PRIMITIVES only if the change is intentional):\n  "
+        + "\n  ".join(failures))
+    return got_all
+
+
 def check_kernels() -> None:
-    """Derive the hot-kernel costs, gate them against the budgets (a
-    breach fails CI), and merge into BENCH_kernels.json."""
+    """Derive the hot-kernel costs, gate them against the budgets and the
+    pinned primitive mixes (a breach fails CI), merge into
+    BENCH_kernels.json."""
     costs = kernel_costs()
     failures = []
     for name, c in costs.items():
@@ -151,16 +199,19 @@ def check_kernels() -> None:
             "intensity": c["intensity_flops_per_byte"]})
     assert not failures, "hot-path cost regression:\n  " + \
         "\n  ".join(failures)
+    prims = check_primitives()
 
     merged: Dict = {}
     if os.path.exists(KERNELS_OUT):
         with open(KERNELS_OUT) as fh:
             merged = json.load(fh)
     merged["per_kernel"] = costs
+    merged["per_kernel_primitives"] = prims
     with open(KERNELS_OUT, "w") as fh:
         json.dump(merged, fh, indent=2)
         fh.write("\n")
-    print(f"kernels OK: {len(costs)} hot paths inside budget; merged into "
+    print(f"kernels OK: {len(costs)} hot paths inside budget, "
+          f"{len(prims)} primitive mixes pinned; merged into "
           f"{os.path.abspath(KERNELS_OUT)}")
 
 

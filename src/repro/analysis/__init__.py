@@ -1,0 +1,19 @@
+"""repro-lint: three-tier JAX/Pallas correctness analyzer.
+
+Tier 1 (``rules``): stdlib-AST source rules RPR001-006 over src/repro.
+Tier 2 (``jaxpr_checks`` + ``registry``): traced-program analyzers and a
+jit-cache recompile gate over the registered compiled entry points.
+Tier 3 (``kernel_checks``): Pallas BlockSpec/grid/VMEM geometry checks.
+Plus ``deadmods``: static import-reachability report from the tests.
+
+CLI: ``repro-lint`` (``repro.analysis.cli:main``); baseline suppressions
+with justifications live in ``lint_baseline.json`` at the repo root.
+"""
+from repro.analysis.findings import (Baseline, Finding, apply_baseline,
+                                     sort_findings)
+from repro.analysis.rules import RULE_CATALOG, lint_paths, lint_source
+
+__all__ = [
+    "Baseline", "Finding", "apply_baseline", "sort_findings",
+    "RULE_CATALOG", "lint_paths", "lint_source",
+]

@@ -1,0 +1,351 @@
+"""Shared AST machinery for the Tier-1 rules (stdlib ``ast`` only).
+
+The rules need three repo-specific facts about any function they walk:
+
+1. **Is it traced?**  A function body runs under JAX tracing when it is
+   ``@jax.jit``-decorated (directly or via ``functools.partial(jax.jit,
+   static_argnames=...)``), or follows the repo's naming contract for
+   pure JAX code: ``apply_jax`` methods and ``*_jax`` functions
+   (``core/smoothing/base.py`` docstring — "jnp arrays in, jnp arrays
+   out, no host sync").
+
+2. **Which expressions are traced values?**  Roots are (a) parameters
+   annotated as arrays (``jnp.ndarray`` / ``jax.Array`` / ``w`` without
+   annotation is NOT assumed), (b) names assigned from ``jnp.*`` /
+   ``jax.*`` calls or from expressions containing traced names, and
+   (c) ``self.<field>`` where ``field`` is a registered pytree *data*
+   field (leaves are traced under jit/vmap; meta fields are static).
+   Parameters listed in the jit's ``static_argnames`` are never traced.
+
+3. **Pytree registrations.**  Module-level
+   ``register_mitigation(Cls, data_fields=..., meta_fields=...)`` and
+   ``jax.tree_util.register_dataclass(Cls, data_fields=...,
+   meta_fields=...)`` calls, mapped back to the class definition.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+ARRAY_ANNOTATIONS = {
+    "jnp.ndarray", "jax.Array", "jnp.array", "chex.Array", "Array",
+    "jax.numpy.ndarray",
+}
+
+JAX_VALUE_PREFIXES = ("jnp.", "jax.", "lax.", "jax.lax.", "jax.nn.")
+
+#: attribute accesses on traced values that are nonetheless static
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+#: builtin calls whose results are host/static regardless of arguments
+STATIC_CALLS = {"len", "range", "enumerate", "isinstance", "getattr",
+                "hasattr", "type", "str", "repr", "id", "zip", "min", "max",
+                "tuple", "list", "dict", "round", "abs"}
+
+#: builtin casts: host-sync on traced args (RPR001's business), but the
+#: *result* is a host scalar — never a traced value
+HOST_CAST_CALLS = {"float", "int", "bool", "complex"}
+
+
+def walk_shallow(root: ast.AST):
+    """``ast.walk`` that does not descend into nested function/class
+    definitions — each of those gets its own ``FunctionContext``, so a
+    rule walking the outer body would double-report the inner one."""
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``ast.Attribute``/``ast.Name`` chain -> "a.b.c" (else None)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _const_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    """('a', 'b') / ['a'] / 'a' literal -> tuple of strings (else ())."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+@dataclasses.dataclass
+class JitInfo:
+    jitted: bool = False
+    static_argnames: Tuple[str, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def decorator_jit_info(fn: ast.AST) -> JitInfo:
+    """Inspect decorators for jax.jit / functools.partial(jax.jit, ...)."""
+    info = JitInfo()
+    for dec in getattr(fn, "decorator_list", []):
+        name = dotted_name(dec)
+        if name in ("jax.jit", "jit"):
+            info.jitted = True
+            continue
+        if isinstance(dec, ast.Call):
+            callee = dotted_name(dec.func)
+            if callee in ("jax.jit", "jit"):
+                info.jitted = True
+            elif callee in ("functools.partial", "partial") and dec.args:
+                target = dotted_name(dec.args[0])
+                if target in ("jax.jit", "jit"):
+                    info.jitted = True
+                else:
+                    continue
+            else:
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    info.static_argnames += _const_str_tuple(kw.value)
+    return info
+
+
+@dataclasses.dataclass
+class Registration:
+    """One pytree dataclass registration found at module level."""
+    class_name: str
+    data_fields: Tuple[str, ...]
+    meta_fields: Tuple[str, ...]
+    line: int
+
+
+def find_registrations(tree: ast.Module) -> Dict[str, Registration]:
+    regs: Dict[str, Registration] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func)
+        if callee not in ("register_mitigation", "base.register_mitigation",
+                          "jax.tree_util.register_dataclass",
+                          "tree_util.register_dataclass",
+                          "register_dataclass"):
+            continue
+        if not node.args:
+            continue
+        cls = dotted_name(node.args[0])
+        if cls is None:
+            continue
+        data: Tuple[str, ...] = ()
+        meta: Tuple[str, ...] = ()
+        for kw in node.keywords:
+            if kw.arg == "data_fields":
+                data = _const_str_tuple(kw.value)
+            elif kw.arg == "meta_fields":
+                meta = _const_str_tuple(kw.value)
+        regs[cls] = Registration(cls, data, meta, node.lineno)
+    return regs
+
+
+def is_dataclass_def(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        name = dotted_name(dec if not isinstance(dec, ast.Call) else dec.func)
+        if name in ("dataclasses.dataclass", "dataclass"):
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class FunctionContext:
+    """One function/method plus everything the rules need about it."""
+    node: ast.AST                     # FunctionDef | AsyncFunctionDef
+    qualname: str                     # "Class.method" or "fn"
+    class_name: Optional[str]
+    jit: JitInfo
+    registration: Optional[Registration]   # enclosing class's, if any
+    parent_traced: bool = False       # defined inside a traced function
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def is_traced(self) -> bool:
+        """Body runs under JAX tracing (jit decorator, *_jax contract, or
+        nested inside a traced function — scan/cond bodies and helpers)."""
+        return (self.jit.jitted or self.name == "apply_jax"
+                or self.name.endswith("_jax") or self.parent_traced)
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+    def array_params(self) -> Set[str]:
+        """Parameters annotated as arrays, minus static_argnames."""
+        out: Set[str] = set()
+        a = self.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            ann = p.annotation
+            if ann is not None and dotted_name(ann) in ARRAY_ANNOTATIONS:
+                out.add(p.arg)
+        return out - set(self.jit.static_argnames)
+
+
+def collect_functions(tree: ast.Module,
+                      regs: Dict[str, Registration]
+                      ) -> List[FunctionContext]:
+    out: List[FunctionContext] = []
+
+    def visit(node: ast.AST, class_name: Optional[str], prefix: str,
+              parent_traced: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                visit(child, child.name, f"{prefix}{child.name}.",
+                      parent_traced)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                ctx = FunctionContext(
+                    node=child, qualname=f"{prefix}{child.name}",
+                    class_name=class_name,
+                    jit=decorator_jit_info(child),
+                    registration=regs.get(class_name) if class_name else None,
+                    parent_traced=parent_traced)
+                out.append(ctx)
+                visit(child, class_name, f"{prefix}{child.name}.",
+                      ctx.is_traced)
+    visit(tree, None, "", False)
+    return out
+
+
+class TracedVars:
+    """Flow-insensitive traced-value inference inside one function.
+
+    Seeds: array-annotated params + registered ``self.<data_field>``
+    accesses.  One forward pass per statement list propagates through
+    assignments: a target becomes traced when its RHS mentions a traced
+    name, a ``self.<data_field>``, or calls into ``jnp.* / jax.*``
+    value-producing APIs (minus the key-handling and host-boundary
+    entry points).  Deliberately conservative: a miss means a missed
+    lint, never a false positive on static values.
+    """
+
+    #: jax.* calls whose results are NOT device values in the traced sense
+    NON_VALUE_CALLS = {
+        "jax.device_get", "jax.tree_util.tree_structure", "jax.make_jaxpr",
+        "jnp.ndim", "jnp.shape", "jnp.result_type",
+    }
+
+    def __init__(self, fn: FunctionContext,
+                 module_returns: Optional[Dict[str, ast.AST]] = None):
+        self.fn = fn
+        self.data_fields: Set[str] = set(
+            fn.registration.data_fields) if fn.registration else set()
+        #: same-module function name -> return annotation AST, used to
+        #: untaint tuple-unpack targets with non-array annotations
+        self.module_returns = module_returns or {}
+        self.traced: Set[str] = set(fn.array_params())
+        self._propagate(fn.node)
+
+    def _propagate(self, node: ast.AST) -> None:
+        # two passes so later-defined helpers feeding earlier uses in
+        # loops still converge for the common cases
+        for _ in range(2):
+            before = set(self.traced)
+            for stmt in walk_shallow(node):
+                if isinstance(stmt, ast.Assign):
+                    if self.expr_is_traced(stmt.value):
+                        if self._mark_by_annotation(stmt):
+                            continue
+                        for tgt in stmt.targets:
+                            self._mark_target(tgt)
+                elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    if self.expr_is_traced(stmt.value):
+                        self._mark_target(stmt.target)
+                elif isinstance(stmt, ast.AugAssign):
+                    if self.expr_is_traced(stmt.value):
+                        self._mark_target(stmt.target)
+                elif isinstance(stmt, ast.For):
+                    if self.expr_is_traced(stmt.iter):
+                        self._mark_target(stmt.target)
+            if self.traced == before:
+                break
+
+    def _mark_by_annotation(self, stmt: ast.Assign) -> bool:
+        """``freqs, mag = spectrum_jax(x, dt)`` where ``spectrum_jax`` is a
+        same-module function annotated ``-> Tuple[np.ndarray, jnp.ndarray]``:
+        mark only the targets whose annotation element is an array type.
+        Returns True when the statement was fully handled this way."""
+        if (len(stmt.targets) != 1
+                or not isinstance(stmt.targets[0], (ast.Tuple, ast.List))
+                or not isinstance(stmt.value, ast.Call)):
+            return False
+        callee = dotted_name(stmt.value.func)
+        ann = self.module_returns.get(callee)
+        if ann is None or not isinstance(ann, ast.Subscript):
+            return False
+        if dotted_name(ann.value) not in ("Tuple", "tuple", "typing.Tuple"):
+            return False
+        elts = getattr(ann.slice, "elts", None)
+        targets = stmt.targets[0].elts
+        if elts is None or len(elts) != len(targets):
+            return False
+        for tgt, el in zip(targets, elts):
+            if dotted_name(el) in ARRAY_ANNOTATIONS:
+                self._mark_target(tgt)
+        return True
+
+    def _mark_target(self, tgt: ast.AST) -> None:
+        if isinstance(tgt, ast.Name):
+            self.traced.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for elt in tgt.elts:
+                self._mark_target(elt)
+
+    def expr_is_traced(self, expr: ast.AST) -> bool:
+        """Recursive traced-value test with the static escape hatches:
+        ``x.shape`` arithmetic, builtin casts/aggregates, ``is None`` and
+        string-key membership tests never count as traced."""
+        node = expr
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                return node.attr in self.data_fields
+            return self.expr_is_traced(node.value)
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Compare):
+            ops = node.ops
+            if all(isinstance(o, (ast.Is, ast.IsNot)) for o in ops):
+                return False          # identity tests are host-safe
+            if (all(isinstance(o, (ast.In, ast.NotIn)) for o in ops)
+                    and isinstance(node.left, ast.Constant)
+                    and isinstance(node.left.value, str)):
+                return False          # "key" in metrics_dict is static
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func) or ""
+            if (callee in STATIC_CALLS or callee in HOST_CAST_CALLS
+                    or callee in self.NON_VALUE_CALLS):
+                return False          # host-valued even on traced args
+            if callee.startswith(JAX_VALUE_PREFIXES):
+                return True
+            # x.sum() / x.astype(...): a method call on a traced receiver
+            # is a traced value even with no traced arguments
+            return (self.expr_is_traced(node.func)
+                    or any(self.expr_is_traced(a) for a in node.args)
+                    or any(self.expr_is_traced(kw.value)
+                           for kw in node.keywords))
+        return any(self.expr_is_traced(child)
+                   for child in ast.iter_child_nodes(node))

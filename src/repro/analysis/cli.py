@@ -1,0 +1,136 @@
+"""``repro-lint`` — the three-tier JAX/Pallas correctness analyzer.
+
+Tiers (all on by default; select with ``--tiers``):
+
+- ``ast``       Tier-1 source rules RPR001-006 over the given paths.
+- ``jaxpr``     Tier-2 traced-program checks (RPR100-102) over the
+                registered entry points.
+- ``recompile`` Tier-2 jit-cache gate (RPR103) — actually runs the
+                registered workloads twice, so it is the slow tier.
+- ``kernels``   Tier-3 Pallas launch-geometry checks (RPR200-205).
+- ``deadmods``  untested-module report (RPR300).
+
+Exit status is 1 when any non-baselined error or warning remains (info
+findings never gate).  Intentional patterns are suppressed by the
+checked-in ``lint_baseline.json``; every entry must carry a one-line
+justification, and stale entries are reported so suppressions rot
+loudly.  ``--write-baseline`` emits a fresh baseline covering the
+current findings for a human to justify.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis.findings import (Baseline, Finding, apply_baseline,
+                                     render_json, render_text)
+from repro.analysis.rules import RULE_CATALOG, lint_paths
+
+ALL_TIERS = ("ast", "jaxpr", "recompile", "kernels", "deadmods")
+
+
+def _find_root(start: str) -> str:
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(cur, "pyproject.toml")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX/Pallas correctness analyzer (AST + jaxpr + kernel "
+                    "tiers) for the power-stabilization repro")
+    p.add_argument("paths", nargs="*",
+                   help="files/dirs for the ast tier (default: src/repro)")
+    p.add_argument("--root", default=None,
+                   help="repo root (default: nearest pyproject.toml upward)")
+    p.add_argument("--tiers", default=",".join(ALL_TIERS),
+                   help=f"comma list of {'/'.join(ALL_TIERS)}")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--output", default=None,
+                   help="write the report here as well as stdout")
+    p.add_argument("--baseline", default=None,
+                   help="baseline file (default: <root>/lint_baseline.json)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write a baseline covering current findings and exit")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def collect_findings(tiers: List[str], paths: List[str],
+                     root: str) -> List[Finding]:
+    findings: List[Finding] = []
+    if "ast" in tiers:
+        findings.extend(lint_paths(paths, root))
+    if "jaxpr" in tiers:
+        from repro.analysis.jaxpr_checks import check_entry_points
+        findings.extend(check_entry_points())
+    if "recompile" in tiers:
+        from repro.analysis.jaxpr_checks import recompile_gate
+        findings.extend(recompile_gate())
+    if "kernels" in tiers:
+        from repro.analysis.kernel_checks import check_kernels
+        findings.extend(check_kernels())
+    if "deadmods" in tiers:
+        from pathlib import Path
+
+        from repro.analysis.deadmods import check_dead_modules
+        findings.extend(check_dead_modules(Path(root)))
+    return findings
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for spec in RULE_CATALOG.values():
+            print(f"{spec.rule}  {spec.title}  [{spec.severity}]")
+            print(f"        {spec.rationale}")
+        return 0
+
+    root = args.root or _find_root(os.getcwd())
+    paths = args.paths or [os.path.join(root, "src", "repro")]
+    tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
+    bad = set(tiers) - set(ALL_TIERS)
+    if bad:
+        print(f"repro-lint: unknown tier(s) {sorted(bad)}", file=sys.stderr)
+        return 2
+
+    findings = collect_findings(tiers, paths, root)
+
+    baseline_path = args.baseline or os.path.join(root, "lint_baseline.json")
+    if args.write_baseline:
+        gating = [f for f in findings if f.severity in ("error", "warning")]
+        Baseline.write(baseline_path, gating)
+        print(f"repro-lint: wrote {len(gating)} entr(ies) to "
+              f"{baseline_path}; fill in the justifications")
+        return 0
+
+    baseline = Baseline.load(baseline_path)
+    active, suppressed = apply_baseline(findings, baseline)
+    # a tier subset can't see the other tiers' findings — only a full run
+    # can judge a baseline entry stale
+    stale = baseline.unused() if set(tiers) == set(ALL_TIERS) else []
+
+    render = render_json if args.format == "json" else render_text
+    report = render(active, suppressed, stale)
+    print(report)
+    if args.output:
+        with open(args.output, "w") as fh:
+            fh.write(report)
+            fh.write("\n")
+
+    gating = [f for f in active if f.severity in ("error", "warning")]
+    return 1 if gating else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

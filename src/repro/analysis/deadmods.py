@@ -1,0 +1,149 @@
+"""Dead/untested-module report: static import reachability from tests/.
+
+Parses every test module, resolves its (recursive) ``repro.*`` imports
+through the src tree, and reports any ``src/repro`` module that no test
+reaches — code the suite cannot possibly exercise.  ``launch/`` and
+``models/`` are demonstration/config surfaces that are driven from the
+CLI rather than the test suite, so their entries are informational;
+anywhere else an unreachable module is an error (the gate the ISSUE
+requires: zero untested modules outside launch//models).
+
+Resolution is import-syntax only (``import repro.x``, ``from repro.x
+import y`` — including the ``y`` being a submodule, and package
+``__init__`` re-exports), which matches the repo's absolute-import
+style.  Dynamic imports would be invisible, so this over-reports rather
+than under-reports dead modules — the safe direction for a gate.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Set
+
+from repro.analysis.findings import Finding
+
+PACKAGE = "repro"
+INFO_ONLY_PREFIXES = ("repro.launch", "repro.models")
+
+
+def _module_name(py: Path, src_root: Path) -> str:
+    rel = py.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def package_modules(src_root: Path) -> Dict[str, Path]:
+    """All modules under src_root/repro, name -> file."""
+    out: Dict[str, Path] = {}
+    for py in sorted((src_root / PACKAGE).rglob("*.py")):
+        out[_module_name(py, src_root)] = py
+    return out
+
+
+def module_imports(py: Path) -> Set[str]:
+    """Dotted names this file imports (repro.* only, unresolved)."""
+    try:
+        tree = ast.parse(py.read_text(), filename=str(py))
+    except SyntaxError:
+        return set()
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            # the configs-registry idiom: importlib.import_module(
+            # f"repro.configs.{name}") loads every submodule dynamically —
+            # mark the whole subpackage reachable via a "prefix.*" entry
+            callee = node.func
+            name = ""
+            while isinstance(callee, ast.Attribute):
+                name = f".{callee.attr}{name}"
+                callee = callee.value
+            if isinstance(callee, ast.Name):
+                name = callee.id + name
+            if name in ("importlib.import_module", "import_module") \
+                    and node.args:
+                arg = node.args[0]
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.split(".")[0] == PACKAGE):
+                    out.add(arg.value)
+                elif (isinstance(arg, ast.JoinedStr) and arg.values
+                        and isinstance(arg.values[0], ast.Constant)
+                        and isinstance(arg.values[0].value, str)
+                        and arg.values[0].value.split(".")[0] == PACKAGE):
+                    out.add(arg.values[0].value.rstrip(".") + ".*")
+            continue
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == PACKAGE:
+                    out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:            # relative import: anchor at repro pkg
+                base = PACKAGE        # repo style is absolute; be lenient
+            elif node.module and node.module.split(".")[0] == PACKAGE:
+                base = node.module
+            else:
+                continue
+            out.add(base)
+            for alias in node.names:
+                out.add(f"{base}.{alias.name}")   # may be a submodule
+    return out
+
+
+def reachable_modules(roots: Iterable[Path], src_root: Path) -> Set[str]:
+    """Transitive closure of repro.* imports starting from ``roots``."""
+    mods = package_modules(src_root)
+    seen: Set[str] = set()
+    frontier: List[str] = []
+
+    def enqueue(names: Set[str]) -> None:
+        for name in names:
+            if name.endswith(".*"):       # dynamic subpackage load
+                prefix = name[:-2]
+                for cand in mods:
+                    if (cand == prefix or cand.startswith(prefix + ".")) \
+                            and cand not in seen:
+                        seen.add(cand)
+                        frontier.append(cand)
+                continue
+            # "from repro.a import b" may name module repro.a.b or an
+            # attribute of repro.a — accept whichever exists; either way
+            # the parent package __init__ chain is imported too.
+            parts = name.split(".")
+            for i in range(len(parts), 0, -1):
+                cand = ".".join(parts[:i])
+                if cand in mods and cand not in seen:
+                    seen.add(cand)
+                    frontier.append(cand)
+
+    for root in roots:
+        enqueue(module_imports(root))
+    while frontier:
+        mod = frontier.pop()
+        enqueue(module_imports(mods[mod]))
+    return seen
+
+
+def check_dead_modules(repo_root: Path) -> List[Finding]:
+    src_root = repo_root / "src"
+    mods = package_modules(src_root)
+    test_files = sorted((repo_root / "tests").glob("test_*.py"))
+    bench_files = sorted((repo_root / "benchmarks").glob("*.py"))
+    reached = reachable_modules(test_files + bench_files, src_root)
+    out: List[Finding] = []
+    for name, py in sorted(mods.items()):
+        if name in reached or name == PACKAGE:
+            continue
+        info = any(name == p or name.startswith(p + ".")
+                   for p in INFO_ONLY_PREFIXES)
+        out.append(Finding(
+            rule="RPR300",
+            path=str(py.relative_to(repo_root)), line=1,
+            message=(f"module {name} is not imported (transitively) by any "
+                     f"test or benchmark — "
+                     + ("CLI-driven surface, informational"
+                        if info else "untested code")),
+            severity="info" if info else "error",
+            context=name, tier="deadmods"))
+    return out

@@ -1,0 +1,140 @@
+"""Structured findings + checked-in baseline for ``repro-lint``.
+
+A ``Finding`` is one rule hit: (rule id, path:line, message, severity,
+context).  ``context`` is the enclosing symbol (``Class.method`` /
+function qualname / kernel name) — the *line-number-independent* part of
+a finding's identity, so baselines survive unrelated edits to the file.
+
+The baseline file (``lint_baseline.json``, checked in at the repo root)
+suppresses findings that are intentional: each entry carries a one-line
+``justification`` explaining why the pattern is kept.  Matching is by
+``(rule, path, context)``; a baseline entry suppresses every finding
+with that key (a segmented cumsum that is safe once is safe at both its
+re/im call sites).  Unused baseline entries are reported as warnings so
+stale suppressions rot loudly, not silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str              # "RPR001"
+    path: str              # repo-relative, forward slashes
+    line: int              # 1-based; 0 = whole-file / whole-callable
+    message: str
+    severity: str = "error"
+    context: str = ""      # enclosing symbol (baseline identity)
+    tier: str = "ast"      # "ast" | "jaxpr" | "kernel" | "deadmod"
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.context)
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        ctx = f" [{self.context}]" if self.context else ""
+        return f"{loc}: {self.rule} {self.severity}: {self.message}{ctx}"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+class Baseline:
+    """Suppression list keyed by (rule, path, context)."""
+
+    def __init__(self, entries: Optional[Sequence[Dict]] = None,
+                 path: Optional[str] = None):
+        self.path = path
+        self.entries: List[Dict] = list(entries or [])
+        self._used = [False] * len(self.entries)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls(path=path)
+        with open(path) as fh:
+            data = json.load(fh)
+        entries = data.get("entries", [])
+        for e in entries:
+            missing = {"rule", "path", "context", "justification"} - set(e)
+            if missing:
+                raise ValueError(
+                    f"{path}: baseline entry {e} missing {sorted(missing)}")
+        return cls(entries, path=path)
+
+    def suppresses(self, finding: Finding) -> bool:
+        rule, path, context = finding.key()
+        hit = False
+        for i, e in enumerate(self.entries):
+            if (e["rule"] == rule and e["path"] == path
+                    and e["context"] == context):
+                self._used[i] = True
+                hit = True
+        return hit
+
+    def unused(self) -> List[Dict]:
+        return [e for e, u in zip(self.entries, self._used) if not u]
+
+    @staticmethod
+    def write(path: str, findings: Sequence[Finding],
+              justification: str = "TODO: justify") -> None:
+        """Emit a baseline covering ``findings`` (dedup by key) for a human
+        to fill in justifications — the ``--write-baseline`` flow."""
+        seen = {}
+        for f in sort_findings(findings):
+            seen.setdefault(f.key(), f)
+        entries = [{"rule": f.rule, "path": f.path, "context": f.context,
+                    "justification": justification}
+                   for f in seen.values()]
+        with open(path, "w") as fh:
+            json.dump({"version": 1, "entries": entries}, fh, indent=2)
+            fh.write("\n")
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Baseline
+                   ) -> Tuple[List[Finding], List[Finding]]:
+    """-> (active, suppressed)."""
+    active, suppressed = [], []
+    for f in findings:
+        (suppressed if baseline.suppresses(f) else active).append(f)
+    return active, suppressed
+
+
+def render_text(active: Sequence[Finding], suppressed: Sequence[Finding],
+                unused_baseline: Sequence[Dict]) -> str:
+    lines = [f.render() for f in sort_findings(active)]
+    if suppressed:
+        lines.append(f"-- {len(suppressed)} finding(s) suppressed by baseline")
+    for e in unused_baseline:
+        lines.append(f"-- stale baseline entry (no matching finding): "
+                     f"{e['rule']} {e['path']} [{e['context']}]")
+    n_err = sum(1 for f in active if f.severity == "error")
+    n_warn = sum(1 for f in active if f.severity == "warning")
+    lines.append(f"repro-lint: {n_err} error(s), {n_warn} warning(s), "
+                 f"{len(suppressed)} baselined")
+    return "\n".join(lines)
+
+
+def render_json(active: Sequence[Finding], suppressed: Sequence[Finding],
+                unused_baseline: Sequence[Dict]) -> str:
+    return json.dumps({
+        "findings": [f.to_json() for f in sort_findings(active)],
+        "suppressed": [f.to_json() for f in sort_findings(suppressed)],
+        "stale_baseline_entries": list(unused_baseline),
+        "counts": {
+            "error": sum(1 for f in active if f.severity == "error"),
+            "warning": sum(1 for f in active if f.severity == "warning"),
+            "info": sum(1 for f in active if f.severity == "info"),
+            "suppressed": len(suppressed),
+        },
+    }, indent=2)

@@ -1,0 +1,201 @@
+"""Tier-2 jaxpr analyzers over the registered entry points.
+
+Three checks per entry (``registry.ENTRY_POINTS``):
+
+1. **f32 long-axis accumulation** — walk the jaxpr (recursing into
+   scan/cond/pjit/closed-call bodies AND Pallas kernel bodies) and flag
+   any ``cumsum`` over an axis longer than ``LONG_AXIS_CUMSUM`` whose
+   dtype is f32/c64: sequential prefix sums lose low bits linearly in
+   length — the exact shape of the PR-3 bug, where a trace-length f32
+   cumsum on a MW-scale DC offset buried a 1e5 W oscillation.  The
+   fixed product path segments its cumsums at window length (2000), so
+   it passes; re-introduce a trace-length accumulation anywhere on a
+   registered path and CI fails.  Tree reductions (``reduce_sum``) lose
+   only ~log2(n) bits, so they gate at a far higher threshold.
+
+2. **host callbacks** — no ``pure_callback``/``io_callback``/
+   ``debug_callback`` may appear in a compiled hot path (a callback is a
+   per-call host round-trip; on the serve path that is a latency cliff).
+
+3. **recompile gate** — run each ``registry.RECOMPILE_PAIRS`` workload
+   twice with different data in the same shape bucket and assert the
+   tracked jit caches (``_cache_size``) did not grow on the second call:
+   re-calling within a bucket must hit the cache.  A miss means a shape
+   or static-arg leaked into the jit key — the recompile-storm class.
+
+``primitive_counts`` exposes the per-entry primitive histogram; the
+deterministic counts are pinned by ``benchmarks/roofline.py --kernels``
+so kernel fusion regressions fail CI with a named primitive diff.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import (ENTRY_POINTS, LONG_AXIS_CUMSUM,
+                                     LONG_AXIS_REDUCE, RECOMPILE_PAIRS,
+                                     EntryPoint, _tracked_jit_fns)
+
+HOST_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                       "callback", "outside_call", "host_callback_call"}
+
+_INNER_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                       "body_jaxpr", "branches")
+
+_NARROW_DTYPES = {"float32", "complex64", "bfloat16", "float16"}
+
+
+def _iter_eqns(jaxpr, scope: str = ""):
+    """Yield (eqn, scope) over a jaxpr and every inner jaxpr it closes
+    over (scan/while/cond bodies, pjit calls, Pallas kernel bodies)."""
+    for eqn in jaxpr.eqns:
+        yield eqn, scope
+        prim = eqn.primitive.name
+        for pname in _INNER_JAXPR_PARAMS:
+            sub = eqn.params.get(pname)
+            if sub is None:
+                continue
+            subs = sub if isinstance(sub, (tuple, list)) else (sub,)
+            for s in subs:
+                inner = s.jaxpr if hasattr(s, "jaxpr") else s
+                yield from _iter_eqns(inner, f"{scope}/{prim}")
+
+
+def check_jaxpr(closed_jaxpr, *, name: str,
+                cumsum_axis_limit: int = LONG_AXIS_CUMSUM,
+                reduce_axis_limit: int = LONG_AXIS_REDUCE) -> List[Finding]:
+    """Structural findings for one traced program."""
+    out: List[Finding] = []
+    for eqn, scope in _iter_eqns(closed_jaxpr.jaxpr):
+        prim = eqn.primitive.name
+        if prim in HOST_CALLBACK_PRIMS:
+            out.append(Finding(
+                rule="RPR102", path=f"jaxpr:{name}", line=0,
+                message=f"host callback '{prim}' inside compiled entry "
+                        f"point (scope {scope or 'top'}): per-call host "
+                        f"round-trip on a hot path",
+                severity="error", context=name, tier="jaxpr"))
+            continue
+        if prim in ("cumsum", "cumprod", "cummax", "cummin", "cumlogsumexp"):
+            aval = eqn.invars[0].aval
+            axis = eqn.params.get("axis", 0)
+            length = aval.shape[axis] if aval.shape else 0
+            if (length > cumsum_axis_limit
+                    and str(aval.dtype) in _NARROW_DTYPES | {"complex64"}):
+                out.append(Finding(
+                    rule="RPR101", path=f"jaxpr:{name}", line=0,
+                    message=f"{prim} over axis of length {length} in "
+                            f"{aval.dtype} (scope {scope or 'top'}): "
+                            f"sequential narrow-precision accumulation over "
+                            f"a sample-length axis — the PR-3 cancellation "
+                            f"class; segment it or promote to f64",
+                    severity="error", context=name, tier="jaxpr"))
+        elif prim == "reduce_sum":
+            aval = eqn.invars[0].aval
+            axes = eqn.params.get("axes", ())
+            red = 1
+            for a in axes:
+                red *= aval.shape[a] if a < len(aval.shape) else 1
+            if (red > reduce_axis_limit
+                    and str(aval.dtype) in _NARROW_DTYPES):
+                out.append(Finding(
+                    rule="RPR101", path=f"jaxpr:{name}", line=0,
+                    message=f"reduce_sum over {red} elements in "
+                            f"{aval.dtype} (scope {scope or 'top'}): even a "
+                            f"tree reduction this wide deserves f64 or a "
+                            f"compensated scheme",
+                    severity="warning", context=name, tier="jaxpr"))
+    return out
+
+
+def trace_entry(ep: EntryPoint):
+    import jax
+    fn, args, kwargs = ep.build()
+    return jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+
+
+def check_entry_points(names: Optional[Sequence[str]] = None) -> List[Finding]:
+    out: List[Finding] = []
+    for ep in ENTRY_POINTS:
+        if names and ep.name not in names:
+            continue
+        try:
+            closed = trace_entry(ep)
+        except Exception as exc:          # registry rot is itself a finding
+            out.append(Finding(
+                rule="RPR100", path=f"jaxpr:{ep.name}", line=0,
+                message=f"entry point failed to trace: {exc!r} — the Tier-2 "
+                        f"registry no longer matches the code; update "
+                        f"analysis/registry.py",
+                severity="error", context=ep.name, tier="jaxpr"))
+            continue
+        out.extend(check_jaxpr(closed, name=ep.name))
+    return out
+
+
+def primitive_counts(ep: EntryPoint) -> Counter:
+    """Histogram of primitive names over the entry's full jaxpr (inner
+    bodies included, NOT multiplied by trip counts — fusion structure,
+    not cost).  Deterministic for a fixed jax version + code state."""
+    closed = trace_entry(ep)
+    counts: Counter = Counter()
+    for eqn, _ in _iter_eqns(closed.jaxpr):
+        counts[eqn.primitive.name] += 1
+    return counts
+
+
+def primitive_diff(expected: Dict[str, int], got: Dict[str, int]
+                   ) -> List[str]:
+    """Named per-primitive diff lines; empty when identical."""
+    lines = []
+    for prim in sorted(set(expected) | set(got)):
+        e, g = expected.get(prim, 0), got.get(prim, 0)
+        if e != g:
+            lines.append(f"{prim}: expected {e}, got {g:+d} delta {g - e:+d}"
+                         .replace(f"got {g:+d}", f"got {g}"))
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# recompile gate
+# ---------------------------------------------------------------------------
+
+def _cache_sizes() -> Dict[str, int]:
+    sizes = {}
+    for name, fn in _tracked_jit_fns().items():
+        try:
+            sizes[name] = fn._cache_size()
+        except Exception:
+            sizes[name] = -1
+    return sizes
+
+
+def recompile_gate() -> List[Finding]:
+    """Warm each registered workload, re-run it in the same shape bucket,
+    and fail on any tracked jit-cache growth (= a compile miss where the
+    cache must hit)."""
+    out: List[Finding] = []
+    for label, run in RECOMPILE_PAIRS:
+        try:
+            run(0)                      # warm: compiles are expected here
+            before = _cache_sizes()
+            run(1)                      # same bucket, different data
+            after = _cache_sizes()
+        except Exception as exc:
+            out.append(Finding(
+                rule="RPR100", path=f"jaxpr:{label}", line=0,
+                message=f"recompile-gate workload failed to run: {exc!r}",
+                severity="error", context=label, tier="jaxpr"))
+            continue
+        for name in sorted(before):
+            if after[name] > before[name] >= 0:
+                out.append(Finding(
+                    rule="RPR103", path=f"jaxpr:{label}", line=0,
+                    message=f"recompile storm: {name} jit cache grew "
+                            f"{before[name]} -> {after[name]} on a second "
+                            f"call in the same shape bucket; a shape or "
+                            f"static arg is leaking into the jit key",
+                    severity="error", context=f"{label}:{name}",
+                    tier="jaxpr"))
+    return out

@@ -1,0 +1,325 @@
+"""Tier-3 static validation of Pallas kernel launch geometry.
+
+Rather than re-deriving BlockSpecs from source text, each registered
+kernel wrapper is *invoked* at a small representative shape with
+``pl.pallas_call`` intercepted: the interceptor records the grid,
+Block/out specs, out_shape, and scratch shapes, then returns a stub that
+captures the real operand shapes/dtypes and yields zeros — no kernel
+body ever executes, so this runs on any host.  The captured geometry is
+checked against the TPU constraints in the Pallas guide:
+
+- **RPR201 divisibility** — every block dim must divide its operand dim
+  (a non-dividing block silently reads/writes out-of-bounds pads).
+- **RPR202 grid coverage** — enumerating the grid through each output
+  index_map must tile the output exactly once: a gap is uninitialized
+  output, a duplicate is a write race across grid cells.
+- **RPR203 narrow lanes** — a block whose minor (lane) dim is < 128
+  wastes (128-K)/128 of every vector register and VMEM tile.  This is
+  the ROADMAP-known sliding-Goertzel weakness (K=4 bins on lanes);
+  known cases are baselined with that justification, new ones fail.
+- **RPR204 sublane alignment** — f32 blocks of rank >= 2 at or above one
+  (8, 128) tile should keep the second-minor dim a multiple of 8, else
+  every block row pads to the next sublane boundary.
+- **RPR205 VMEM budget** — resident bytes (all in/out blocks + scratch)
+  must fit the per-core VMEM budget; overflow is a compile- or run-time
+  failure on real hardware that interpret-mode tests never see.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from unittest import mock
+
+from repro.analysis.findings import Finding
+
+#: per-core VMEM (TPU v4/v5 class, see /opt/skills/guides: ~16 MiB)
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+LANE = 128
+SUBLANE_F32 = 8
+#: blocks smaller than one (8, 128) f32 tile are scalar-ish operands
+#: (phase tables, rotation rows) — layout rules don't bite there
+MIN_TILE_ELEMS = SUBLANE_F32 * LANE
+#: cap on grid enumeration for the coverage check
+MAX_GRID_CELLS = 65536
+
+
+@dataclasses.dataclass
+class PallasCapture:
+    """One intercepted ``pl.pallas_call`` launch."""
+    grid: Tuple[int, ...]
+    in_specs: Sequence[object]
+    out_specs: Sequence[object]
+    out_shapes: Sequence[object]          # ShapeDtypeStruct(s)
+    scratch_shapes: Sequence[object]
+    operands: Sequence[object] = ()       # ShapeDtypeStruct-likes of args
+
+
+@dataclasses.dataclass
+class KernelCase:
+    name: str                             # e.g. "goertzel.sliding"
+    path: str                             # source file, for findings
+    run: Callable[[], None]               # invokes the wrapper (patched)
+
+
+def _as_tuple(x) -> tuple:
+    if x is None:
+        return ()
+    if isinstance(x, (tuple, list)):
+        return tuple(x)
+    return (x,)
+
+
+def capture_kernel(case: KernelCase) -> List[PallasCapture]:
+    """Run one wrapper with pallas_call intercepted; return its launches."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas
+
+    captures: List[PallasCapture] = []
+
+    def fake_pallas_call(kernel, *, grid=None, in_specs=None, out_specs=None,
+                         out_shape=None, scratch_shapes=(), **kw):
+        cap = PallasCapture(
+            grid=_as_tuple(grid), in_specs=_as_tuple(in_specs),
+            out_specs=_as_tuple(out_specs), out_shapes=_as_tuple(out_shape),
+            scratch_shapes=_as_tuple(scratch_shapes))
+        captures.append(cap)
+
+        def stub(*operands):
+            cap.operands = tuple(
+                jax.ShapeDtypeStruct(o.shape, o.dtype) for o in operands)
+            outs = tuple(jnp.zeros(s.shape, s.dtype) for s in cap.out_shapes)
+            return outs[0] if len(outs) == 1 else outs
+        return stub
+
+    with mock.patch.object(pallas, "pallas_call", fake_pallas_call):
+        case.run()
+    return captures
+
+
+def _dtype_bytes(dtype) -> int:
+    import numpy as np
+    try:
+        return int(np.dtype(dtype).itemsize)
+    except Exception:
+        return 4
+
+
+def _block_shape(spec) -> Optional[Tuple[int, ...]]:
+    bs = getattr(spec, "block_shape", None)
+    if bs is None:
+        return None
+    return tuple(int(d) for d in bs)
+
+
+def _scratch_geom(s) -> Tuple[Tuple[int, ...], object]:
+    shape = tuple(int(d) for d in getattr(s, "shape", ()))
+    dtype = getattr(s, "dtype", "float32")
+    return shape, dtype
+
+
+def check_capture(case: KernelCase, cap: PallasCapture) -> List[Finding]:
+    out: List[Finding] = []
+
+    def finding(rule, msg, severity, what):
+        out.append(Finding(
+            rule=rule, path=case.path, line=0, message=msg,
+            severity=severity, context=f"{case.name}:{what}", tier="kernels"))
+
+    pairs = (list(zip(cap.in_specs, cap.operands,
+                      [f"in{i}" for i in range(len(cap.in_specs))]))
+             + list(zip(cap.out_specs, cap.out_shapes,
+                        [f"out{i}" for i in range(len(cap.out_specs))])))
+
+    resident = 0
+    for spec, operand, what in pairs:
+        block = _block_shape(spec)
+        shape = tuple(int(d) for d in operand.shape)
+        if block is None:          # whole-array spec: block = operand
+            block = shape
+        if len(block) != len(shape):
+            finding("RPR201",
+                    f"{what}: block rank {len(block)} != operand rank "
+                    f"{len(shape)} (block {block} vs array {shape})",
+                    "error", what)
+            continue
+        for d, (b, n) in enumerate(zip(block, shape)):
+            if b <= 0 or n % b != 0:
+                finding("RPR201",
+                        f"{what}: block dim {d} = {b} does not divide "
+                        f"array dim {n} (block {block}, array {shape}) — "
+                        f"partial edge blocks read/write padding",
+                        "error", what)
+        resident += _dtype_bytes(operand.dtype) * _prod(block)
+        if _prod(block) >= MIN_TILE_ELEMS and len(block) >= 1:
+            if block[-1] < LANE:
+                finding("RPR203",
+                        f"{what}: minor (lane) block dim is {block[-1]} "
+                        f"< {LANE} — each tile wastes "
+                        f"{100 * (1 - block[-1] / LANE):.0f}% of its lanes; "
+                        f"consider moving a longer axis minor-most",
+                        "warning", what)
+            elif (len(block) >= 2 and str(operand.dtype) == "float32"
+                    and block[-2] % SUBLANE_F32 != 0):
+                finding("RPR204",
+                        f"{what}: second-minor block dim {block[-2]} is not "
+                        f"a multiple of {SUBLANE_F32} (f32 sublane) — rows "
+                        f"pad to the next sublane boundary",
+                        "warning", what)
+
+    for i, s in enumerate(cap.scratch_shapes):
+        shape, dtype = _scratch_geom(s)
+        resident += _dtype_bytes(dtype) * _prod(shape)
+
+    if resident > VMEM_BUDGET_BYTES:
+        finding("RPR205",
+                f"resident VMEM estimate {resident / 2**20:.1f} MiB "
+                f"(blocks + scratch) exceeds the {VMEM_BUDGET_BYTES // 2**20}"
+                f" MiB per-core budget", "error", "vmem")
+
+    out.extend(_check_coverage(case, cap))
+    return out
+
+
+def _prod(shape: Sequence[int]) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def _check_coverage(case: KernelCase, cap: PallasCapture) -> List[Finding]:
+    """Enumerate the grid through each output index_map: the mapped block
+    positions must tile the output exactly once."""
+    out: List[Finding] = []
+    cells = _prod(cap.grid) if cap.grid else 1
+    if cells == 0 or cells > MAX_GRID_CELLS:
+        return out
+    grid_points = list(itertools.product(*(range(g) for g in cap.grid))) \
+        if cap.grid else [()]
+    for oi, (spec, oshape) in enumerate(zip(cap.out_specs, cap.out_shapes)):
+        block = _block_shape(spec)
+        index_map = getattr(spec, "index_map", None)
+        shape = tuple(int(d) for d in oshape.shape)
+        if block is None or index_map is None or len(block) != len(shape):
+            continue
+        if any(b <= 0 or n % b for b, n in zip(block, shape)):
+            continue                      # divisibility already reported
+        want = set(itertools.product(*(range(n // b)
+                                       for n, b in zip(shape, block))))
+        seen: Dict[Tuple[int, ...], int] = {}
+        try:
+            for pt in grid_points:
+                idx = tuple(int(v) for v in index_map(*pt))
+                seen[idx] = seen.get(idx, 0) + 1
+        except Exception as exc:
+            out.append(Finding(
+                rule="RPR202", path=case.path, line=0,
+                message=f"out{oi}: index_map not evaluable on host ints "
+                        f"({exc!r}) — coverage unverifiable",
+                severity="warning", context=f"{case.name}:out{oi}",
+                tier="kernels"))
+            continue
+        missing = want - set(seen)
+        extra = set(seen) - want
+        dups = {k: v for k, v in seen.items() if v > 1 and k in want}
+        if missing:
+            out.append(Finding(
+                rule="RPR202", path=case.path, line=0,
+                message=f"out{oi}: {len(missing)} output block(s) never "
+                        f"written (e.g. {sorted(missing)[0]}) — "
+                        f"uninitialized output regions",
+                severity="error", context=f"{case.name}:out{oi}",
+                tier="kernels"))
+        if extra:
+            out.append(Finding(
+                rule="RPR202", path=case.path, line=0,
+                message=f"out{oi}: index_map maps outside the output block "
+                        f"grid (e.g. {sorted(extra)[0]})",
+                severity="error", context=f"{case.name}:out{oi}",
+                tier="kernels"))
+        if dups:
+            k, v = next(iter(sorted(dups.items())))
+            out.append(Finding(
+                rule="RPR202", path=case.path, line=0,
+                message=f"out{oi}: {len(dups)} output block(s) written by "
+                        f"multiple grid cells (e.g. {k} x{v}) — racy unless "
+                        f"the grid dim is a sequential reduction axis",
+                severity="warning", context=f"{case.name}:out{oi}",
+                tier="kernels"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registered kernel cases (small shapes, real structure)
+# ---------------------------------------------------------------------------
+
+def _run_goertzel_windows():
+    import jax.numpy as jnp
+    from repro.kernels.goertzel.goertzel import goertzel_pallas
+    goertzel_pallas(jnp.zeros((32, 2000), jnp.float32),
+                    jnp.zeros((4,), jnp.float32), block_w=8)
+
+
+def _run_sliding_goertzel():
+    import jax.numpy as jnp
+    from repro.kernels.goertzel.goertzel import sliding_goertzel_pallas
+    # block_s=8 matches the production default in _sliding_bin_power_full
+    win, K = 2000, 4
+    sliding_goertzel_pallas(
+        jnp.zeros((16, win), jnp.float32), jnp.zeros((win, K), jnp.float32),
+        jnp.zeros((win, K), jnp.float32), jnp.zeros((2, K), jnp.float32),
+        block_s=8)
+
+
+def _run_ballast():
+    import jax.numpy as jnp
+    from repro.kernels.ballast.ballast import ballast_pallas
+    ballast_pallas(jnp.zeros((512, 256), jnp.float32),
+                   jnp.zeros((256, 256), jnp.float32), 4, bm=256)
+
+
+def _run_flash():
+    import jax.numpy as jnp
+    from repro.kernels.flash.flash import flash_pallas
+    B, S, KV, G, D, T = 1, 2048, 2, 2, 128, 2048
+    flash_pallas(jnp.zeros((B, S, KV, G, D), jnp.bfloat16),
+                 jnp.zeros((B, T, KV, D), jnp.bfloat16),
+                 jnp.zeros((B, T, KV, D), jnp.bfloat16),
+                 q_block=1024, kv_chunk=1024)
+
+
+KERNEL_CASES: List[KernelCase] = [
+    KernelCase("goertzel.windows", "src/repro/kernels/goertzel/goertzel.py",
+               _run_goertzel_windows),
+    KernelCase("goertzel.sliding", "src/repro/kernels/goertzel/goertzel.py",
+               _run_sliding_goertzel),
+    KernelCase("ballast.gemm", "src/repro/kernels/ballast/ballast.py",
+               _run_ballast),
+    KernelCase("flash.fwd", "src/repro/kernels/flash/flash.py", _run_flash),
+]
+
+
+def check_kernels(names: Optional[Sequence[str]] = None) -> List[Finding]:
+    out: List[Finding] = []
+    for case in KERNEL_CASES:
+        if names and case.name not in names:
+            continue
+        try:
+            caps = capture_kernel(case)
+        except Exception as exc:
+            out.append(Finding(
+                rule="RPR200", path=case.path, line=0,
+                message=f"kernel case failed to launch under capture: "
+                        f"{exc!r} — update analysis/kernel_checks.py",
+                severity="error", context=case.name, tier="kernels"))
+            continue
+        if not caps:
+            out.append(Finding(
+                rule="RPR200", path=case.path, line=0,
+                message="wrapper made no pallas_call — registry stale",
+                severity="error", context=case.name, tier="kernels"))
+        for cap in caps:
+            out.extend(check_capture(case, cap))
+    return out

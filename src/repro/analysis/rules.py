@@ -1,0 +1,533 @@
+"""Tier-1 AST lint: rule catalog + engine (stdlib ``ast``, no deps).
+
+The bug classes here are the ones that have either already cost this
+repo a silent failure (RPR004 is the PR-3 f32-cumsum class) or that the
+jit/vmap architecture makes easy to introduce and hard to see in review:
+
+RPR001  host-sync-in-traced-code — ``float()``/``.item()``/
+        ``np.asarray()`` on a traced value inside jitted / ``*_jax``
+        code forces a device sync per call (or a tracer error that only
+        fires on an untested path).
+RPR002  prng-key-reuse — one key consumed by two sinks without an
+        intervening ``split``/``fold_in`` silently correlates
+        "independent" randomness.
+RPR003  pytree-meta-mismatch — a registered dataclass field that is
+        Python-branched on must be a ``meta_fields`` (static) entry;
+        as a leaf it becomes a tracer under jit/vmap and the branch
+        either crashes or (worse) freezes to the traced value.
+RPR004  f32-long-axis-accumulation — sequential prefix sums
+        (``cumsum``) accumulate rounding error linearly; over
+        sample-length axes at MW scale this buried a 1e5 W oscillation
+        (PR 3).  Safe forms: f64 promotion, or the segmented /
+        mean-removed scheme the kernels use (baseline with a
+        justification).
+RPR005  python-branch-on-tracer — ``if``/``while`` on a traced value
+        inside traced code is a ConcretizationTypeError waiting for the
+        first caller that actually jits the path.
+RPR006  mutable-default-in-pytree-dataclass — array/list/dict defaults
+        are shared across instances; on a registered pytree they also
+        alias leaves across configs in a stacked grid.
+
+Each rule reports structured ``Finding`` records; the engine runs every
+rule over every file and the CLI applies the checked-in baseline.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.astutil import (HOST_CAST_CALLS, STATIC_ATTRS,
+                                    STATIC_CALLS, FunctionContext,
+                                    Registration, TracedVars,
+                                    collect_functions, dotted_name,
+                                    find_registrations, is_dataclass_def,
+                                    walk_shallow)
+from repro.analysis.findings import Finding
+
+#: explicit host materializers (the casts live in astutil.HOST_CAST_CALLS)
+HOST_MATERIALIZE_CALLS = {"np.asarray", "np.array", "numpy.asarray",
+                          "numpy.array", "jax.device_get", "np.float32",
+                          "np.float64", "np.int32", "np.int64"}
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+#: jax.random calls that *derive* keys rather than consuming entropy
+KEY_DERIVATIONS = {"PRNGKey", "key", "split", "fold_in", "clone",
+                   "key_data", "wrap_key_data"}
+
+CUMSUM_CALLS = {"jnp.cumsum", "np.cumsum", "jnp.nancumsum", "jax.numpy.cumsum",
+                "lax.cumsum", "jax.lax.cumsum", "lax.associative_scan"}
+
+F64_NAMES = {"jnp.float64", "np.float64", "numpy.float64", "float64",
+             "jnp.complex128", "np.complex128"}
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSpec:
+    rule: str
+    title: str
+    severity: str
+    rationale: str
+
+
+RULE_CATALOG: Dict[str, RuleSpec] = {r.rule: r for r in [
+    RuleSpec("RPR001", "host-sync-in-traced-code", "error",
+             "float()/.item()/np.asarray() on traced values forces a device "
+             "sync per call or a tracer error inside jit"),
+    RuleSpec("RPR002", "prng-key-reuse", "error",
+             "a PRNG key consumed by two sinks without split/fold_in "
+             "correlates 'independent' randomness"),
+    RuleSpec("RPR003", "pytree-meta-mismatch", "error",
+             "Python-branched dataclass fields must be meta_fields (static), "
+             "not vmappable leaves"),
+    RuleSpec("RPR004", "f32-long-axis-accumulation", "warning",
+             "sequential cumsum in f32 accumulates rounding linearly; the "
+             "PR-3 bug class (use f64, or a segmented/mean-removed scheme "
+             "and baseline it with a justification)"),
+    RuleSpec("RPR005", "python-branch-on-tracer", "error",
+             "if/while on a traced value is a ConcretizationTypeError on "
+             "the first jitted caller"),
+    RuleSpec("RPR006", "mutable-default-in-pytree-dataclass", "error",
+             "array/list defaults are shared across instances and alias "
+             "leaves across stacked configs"),
+]}
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    path: str                     # repo-relative
+    tree: ast.Module
+    registrations: Dict[str, Registration]
+    functions: List[FunctionContext]
+
+
+def _finding(mod: ModuleContext, rule: str, node: ast.AST, message: str,
+             context: str, severity: Optional[str] = None) -> Finding:
+    spec = RULE_CATALOG[rule]
+    return Finding(rule=rule, path=mod.path,
+                   line=getattr(node, "lineno", 0),
+                   message=f"{spec.title}: {message}",
+                   severity=severity or spec.severity,
+                   context=context, tier="ast")
+
+
+# ---------------------------------------------------------------------------
+# traced-expression classification (shared by RPR001 / RPR005)
+# ---------------------------------------------------------------------------
+
+def expr_traced(node: ast.AST, tv: TracedVars) -> bool:
+    """Traced-value test (see ``TracedVars.expr_is_traced`` for the
+    escape-hatch semantics — one classifier serves inference and rules)."""
+    return tv.expr_is_traced(node)
+
+
+def _module_returns(mod: ModuleContext) -> Dict[str, ast.AST]:
+    """Top-level function name -> return annotation AST (used by the
+    traced-value inference to untaint mixed tuple-unpack targets)."""
+    return {fn.name: fn.node.returns for fn in mod.functions
+            if fn.class_name is None and fn.node.returns is not None}
+
+
+# ---------------------------------------------------------------------------
+# RPR001 host-sync-in-traced-code
+# ---------------------------------------------------------------------------
+
+def rule_rpr001(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in mod.functions:
+        if not fn.is_traced:
+            continue
+        tv = TracedVars(fn, _module_returns(mod))
+        for node in walk_shallow(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            hit = None
+            if callee in HOST_CAST_CALLS and node.args:
+                if expr_traced(node.args[0], tv):
+                    hit = f"{callee}() on a traced value"
+            elif callee in HOST_MATERIALIZE_CALLS and node.args:
+                if expr_traced(node.args[0], tv):
+                    hit = f"{callee}() materializes a traced value"
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in HOST_SYNC_METHODS
+                  and expr_traced(node.func.value, tv)):
+                hit = f".{node.func.attr}() on a traced value"
+            if hit:
+                out.append(_finding(
+                    mod, "RPR001", node,
+                    f"{hit} inside traced function", fn.qualname))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPR002 prng-key-reuse
+# ---------------------------------------------------------------------------
+
+def _key_id(node: ast.AST) -> Optional[Tuple[str, Optional[str]]]:
+    """A key expression's identity: bare name, or name[int-literal].
+    ``ks[i]`` with a loop variable is per-iteration unique -> None."""
+    if isinstance(node, ast.Name):
+        return (node.id, None)
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+        idx = node.slice
+        if isinstance(idx, ast.Constant):
+            return (node.value.id, repr(idx.value))
+        return None   # dynamic index: assume per-iteration unique
+    return None
+
+
+class _KeyReuse(ast.NodeVisitor):
+    """Statement-order walk counting sink consumptions per key identity.
+
+    Sinks: ``jax.random.<sampler>(key, ...)`` (anything outside
+    KEY_DERIVATIONS) and ``key=<key>`` keyword passes into arbitrary
+    calls.  ``split``/``fold_in`` are derivations, not sinks — they are
+    exactly how a key is *supposed* to fan out.  An ``if``/``else``
+    branch pair is exclusive, so counts merge as max across branches; a
+    sink inside a loop on a key defined outside it fires immediately
+    (every iteration would replay the same entropy).
+    """
+
+    def __init__(self, mod: ModuleContext, fn: FunctionContext):
+        self.mod, self.fn = mod, fn
+        self.counts: Dict[Tuple[str, Optional[str]], int] = {}
+        self.key_vars: Set[str] = set()
+        self.loop_depth = 0
+        self.defined_in_loop: Set[str] = set()
+        self.findings: List[Finding] = []
+        for p in fn.params():
+            if p in ("key", "rng", "rng_key", "prng_key"):
+                self.key_vars.add(p)
+
+    def _is_key_producer(self, call: ast.Call) -> bool:
+        callee = dotted_name(call.func) or ""
+        return (callee.startswith(("jax.random.", "random."))
+                and callee.rsplit(".", 1)[-1] in KEY_DERIVATIONS)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        is_key = False
+        if isinstance(node.value, ast.Call) and self._is_key_producer(node.value):
+            is_key = True
+        elif (isinstance(node.value, ast.Subscript)
+              and isinstance(node.value.value, ast.Name)
+              and node.value.value.id in self.key_vars):
+            is_key = True
+        elif (isinstance(node.value, ast.Name)
+              and node.value.id in self.key_vars):
+            is_key = True
+        for tgt in node.targets:
+            names = []
+            if isinstance(tgt, ast.Name):
+                names = [tgt.id]
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                names = [e.id for e in tgt.elts if isinstance(e, ast.Name)]
+            for name in names:
+                # rebinding resets consumption for that identity
+                for k in [k for k in self.counts if k[0] == name]:
+                    self.counts.pop(k)
+                if is_key:
+                    self.key_vars.add(name)
+                    if self.loop_depth:
+                        self.defined_in_loop.add(name)
+
+    def _sink(self, key_expr: ast.AST, node: ast.AST, what: str) -> None:
+        kid = _key_id(key_expr)
+        if kid is None or kid[0] not in self.key_vars:
+            return
+        if self.loop_depth and kid[0] not in self.defined_in_loop:
+            self.findings.append(_finding(
+                self.mod, "RPR002", node,
+                f"key '{kid[0]}' consumed by {what} inside a loop without a "
+                f"per-iteration split/fold_in", self.fn.qualname))
+            return
+        self.counts[kid] = self.counts.get(kid, 0) + 1
+        if self.counts[kid] == 2:
+            label = kid[0] if kid[1] is None else f"{kid[0]}[{kid[1]}]"
+            self.findings.append(_finding(
+                self.mod, "RPR002", node,
+                f"key '{label}' consumed twice (second sink: {what}) without "
+                f"an intervening split/fold_in", self.fn.qualname))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        callee = dotted_name(node.func) or ""
+        if callee.startswith(("jax.random.", "random.")):
+            leaf = callee.rsplit(".", 1)[-1]
+            if leaf not in KEY_DERIVATIONS and node.args:
+                self._sink(node.args[0], node, f"jax.random.{leaf}")
+            return
+        for kw in node.keywords:
+            if kw.arg == "key":
+                self._sink(kw.value, node, callee or "call")
+
+    def visit_If(self, node: ast.If) -> None:
+        # exclusive branches: each starts from the pre-branch counts and
+        # the merged state keeps the per-key max
+        base = dict(self.counts)
+        branch_counts = []
+        for body in (node.body, node.orelse):
+            self.counts = dict(base)
+            for stmt in body:
+                self.visit(stmt)
+            branch_counts.append(self.counts)
+        merged = dict(base)
+        for bc in branch_counts:
+            for k, v in bc.items():
+                merged[k] = max(merged.get(k, 0), v)
+        self.counts = merged
+
+    def _visit_loop(self, node) -> None:
+        self.loop_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.loop_depth -= 1
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._visit_loop(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._visit_loop(node)
+
+    def visit_FunctionDef(self, node) -> None:
+        if node is not self.fn.node:
+            return            # nested defs get their own FunctionContext
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def rule_rpr002(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in mod.functions:
+        walker = _KeyReuse(mod, fn)
+        walker.visit(fn.node)
+        out.extend(walker.findings)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPR003 pytree-meta-mismatch
+# ---------------------------------------------------------------------------
+
+def _self_data_fields(expr: ast.AST, data_fields: Set[str]) -> List[str]:
+    hits = []
+    for node in ast.walk(expr):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and node.attr in data_fields):
+            hits.append(node.attr)
+    return hits
+
+
+def _isinstance_guarded_fields(test: ast.AST,
+                               data_fields: Set[str]) -> Set[str]:
+    """Fields F for which ``test`` is an ``isinstance(self.F, ...)`` check
+    — the repo's sanctioned "only enforceable on concrete params" guard
+    (isinstance on a tracer is False, never a concretization error)."""
+    out: Set[str] = set()
+    for node in ast.walk(test):
+        if (isinstance(node, ast.Call)
+                and dotted_name(node.func) == "isinstance" and node.args):
+            arg = node.args[0]
+            if (isinstance(arg, ast.Attribute)
+                    and isinstance(arg.value, ast.Name)
+                    and arg.value.id == "self" and arg.attr in data_fields):
+                out.add(arg.attr)
+    return out
+
+
+def rule_rpr003(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+
+    def emit(fn: FunctionContext, node: ast.AST, test: ast.AST,
+             data: Set[str], concrete: Set[str]) -> None:
+        if any(isinstance(n, ast.Call)
+               and dotted_name(n.func) == "isinstance"
+               for n in ast.walk(test)):
+            return                    # the guard itself is always safe
+        for field in _self_data_fields(test, data - concrete):
+            out.append(_finding(
+                mod, "RPR003", node,
+                f"'{field}' is a pytree data field (leaf) of "
+                f"{fn.registration.class_name} but is Python-"
+                f"branched on; move it to meta_fields, branch with "
+                f"jnp.where/lax.cond, or guard with isinstance",
+                fn.qualname))
+
+    def walk(fn: FunctionContext, node: ast.AST, data: Set[str],
+             concrete: Set[str]) -> None:
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)) and node is not fn.node):
+            return                    # nested defs have their own context
+        if isinstance(node, ast.If):
+            emit(fn, node, node.test, data, concrete)
+            inner = concrete | _isinstance_guarded_fields(node.test, data)
+            for stmt in node.body:
+                walk(fn, stmt, data, inner)
+            for stmt in node.orelse:
+                walk(fn, stmt, data, concrete)
+            return
+        if isinstance(node, (ast.While, ast.IfExp)):
+            emit(fn, node, node.test, data, concrete)
+        elif isinstance(node, ast.Assert):
+            emit(fn, node, node.test, data, concrete)
+        elif isinstance(node, ast.comprehension):
+            for t in node.ifs:
+                emit(fn, node, t, data, concrete)
+        for child in ast.iter_child_nodes(node):
+            walk(fn, child, data, concrete)
+
+    for fn in mod.functions:
+        if fn.registration is None:
+            continue
+        data = set(fn.registration.data_fields)
+        walk(fn, fn.node, data, set())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPR004 f32-long-axis-accumulation (AST tier; exact lengths are Tier 2)
+# ---------------------------------------------------------------------------
+
+def _has_f64_dtype(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "dtype" and (dotted_name(kw.value) or "") in F64_NAMES:
+            return True
+    return False
+
+
+def rule_rpr004(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in mod.functions:
+        for node in walk_shallow(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if callee in CUMSUM_CALLS and not _has_f64_dtype(node):
+                out.append(_finding(
+                    mod, "RPR004", node,
+                    f"{callee}() without f64 promotion — sequential f32 "
+                    f"prefix sums over sample-length axes lose low bits "
+                    f"(PR-3 class); promote, segment, or baseline with "
+                    f"justification", fn.qualname))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPR005 python-branch-on-tracer
+# ---------------------------------------------------------------------------
+
+def rule_rpr005(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in mod.functions:
+        if not fn.is_traced:
+            continue
+        tv = TracedVars(fn, _module_returns(mod))
+        for node in walk_shallow(fn.node):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                if expr_traced(node.test, tv):
+                    kind = type(node).__name__.lower()
+                    out.append(_finding(
+                        mod, "RPR005", node,
+                        f"Python {kind} on a traced value inside traced "
+                        f"function; use jnp.where / lax.cond / lax.select",
+                        fn.qualname))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPR006 mutable-default-in-pytree-dataclass
+# ---------------------------------------------------------------------------
+
+_ARRAY_CTORS = ("np.", "numpy.", "jnp.", "jax.numpy.")
+
+
+def rule_rpr006(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not (is_dataclass_def(node) or node.name in mod.registrations):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign) and stmt.value is not None):
+                continue
+            bad = None
+            if isinstance(stmt.value, (ast.List, ast.Dict, ast.Set)):
+                bad = "mutable literal"
+            elif isinstance(stmt.value, ast.Call):
+                callee = dotted_name(stmt.value.func) or ""
+                if callee.startswith(_ARRAY_CTORS):
+                    bad = f"array constructor {callee}()"
+            if bad:
+                field = (stmt.target.id if isinstance(stmt.target, ast.Name)
+                         else "<field>")
+                out.append(_finding(
+                    mod, "RPR006", stmt,
+                    f"field '{field}' defaults to a {bad}, shared across "
+                    f"every instance (and aliased across stacked pytree "
+                    f"configs); use dataclasses.field(default_factory=...)",
+                    node.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+RULES: Dict[str, Callable[[ModuleContext], List[Finding]]] = {
+    "RPR001": rule_rpr001,
+    "RPR002": rule_rpr002,
+    "RPR003": rule_rpr003,
+    "RPR004": rule_rpr004,
+    "RPR005": rule_rpr005,
+    "RPR006": rule_rpr006,
+}
+
+
+def lint_source(src: str, path: str,
+                rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the rule catalog over one file's source text."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [Finding(rule="RPR000", path=path, line=exc.lineno or 0,
+                        message=f"syntax error: {exc.msg}",
+                        severity="error", context="", tier="ast")]
+    regs = find_registrations(tree)
+    mod = ModuleContext(path=path, tree=tree, registrations=regs,
+                        functions=collect_functions(tree, regs))
+    out: List[Finding] = []
+    for rule_id in (rules or RULES):
+        out.extend(RULES[rule_id](mod))
+    return out
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = [d for d in dirs if not d.startswith((".", "__pycache"))]
+            files.extend(os.path.join(root, n) for n in names
+                         if n.endswith(".py"))
+    return sorted(files)
+
+
+def lint_paths(paths: Sequence[str], root: str,
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every .py under ``paths``; finding paths are ``root``-relative."""
+    out: List[Finding] = []
+    for fp in iter_python_files(paths):
+        with open(fp) as fh:
+            src = fh.read()
+        rel = os.path.relpath(os.path.abspath(fp), root).replace(os.sep, "/")
+        out.extend(lint_source(src, rel, rules))
+    return out

@@ -1,0 +1,466 @@
+"""repro-lint: fixture snippets per Tier-1 rule, the Tier-2 PR-3
+regression (deliberately reverted oracle re-detected), the recompile
+gate, Tier-3 kernel-geometry checks, baseline semantics, and the CLI
+exit contract."""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis.findings import (Baseline, Finding, apply_baseline,
+                                     sort_findings)
+from repro.analysis.rules import RULE_CATALOG, lint_source
+
+
+def lint(src, rules=None):
+    return lint_source(textwrap.dedent(src), "fixture.py", rules)
+
+
+def hits(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: each rule fires exactly where expected; clean twins pass
+# ---------------------------------------------------------------------------
+
+def test_rpr001_host_sync_fires_on_traced_value():
+    found = lint("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x: jnp.ndarray):
+            y = jnp.sum(x)
+            return float(y)
+    """, rules=["RPR001"])
+    assert [f.line for f in hits(found, "RPR001")] == [7]
+    assert hits(found, "RPR001")[0].context == "f"
+
+
+def test_rpr001_item_and_asarray_fire_static_casts_do_not():
+    found = lint("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def f(x: jnp.ndarray, win: int):
+            n = x.shape[0]            # static: .shape escape hatch
+            w = int(n // win)          # static arithmetic, no finding
+            a = x.sum().item()         # line 9: host sync
+            b = np.asarray(x * 2)      # line 10: host materialize
+            return a, b, w
+    """, rules=["RPR001"])
+    assert sorted(f.line for f in hits(found, "RPR001")) == [9, 10]
+
+
+def test_rpr001_clean_traced_function_passes():
+    found = lint("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x: jnp.ndarray):
+            return jnp.sqrt(jnp.sum(x * x))
+    """, rules=["RPR001"])
+    assert found == []
+
+
+def test_rpr002_key_reuse_fires_split_does_not():
+    found = lint("""
+        import jax
+
+        def sample(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))   # line 6: reuse
+            return a + b
+
+        def sample_ok(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (4,))
+            b = jax.random.uniform(k2, (4,))
+            return a + b
+    """, rules=["RPR002"])
+    got = hits(found, "RPR002")
+    assert [f.line for f in got] == [6]
+    assert got[0].context == "sample"
+
+
+def test_rpr002_loop_reuse_fires_per_iteration_fold_in_does_not():
+    found = lint("""
+        import jax
+
+        def bad(key, n):
+            out = []
+            for i in range(n):
+                out.append(jax.random.normal(key, (2,)))   # line 7
+            return out
+
+        def good(key, n):
+            out = []
+            for i in range(n):
+                k = jax.random.fold_in(key, i)
+                out.append(jax.random.normal(k, (2,)))
+            return out
+    """, rules=["RPR002"])
+    got = hits(found, "RPR002")
+    assert [f.line for f in got] == [7]
+    assert "loop" in got[0].message
+
+
+def test_rpr003_branch_on_data_field_fires_meta_and_guard_do_not():
+    found = lint("""
+        import dataclasses
+        from repro.core.smoothing.base import register_mitigation
+
+        @dataclasses.dataclass(frozen=True)
+        class M:
+            alpha: float = 0.5
+            use_fast: bool = True
+
+            def apply_jax(self, w, dt):
+                if self.alpha > 0:                 # line 11: leaf branch
+                    w = w * self.alpha
+                if self.use_fast:                  # meta: fine
+                    w = w + 1.0
+                if isinstance(self.alpha, float):  # guard itself: fine
+                    assert self.alpha < 1.0        # guarded: fine
+                return w
+
+        register_mitigation(M, data_fields=("alpha",),
+                            meta_fields=("use_fast",))
+    """, rules=["RPR003"])
+    got = hits(found, "RPR003")
+    assert [f.line for f in got] == [11]
+    assert "'alpha'" in got[0].message
+
+
+def test_rpr004_cumsum_fires_f64_promotion_does_not():
+    found = lint("""
+        import jax.numpy as jnp
+
+        def power_profile(x):
+            cs = jnp.cumsum(x)                        # line 5
+            safe = jnp.cumsum(x, dtype=jnp.float64)   # promoted: fine
+            return cs, safe
+    """, rules=["RPR004"])
+    assert [f.line for f in hits(found, "RPR004")] == [5]
+
+
+def test_rpr005_branch_on_tracer_fires_shape_branch_does_not():
+    found = lint("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x: jnp.ndarray, win: int):
+            if x.shape[0] % win:      # static shape arithmetic: fine
+                x = x[:-1]
+            m = jnp.mean(x)
+            if m > 0:                  # line 9: tracer branch
+                x = x - m
+            return x
+    """, rules=["RPR005"])
+    got = hits(found, "RPR005")
+    assert [f.line for f in got] == [9]
+
+
+def test_rpr005_respects_static_argnames():
+    found = lint("""
+        import functools, jax, jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x: jnp.ndarray, mode: jnp.ndarray):
+            if mode:                   # static_argnames: fine
+                return x * 2
+            return x
+    """, rules=["RPR005"])
+    assert found == []
+
+
+def test_rpr005_tuple_unpack_return_annotation_untaints_host_part():
+    """``freqs, mag = spectrum_jax(...)`` with a same-module
+    ``-> Tuple[np.ndarray, jnp.ndarray]`` annotation: only ``mag`` is
+    traced, so branching on the host ``freqs`` mask is fine while
+    branching on ``mag`` still fires (the spectrum.py shape)."""
+    found = lint("""
+        from typing import Tuple
+        import numpy as np
+        import jax.numpy as jnp
+
+        def spectrum_jax(x: jnp.ndarray, dt: float
+                         ) -> Tuple[np.ndarray, jnp.ndarray]:
+            freqs = np.fft.rfftfreq(x.shape[-1], dt)
+            return freqs, jnp.abs(jnp.fft.rfft(x))
+
+        def band_jax(x: jnp.ndarray, lo: float, hi: float):
+            freqs, mag = spectrum_jax(x, 0.01)
+            sel = (freqs >= lo) & (freqs <= hi)
+            if not sel.any():              # host-side mask: fine
+                return jnp.asarray(0.0)
+            if mag.max() > 0:              # line 16: tracer branch
+                return mag[sel].max()
+            return jnp.asarray(0.0)
+    """, rules=["RPR005"])
+    assert [f.line for f in hits(found, "RPR005")] == [16]
+
+
+def test_rpr006_mutable_default_fires_factory_does_not():
+    found = lint("""
+        import dataclasses
+        import jax.numpy as jnp
+
+        @dataclasses.dataclass
+        class Cfg:
+            freqs: list = [0.5, 1.0]                  # line 7
+            table: jnp.ndarray = jnp.zeros((4,))      # line 8
+            ok: tuple = (0.5, 1.0)
+            also_ok: list = dataclasses.field(default_factory=list)
+    """, rules=["RPR006"])
+    assert sorted(f.line for f in hits(found, "RPR006")) == [7, 8]
+
+
+def test_syntax_error_reports_rpr000():
+    found = lint("def broken(:\n")
+    assert [f.rule for f in found] == ["RPR000"]
+
+
+# ---------------------------------------------------------------------------
+# baseline semantics
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppresses_by_context_and_reports_stale():
+    f1 = Finding("RPR004", "a.py", 10, "m", "warning", context="f")
+    f2 = Finding("RPR004", "a.py", 99, "m", "warning", context="f")
+    f3 = Finding("RPR004", "b.py", 10, "m", "warning", context="g")
+    bl = Baseline([
+        {"rule": "RPR004", "path": "a.py", "context": "f",
+         "justification": "segmented"},
+        {"rule": "RPR001", "path": "zz.py", "context": "gone",
+         "justification": "stale"},
+    ])
+    active, suppressed = apply_baseline([f1, f2, f3], bl)
+    # line-number independent: both a.py findings suppressed by one entry
+    assert active == [f3]
+    assert len(suppressed) == 2
+    assert [e["context"] for e in bl.unused()] == ["gone"]
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"entries": [
+        {"rule": "RPR004", "path": "a.py", "context": "f"}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(str(p))
+
+
+def test_sort_findings_stable_order():
+    fs = [Finding("RPR005", "b.py", 2, "m"), Finding("RPR001", "a.py", 9, "m"),
+          Finding("RPR001", "a.py", 3, "m")]
+    assert [(f.path, f.line) for f in sort_findings(fs)] == [
+        ("a.py", 3), ("a.py", 9), ("b.py", 2)]
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: the PR-3 regression oracle + clean registered paths
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_tier_redetects_pr3_reverted_oracle():
+    """Revert the PR-3 fix (drop mean removal, keep the trace-length
+    cumsum) and the long-axis analyzer must flag it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_checks import check_jaxpr
+
+    def reverted_sliding_bin_power(x, dt, freqs, win):
+        # sliding_bin_power_jnp minus the xc = x - mean(x) step: the
+        # exact pre-PR-3 shape — full-trace f32/c64 prefix sums on
+        # MW-scale data
+        t = jnp.arange(x.shape[0]) * dt
+        ph = jnp.exp(-2j * jnp.pi * jnp.asarray(freqs)[None, :]
+                     * t[:, None]).astype(jnp.complex64)
+        cs = jnp.cumsum(x[:, None] * ph, axis=0)
+        w = cs.at[win:].set(cs[win:] - cs[:-win])
+        denom = jnp.minimum(jnp.arange(x.shape[0]) + 1, win)
+        return 2.0 * jnp.abs(w) / denom[:, None]
+
+    x = jnp.zeros((20_000,), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda x: reverted_sliding_bin_power(x, 0.001, (0.5, 1.0, 2.0, 9.0),
+                                             2000))(x)
+    got = check_jaxpr(closed, name="reverted_oracle")
+    assert any(f.rule == "RPR101" and "cumsum" in f.message for f in got)
+    # while the product path (segmented Pallas monitor) stays clean
+    from repro.analysis.jaxpr_checks import trace_entry, check_jaxpr as cj
+    from repro.analysis.registry import ENTRY_BY_NAME
+    ep = ENTRY_BY_NAME["kernels.sliding_bin_power"]
+    assert cj(trace_entry(ep), name=ep.name) == []
+
+
+def test_jaxpr_tier_registered_serve_paths_clean():
+    from repro.analysis.jaxpr_checks import check_entry_points
+    got = check_entry_points(["serve.fingerprint", "serve.warmstart_mlp",
+                              "control.detector_step"])
+    assert got == []
+
+
+def test_jaxpr_tier_flags_host_callback():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_checks import check_jaxpr
+
+    def f(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((4,), jnp.float32))
+    got = check_jaxpr(closed, name="cb")
+    assert [f.rule for f in got] == ["RPR102"]
+
+
+def test_primitive_counts_deterministic_and_diff_names_drift():
+    from repro.analysis.jaxpr_checks import primitive_counts, primitive_diff
+    from repro.analysis.registry import ENTRY_BY_NAME
+
+    ep = ENTRY_BY_NAME["serve.fingerprint"]
+    c1, c2 = primitive_counts(ep), primitive_counts(ep)
+    assert c1 == c2 and c1["dot_general"] == 2
+    diff = primitive_diff(dict(c1), {**c1, "dot_general": 3, "exp": 1})
+    assert any(line.startswith("dot_general:") for line in diff)
+    assert any(line.startswith("exp:") for line in diff)
+
+
+def test_recompile_gate_zero_cache_misses():
+    """Second same-shape-bucket call of every registered workload must
+    hit the jit cache (the recompile-storm gate)."""
+    from repro.analysis.jaxpr_checks import recompile_gate
+    got = recompile_gate()
+    assert got == [], "\n".join(f.render() for f in got)
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: kernel launch geometry
+# ---------------------------------------------------------------------------
+
+def test_kernel_checks_current_kernels_only_known_findings():
+    from repro.analysis.kernel_checks import check_kernels
+    got = check_kernels()
+    # the only live findings are the ROADMAP-known narrow-K layout of the
+    # sliding kernel (baselined in lint_baseline.json)
+    assert all(f.rule == "RPR203" for f in got), \
+        "\n".join(f.render() for f in got)
+    assert {f.context for f in got} == {
+        "goertzel.sliding:in1", "goertzel.sliding:in2",
+        "goertzel.sliding:out0"}
+
+
+def test_kernel_checks_flag_bad_geometry():
+    import jax
+
+    from repro.analysis.kernel_checks import (KernelCase, PallasCapture,
+                                              check_capture)
+
+    class FakeSpec:
+        def __init__(self, block_shape, index_map):
+            self.block_shape = block_shape
+            self.index_map = index_map
+
+    case = KernelCase("fake.bad", "fake.py", lambda: None)
+    cap = PallasCapture(
+        grid=(3,),
+        in_specs=(FakeSpec((48, 2000), lambda i: (i, 0)),),   # 100 % 48 != 0
+        out_specs=(FakeSpec((16, 128), lambda i: (0, 0)),),   # all cells -> 0
+        out_shapes=(jax.ShapeDtypeStruct((48, 128), "float32"),),
+        scratch_shapes=(),
+        operands=(jax.ShapeDtypeStruct((100, 2000), "float32"),),
+    )
+    got = check_capture(case, cap)
+    rules = {f.rule for f in got}
+    assert "RPR201" in rules          # non-dividing block
+    assert "RPR202" in rules          # coverage gap + duplicate writes
+    msgs = " ".join(f.message for f in got)
+    assert "never written" in msgs and "multiple grid cells" in msgs
+
+
+def test_kernel_checks_vmem_budget():
+    import jax
+
+    from repro.analysis.kernel_checks import (KernelCase, PallasCapture,
+                                              check_capture)
+
+    class FakeSpec:
+        def __init__(self, block_shape, index_map):
+            self.block_shape = block_shape
+            self.index_map = index_map
+
+    case = KernelCase("fake.huge", "fake.py", lambda: None)
+    cap = PallasCapture(
+        grid=(1,),
+        in_specs=(FakeSpec((8192, 8192), lambda i: (0, 0)),),  # 256 MiB f32
+        out_specs=(FakeSpec((8, 128), lambda i: (0, 0)),),
+        out_shapes=(jax.ShapeDtypeStruct((8, 128), "float32"),),
+        scratch_shapes=(),
+        operands=(jax.ShapeDtypeStruct((8192, 8192), "float32"),),
+    )
+    got = check_capture(case, cap)
+    assert any(f.rule == "RPR205" for f in got)
+
+
+# ---------------------------------------------------------------------------
+# dead-module report + CLI contract
+# ---------------------------------------------------------------------------
+
+def test_dead_module_report_clean_outside_launch_and_models():
+    from pathlib import Path
+
+    from repro.analysis.deadmods import check_dead_modules
+    repo_root = Path(__file__).resolve().parents[1]
+    got = check_dead_modules(repo_root)
+    errors = [f for f in got if f.severity == "error"]
+    assert errors == [], "\n".join(f.render() for f in errors)
+    # launch/ entries stay visible but informational
+    assert all(f.context.startswith(("repro.launch", "repro.models"))
+               for f in got)
+
+
+def test_cli_exit_one_on_injected_bug_zero_when_baselined(tmp_path, capsys):
+    from repro.analysis.cli import main
+
+    pkg = tmp_path / "src"
+    pkg.mkdir()
+    bad = pkg / "buggy.py"
+    bad.write_text(textwrap.dedent("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x: jnp.ndarray):
+            return float(jnp.sum(x))
+    """))
+    bl = tmp_path / "bl.json"
+
+    rc = main([str(pkg), "--root", str(tmp_path), "--tiers", "ast",
+               "--baseline", str(bl), "--format", "json"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert [f["rule"] for f in report["findings"]] == ["RPR001"]
+    assert report["findings"][0]["path"] == "src/buggy.py"
+
+    bl.write_text(json.dumps({"version": 1, "entries": [
+        {"rule": "RPR001", "path": "src/buggy.py", "context": "f",
+         "justification": "fixture: intentional"}]}))
+    rc = main([str(pkg), "--root", str(tmp_path), "--tiers", "ast",
+               "--baseline", str(bl)])
+    capsys.readouterr()
+    assert rc == 0
+
+
+def test_cli_repo_ast_tier_clean_under_checked_in_baseline(capsys):
+    """The shipped tree + shipped baseline lint clean (the CI invariant,
+    ast tier; the full-tier run is exercised in CI itself)."""
+    from pathlib import Path
+
+    from repro.analysis.cli import main
+    repo_root = Path(__file__).resolve().parents[1]
+    rc = main([str(repo_root / "src" / "repro"), "--root", str(repo_root),
+               "--tiers", "ast"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
