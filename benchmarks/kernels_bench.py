@@ -1,14 +1,26 @@
 """Kernel micro-benchmarks (Sec. IV-A ballast / IV-E backstop hot paths).
 
-The headline measurement is the telemetry backstop's sliding monitor:
-the streaming Pallas sliding-Goertzel kernel vs the complex-cumsum
-oracles on a 1e6-sample MW-scale trace (throughput in samples/s).  The
-kernel runs in interpret mode on CPU — the same configuration the
-product path uses off-TPU — and still wins because it replaces the
-oracles' per-sample phase generation (n*K complex exponentials) with
-small host-precomputed [win, K] tables and segment-local prefix sums.
-Writes BENCH_kernels.json; ``--smoke`` runs a small trace, checks
-ref-vs-Pallas parity and skips the artifact (the CI mode).
+The headline measurement is the telemetry backstop's sliding monitor on
+a 1e6-sample MW-scale trace, as two A/Bs:
+
+- **layout A/B** — the v1 (bin-minor ``[win, K]``) vs v2 (lane-major
+  ``[K, win]``) Pallas kernels, amplitudes materialized in both, vs the
+  complex-cumsum jnp oracle.
+- **fusion A/B** — the fused v2 monitor (worst bin + escalation class
+  reduced in VMEM, blocked escalation scan) vs the two-pass baseline it
+  replaced (materialize every ``[n, K]`` amplitude, then fold the
+  per-sample escalation machine in a trace-length ``lax.scan``).
+
+A third section times the online serve-path step: the fused detector
+per 500-sample tick vs the bare amps-materializing path and vs the
+like-for-like two-pass serve path (amps + the consumer-side
+amps -> escalation fold the backstop ran before fusion).
+
+All timings are device-synchronized (``block_until_ready`` inside the
+timed closure), best-of-5 after a warm-up call.  The kernels run in
+interpret mode on CPU — the same configuration the product path uses
+off-TPU.  Writes BENCH_kernels.json; ``--smoke`` runs a small trace,
+checks ref-vs-Pallas parity and skips the artifact (the CI mode).
 
 CPU wall times for the ballast/goertzel sections are for harness
 completeness only — TPU throughput is derived from the FLOP/byte model
@@ -19,6 +31,7 @@ printed alongside.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import time
@@ -28,9 +41,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, us_per_call
+from repro.core.telemetry import (escalation_classify, escalation_init,
+                                  escalation_scan, escalation_step)
+from repro.core.telemetry import warmup_scale
 from repro.kernels.ballast.ops import ballast_burn, ballast_flops
 from repro.kernels.ballast.ref import ballast_ref
-from repro.kernels.goertzel.ops import sliding_bin_power
+from repro.kernels.goertzel.goertzel import sliding_goertzel_pallas
+from repro.kernels.goertzel.ops import (_phase_tables, sliding_bin_power,
+                                        sliding_monitor_fused)
 from repro.kernels.goertzel.ref import (goertzel_ref, sliding_bin_power_jnp,
                                         sliding_bin_power_ref)
 
@@ -49,19 +67,76 @@ def _best_of(fn, n=5):
     return best
 
 
+@functools.partial(jax.jit, static_argnames=("dt", "freqs", "win",
+                                             "interpret"))
+def _sliding_v1(x, *, dt, freqs, win, interpret):
+    """The v1 bin-minor layout at the same call convention as the v2
+    product path (mean removal, zero-pad, caller-applied warm-up)."""
+    n = x.shape[0]
+    xc = x - jnp.mean(x)
+    S = -(-n // win)
+    pad = S * win - n
+    if pad:
+        xc = jnp.concatenate([xc, jnp.zeros((pad,), jnp.float32)])
+    cosp, sinp, rot = (jnp.asarray(t) for t in _phase_tables(freqs, dt, win))
+    raw = sliding_goertzel_pallas(xc.reshape(S, win), cosp, sinp, rot,
+                                  block_s=1, interpret=interpret)
+    scale = warmup_scale(jnp.arange(n, dtype=jnp.float32), win)
+    return raw.reshape(S * win, -1)[:n] * scale[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "freqs", "win",
+                                             "sustain_n", "cool_n",
+                                             "interpret", "use_jnp_amps"))
+def _monitor_two_pass(x, *, dt, freqs, win, threshold, release,
+                      sustain_n, cool_n, interpret, use_jnp_amps=False):
+    """The pre-fusion monitor: materialize every [n, K] amplitude, reduce
+    to the worst bin, then fold the per-sample escalation machine in a
+    trace-length ``lax.scan``.  ``use_jnp_amps=True`` sources amplitudes
+    from the jnp cumsum oracle — the PR-5 "jnp path" the headline
+    speedup is measured against; ``False`` uses the v2 Pallas kernel, so
+    the fused path's win over it is attributable to fusion alone (and
+    worst/levels/detect are bitwise comparable)."""
+    if use_jnp_amps:
+        amps = sliding_bin_power_jnp(x, dt, freqs, win)
+    else:
+        amps = sliding_bin_power(x, dt, freqs, win=win, interpret=interpret)
+    worst = amps.max(axis=1)
+    n = x.shape[0]
+
+    def body(carry, inp):
+        amp, idx = inp
+        return escalation_step(carry, amp, idx, threshold=threshold,
+                               release=release, win=win, n=n,
+                               sustain_n=sustain_n, cool_n=cool_n)
+
+    (_, _, _, detect), levels = jax.lax.scan(
+        body, escalation_init(), (worst, jnp.arange(n, dtype=jnp.int32)))
+    return worst, levels, detect
+
+
 def sliding_monitor_bench(n: int, dt: float, win: int, smoke: bool) -> dict:
-    """Sliding-monitor throughput, ref vs Pallas, on an MW-scale trace
-    (1e5 W line on a 5e8 W DC offset — the acceptance scenario)."""
+    """Sliding-monitor throughput on an MW-scale trace (1e5 W line on a
+    5e8 W DC offset — the acceptance scenario): layout A/B (v1 vs v2
+    amps kernels vs the cumsum oracles) and fusion A/B (fused monitor vs
+    the amps-materializing two-pass monitor)."""
     t = np.arange(n) * dt
     xnp = 5e8 + 1e5 * np.sin(2 * np.pi * 2.0 * t)
     x = jnp.asarray(xnp, jnp.float32)
     interpret = jax.default_backend() != "tpu"
+    thr, rel = 2e5, 1.5e5          # above the 1e5 W line: machine armed,
+    sustain_n = max(win // 40, 1)  # classify path fully exercised
+    cool_n = max(win // 25, 1)
 
+    # --- layout A/B: amplitudes materialized --------------------------------
     pallas = lambda: sliding_bin_power(
         x, dt, SLIDING_FREQS, win=win, interpret=interpret).block_until_ready()
+    v1 = lambda: _sliding_v1(x, dt=dt, freqs=SLIDING_FREQS, win=win,
+                             interpret=interpret).block_until_ready()
     jnp_oracle = jax.jit(
         lambda x: sliding_bin_power_jnp(x, dt, SLIDING_FREQS, win))
     t_pallas = _best_of(pallas)
+    t_v1 = _best_of(v1)
     t_jnp = _best_of(lambda: jnp_oracle(x).block_until_ready())
     # the float64 cumsum oracle: one pass is enough (it is the slow one)
     t0 = time.perf_counter()
@@ -73,28 +148,147 @@ def sliding_monitor_bench(n: int, dt: float, win: int, smoke: bool) -> dict:
                                        interpret=interpret))
     err = np.abs(out - ref).max() / 1e5
     assert err < 5e-3, f"sliding kernel diverged from f64 oracle: {err}"
+    err_v1 = np.abs(np.asarray(_sliding_v1(
+        x, dt=dt, freqs=SLIDING_FREQS, win=win,
+        interpret=interpret)) - ref).max() / 1e5
+    assert err_v1 < 5e-3, f"v1 kernel diverged from f64 oracle: {err_v1}"
+
+    # --- fusion A/B: fused monitor vs two-pass ------------------------------
+    fused = lambda use_pallas: sliding_monitor_fused(
+        x, dt, SLIDING_FREQS, win=win, threshold=thr, release=rel,
+        sustain_n=sustain_n, cool_n=cool_n, interpret=interpret,
+        use_pallas=use_pallas)
+    t_fused = _best_of(lambda: fused(True)[0].block_until_ready())
+    t_fused_jnp = _best_of(lambda: fused(False)[0].block_until_ready())
+    two_pass = lambda use_jnp_amps: _monitor_two_pass(
+        x, dt=dt, freqs=SLIDING_FREQS, win=win, threshold=thr, release=rel,
+        sustain_n=sustain_n, cool_n=cool_n, interpret=interpret,
+        use_jnp_amps=use_jnp_amps)
+    t_two_pass = _best_of(lambda: two_pass(False)[0].block_until_ready(), n=3)
+    t_jnp_path = _best_of(lambda: two_pass(True)[0].block_until_ready(), n=3)
+
+    # fusion parity: fused == two-pass on worst/levels/detect, bitwise
+    # (same v2 amps source, so any difference is the fusion itself)
+    wf, lf, df, _ = fused(True)
+    wt, lt, dtect = two_pass(False)
+    assert np.array_equal(np.asarray(wf), np.asarray(wt)), "worst diverged"
+    assert np.array_equal(np.asarray(lf), np.asarray(lt)), "levels diverged"
+    assert int(df) == int(dtect), "detect index diverged"
 
     res = {
         "n_samples": n,
         "win": win,
         "bins": len(SLIDING_FREQS),
         "pallas_ms": round(t_pallas * 1e3, 2),
+        "pallas_v1_ms": round(t_v1 * 1e3, 2),
         "ref_cumsum_f64_ms": round(t_ref * 1e3, 2),
         "jnp_cumsum_ms": round(t_jnp * 1e3, 2),
         "samples_per_s_pallas": round(n / t_pallas),
         "samples_per_s_ref_cumsum": round(n / t_ref),
         "speedup_vs_ref_cumsum": round(t_ref / t_pallas, 1),
         "speedup_vs_jnp_cumsum": round(t_jnp / t_pallas, 1),
+        "speedup_v2_vs_v1": round(t_v1 / t_pallas, 2),
         "max_err_vs_f64_frac_of_amp": float(f"{err:.2e}"),
+        "fused_monitor": {
+            "pallas_ms": round(t_fused * 1e3, 2),
+            "jnp_scan_mirror_ms": round(t_fused_jnp * 1e3, 2),
+            "two_pass_pallas_ms": round(t_two_pass * 1e3, 2),
+            "jnp_path_ms": round(t_jnp_path * 1e3, 2),
+            "samples_per_s_fused": round(n / t_fused),
+            "speedup_fused_vs_two_pass": round(t_two_pass / t_fused, 1),
+            "speedup_fused_vs_jnp_path": round(t_jnp_path / t_fused, 1),
+        },
     }
     emit("kernels/sliding_pallas", t_pallas * 1e6, {
         "msamples_per_s": round(n / t_pallas / 1e6, 1),
         "speedup_vs_ref_cumsum": res["speedup_vs_ref_cumsum"],
-        "speedup_vs_jnp_cumsum": res["speedup_vs_jnp_cumsum"]})
+        "speedup_vs_jnp_cumsum": res["speedup_vs_jnp_cumsum"],
+        "speedup_v2_vs_v1": res["speedup_v2_vs_v1"]})
+    emit("kernels/monitor_fused", t_fused * 1e6, {
+        "msamples_per_s": round(n / t_fused / 1e6, 1),
+        "speedup_vs_two_pass":
+            res["fused_monitor"]["speedup_fused_vs_two_pass"],
+        "speedup_vs_jnp_path":
+            res["fused_monitor"]["speedup_fused_vs_jnp_path"]})
     if not smoke and res["speedup_vs_ref_cumsum"] < 5.0:
         print(f"# WARNING: sliding Pallas only "
               f"{res['speedup_vs_ref_cumsum']}x the cumsum oracle on this "
               "machine (target >=5x)")
+    if not smoke and res["fused_monitor"]["speedup_fused_vs_jnp_path"] < 3.0:
+        print(f"# WARNING: fused monitor only "
+              f"{res['fused_monitor']['speedup_fused_vs_jnp_path']}x the "
+              "jnp path on this machine (target >=3x)")
+    return res
+
+
+@functools.partial(jax.jit, static_argnames=("win", "sustain_n", "cool_n",
+                                             "max_level"))
+def _consumer_escalation(amps, idx0, esc, threshold, release, *, win,
+                         sustain_n, cool_n, max_level):
+    """The consumer-side amps -> escalation fold the serve path ran
+    before in-kernel fusion: reduce the tick's [m, K] amplitude block to
+    the worst bin, classify, and advance the shared machine.  Timed as
+    the two-pass arm of the detector A/B."""
+    worst = amps.max(axis=1)
+    m = worst.shape[0]
+    idx = idx0 + jnp.arange(m, dtype=jnp.int32)
+    cls = escalation_classify(worst, idx, threshold=threshold, win=win,
+                              n=jnp.float32(jnp.inf), release=release)
+    esc2, levels = escalation_scan(cls, idx0, esc, sustain_n=sustain_n,
+                                   cool_n=cool_n, max_level=max_level)
+    return esc2, levels
+
+
+def detector_tick_bench(smoke: bool) -> dict:
+    """Per-tick cost of the online detector (the serve-path step),
+    500-sample ticks: the fused v2 kernel path vs (a) the bare
+    amps-materializing path (amplitudes only — no worst stream, no
+    escalation) and (b) the like-for-like two-pass serve path (amps path
+    + the consumer-side amps -> escalation fold the backstop ran before
+    fusion)."""
+    from repro.control.detector import OnlineGoertzelDetector
+    dt, tick = 0.001, 500
+    n_ticks = 8 if smoke else 40
+    t = np.arange((n_ticks + 2) * tick) * dt
+    x = (5e8 + 1e5 * np.sin(2 * np.pi * 2.0 * t)).astype(np.float32)
+    chunks = [x[i * tick:(i + 1) * tick] for i in range(n_ticks + 2)]
+
+    def per_tick(fused, escalate=False):
+        det = OnlineGoertzelDetector(dt, SLIDING_FREQS, window_s=2.0,
+                                     mean=float(x.mean()), fused=fused,
+                                     threshold_w=2e5, release_w=1.5e5)
+        win = det.win
+
+        def one(c):
+            frame = det.step(c)
+            if escalate:                  # two-pass: fold amps into levels
+                esc2, levels = _consumer_escalation(
+                    frame.tick_amps, np.int32(frame.sample_idx + 1 - tick),
+                    one.esc, np.float32(2e5), np.float32(1.5e5), win=win,
+                    sustain_n=det.sustain_n, cool_n=det.cool_n,
+                    max_level=det.max_level)
+                one.esc = esc2
+                np.asarray(levels)
+        one.esc = escalation_init()
+        one(chunks[0]), one(chunks[1])                    # warm the jits
+        t0 = time.perf_counter()
+        for c in chunks[2:]:
+            one(c)
+        return (time.perf_counter() - t0) / n_ticks
+    t_fused = per_tick(True)
+    t_amps = per_tick(False)
+    t_two_pass = per_tick(False, escalate=True)
+    res = {
+        "tick_samples": tick,
+        "fused_us_per_tick": round(t_fused * 1e6, 1),
+        "amps_us_per_tick": round(t_amps * 1e6, 1),
+        "two_pass_us_per_tick": round(t_two_pass * 1e6, 1),
+        "speedup_fused_vs_two_pass": round(t_two_pass / t_fused, 2),
+    }
+    emit("kernels/detector_tick", t_fused * 1e6, {
+        "amps_us_per_tick": res["amps_us_per_tick"],
+        "two_pass_us_per_tick": res["two_pass_us_per_tick"],
+        "speedup_fused_vs_two_pass": res["speedup_fused_vs_two_pass"]})
     return res
 
 
@@ -134,9 +328,12 @@ def main() -> None:
     # sliding monitor: the backstop's product hot path
     if args.smoke:
         sliding_monitor_bench(n=100_000, dt=0.001, win=2000, smoke=True)
-        print("smoke OK: sliding Pallas kernel matches the f64 cumsum oracle")
+        detector_tick_bench(smoke=True)
+        print("smoke OK: sliding v1/v2/fused kernels match the f64 cumsum "
+              "oracle and the two-pass monitor")
         return
     res = sliding_monitor_bench(n=1_000_000, dt=0.001, win=8000, smoke=False)
+    res["detector"] = detector_tick_bench(smoke=False)
     with open(OUT_PATH, "w") as fh:
         json.dump(res, fh, indent=2)
         fh.write("\n")

@@ -439,28 +439,35 @@ FREQS_NOTE = (0.5, 1.0, 2.0, 9.0)   # grid-critical bins the bench watches
 
 def kernels_section():
     """§Kernels — the telemetry backstop's sliding-Goertzel monitor on the
-    streaming Pallas kernel, numbers from BENCH_kernels.json
-    (benchmarks/kernels_bench.py)."""
+    lane-major v2 Pallas kernels, numbers from BENCH_kernels.json
+    (benchmarks/kernels_bench.py + roofline --kernels)."""
     lines = ["\n## §Kernels — sliding-Goertzel backstop monitor "
-             "(Pallas hot path)\n",
+             "(lane-major v2 Pallas hot path)\n",
              "The backstop (Sec. IV-E) watches grid-critical bins with an "
              "every-sample sliding Goertzel monitor. The product path is "
-             "`kernels/goertzel/sliding_goertzel_pallas`: the trace streams "
-             "through VMEM in window-sized segments, per-bin prefix state "
-             "restarts at every segment (hop-and-overlap) and carries across "
-             "grid cells in scratch, and each window amplitude assembles "
-             "from the current segment's head plus the previous segment's "
-             "suffix rotated by a host-precomputed phase factor. Mean "
-             "removal before accumulation keeps every partial sum at "
-             "oscillation scale — the f32-cumsum estimator it replaced "
-             "saturated warm-up windows at ~2x the DC offset and left a "
-             "~1e4 W rounding floor on the 9 Hz bin, burying the ~1e5 W "
-             "oscillations the monitor exists to catch. The kernel is the "
-             "default monitor path (`use_pallas` is a structure-static meta "
-             "field, so kernel and oracle configs batch through "
-             "`apply_batch`/`Study`; `use_pallas=False` falls back to the "
-             "corrected jnp oracle); compiled on TPU, interpret mode "
-             "elsewhere. Gold oracle: float64 `sliding_bin_power_ref`.\n"]
+             "the lane-major v2 kernel family (`kernels/goertzel`): phase "
+             "tables and resonator state live in a `[K, win]` layout (the "
+             "long window axis on TPU lanes, the handful of bins "
+             "sublane-padded), the trace streams through VMEM in "
+             "window-sized segments, per-bin prefix state restarts at every "
+             "segment (hop-and-overlap) and carries across grid cells, and "
+             "each window amplitude assembles from the current segment's "
+             "head plus the previous segment's suffix rotated by a "
+             "host-precomputed phase factor. The fused monitor variant "
+             "(`sliding_monitor_fused`) also reduces per-bin amplitudes to "
+             "the worst bin and its escalation class *inside the kernel* — "
+             "the `[n, K]` amplitude matrix never leaves VMEM — and the "
+             "blocked `core.telemetry.escalation_scan` turns classes into "
+             "levels. Mean removal before accumulation keeps every partial "
+             "sum at oscillation scale — the f32-cumsum estimator it "
+             "replaced saturated warm-up windows at ~2x the DC offset and "
+             "left a ~1e4 W rounding floor on the 9 Hz bin, burying the "
+             "~1e5 W oscillations the monitor exists to catch. Kernels "
+             "compile on TPU, interpret mode elsewhere; the structurally "
+             "identical jitted jnp mirrors are bitwise equal to the "
+             "interpret-mode kernels (the differentiable path), and the "
+             "online `carry=` API is bit-identical to one offline call. "
+             "Gold oracle: float64 `sliding_bin_power_ref`.\n"]
     bench = os.path.join(ROOT, "BENCH_kernels.json")
     if os.path.exists(bench):
         with open(bench) as fh:
@@ -468,14 +475,47 @@ def kernels_section():
         lines.append(
             f"Measured (benchmarks/kernels_bench.py, CPU interpret mode, "
             f"{b['n_samples']:.0e}-sample MW-scale trace, win={b['win']}, "
-            f"{b['bins']} bins): Pallas {b['pallas_ms']} ms "
+            f"{b['bins']} bins): v2 Pallas {b['pallas_ms']} ms "
             f"({b['samples_per_s_pallas'] / 1e6:.0f} Msamples/s) vs f64 "
             f"cumsum oracle {b['ref_cumsum_f64_ms']} ms "
-            f"(**{b['speedup_vs_ref_cumsum']}x**) and jitted jnp cumsum "
+            f"(**{b['speedup_vs_ref_cumsum']}x**), jitted jnp cumsum "
             f"mirror {b['jnp_cumsum_ms']} ms "
-            f"({b['speedup_vs_jnp_cumsum']}x); max deviation from the f64 "
-            f"oracle {b['max_err_vs_f64_frac_of_amp']:.0e} of the "
-            f"oscillation amplitude.")
+            f"({b['speedup_vs_jnp_cumsum']}x), and the bin-minor v1 layout "
+            f"{b['pallas_v1_ms']} ms ({b['speedup_v2_vs_v1']}x); max "
+            f"deviation from the f64 oracle "
+            f"{b['max_err_vs_f64_frac_of_amp']:.0e} of the oscillation "
+            f"amplitude.")
+        fm = b.get("fused_monitor")
+        if fm:
+            lines.append(
+                f"\nFused monitor (same trace): {fm['pallas_ms']} ms "
+                f"(**{fm['speedup_fused_vs_jnp_path']}x** the jnp "
+                f"fused-scan path at {fm['jnp_path_ms']} ms, "
+                f"{fm['speedup_fused_vs_two_pass']}x the two-pass "
+                f"kernel+scan path at {fm['two_pass_pallas_ms']} ms), "
+                f"bitwise equal to the two-pass escalation on "
+                f"worst/levels/detect.")
+        det = b.get("detector")
+        if det:
+            lines.append(
+                f"\nOnline detector (serve path, "
+                f"{det['tick_samples']}-sample ticks): fused "
+                f"{det['fused_us_per_tick']} µs/tick vs the prior "
+                f"amps+consumer-scan serve path at "
+                f"{det['two_pass_us_per_tick']} µs/tick (bare "
+                f"amps-materializing path {det['amps_us_per_tick']} "
+                f"µs/tick, without worst/levels).")
+        mb = b.get("measured_bandwidth")
+        if mb and "fused_achieved_gb_per_s" in mb:
+            lines.append(
+                f"\nAttribution (roofline --kernels, jaxpr-exact bytes at "
+                f"the bench shape): the fused path moves "
+                f"{mb['fused_bytes'] / 1e6:.0f} MB vs "
+                f"{mb['two_pass_jnp_bytes'] / 1e6:.0f} MB on the jnp path "
+                f"(**{mb['bytes_ratio_two_pass_over_fused']}x fewer "
+                f"bytes**) at {mb['fused_achieved_gb_per_s']} vs "
+                f"{mb['two_pass_jnp_achieved_gb_per_s']} GB/s achieved — "
+                f"the speedup is moved-bytes, not a faster pipe.")
     return "\n".join(lines)
 
 

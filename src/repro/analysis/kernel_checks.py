@@ -14,9 +14,10 @@ checked against the TPU constraints in the Pallas guide:
   index_map must tile the output exactly once: a gap is uninitialized
   output, a duplicate is a write race across grid cells.
 - **RPR203 narrow lanes** — a block whose minor (lane) dim is < 128
-  wastes (128-K)/128 of every vector register and VMEM tile.  This is
-  the ROADMAP-known sliding-Goertzel weakness (K=4 bins on lanes);
-  known cases are baselined with that justification, new ones fail.
+  wastes (128-K)/128 of every vector register and VMEM tile.  The v1
+  sliding-Goertzel layout (K=4 bins on lanes) was the ROADMAP-known
+  offender; the lane-major v2 kernels put win on lanes and retired the
+  baseline entries, so any new narrow-lane block fails outright.
 - **RPR204 sublane alignment** — f32 blocks of rank >= 2 at or above one
   (8, 128) tile should keep the second-minor dim a multiple of 8, else
   every block row pads to the next sublane boundary.
@@ -262,15 +263,30 @@ def _run_goertzel_windows():
                     jnp.zeros((4,), jnp.float32), block_w=8)
 
 
-def _run_sliding_goertzel():
+def _run_sliding_goertzel_v2():
     import jax.numpy as jnp
-    from repro.kernels.goertzel.goertzel import sliding_goertzel_pallas
-    # block_s=8 matches the production default in _sliding_bin_power_full
-    win, K = 2000, 4
-    sliding_goertzel_pallas(
-        jnp.zeros((16, win), jnp.float32), jnp.zeros((win, K), jnp.float32),
-        jnp.zeros((win, K), jnp.float32), jnp.zeros((2, K), jnp.float32),
-        block_s=8)
+    from repro.kernels.goertzel.goertzel import sliding_goertzel_v2_pallas
+    # block_s=8 matches the production default in _sliding_bin_power_full;
+    # KP=8 is K=4 padded to the f32 sublane count (lane-major [KP, win])
+    win, K, KP = 2000, 4, 8
+    tables = jnp.zeros((KP, win), jnp.float32)
+    sliding_goertzel_v2_pallas(
+        jnp.zeros((16, win), jnp.float32), tables, tables,
+        jnp.zeros((KP, 2), jnp.float32), jnp.zeros((1, 4), jnp.float32),
+        tables, tables, k=K, block_s=8)
+
+
+def _run_sliding_monitor():
+    import jax.numpy as jnp
+    from repro.kernels.goertzel.goertzel import sliding_monitor_pallas
+    # the fused monitor: same operand layout as the v2 amps kernel, plus
+    # worst/class/peak outputs reduced in VMEM
+    win, K, KP = 2000, 4, 8
+    tables = jnp.zeros((KP, win), jnp.float32)
+    sliding_monitor_pallas(
+        jnp.zeros((16, win), jnp.float32), tables, tables,
+        jnp.zeros((KP, 2), jnp.float32), jnp.zeros((1, 4), jnp.float32),
+        tables, tables, k=K, block_s=8)
 
 
 def _run_ballast():
@@ -293,8 +309,10 @@ def _run_flash():
 KERNEL_CASES: List[KernelCase] = [
     KernelCase("goertzel.windows", "src/repro/kernels/goertzel/goertzel.py",
                _run_goertzel_windows),
-    KernelCase("goertzel.sliding", "src/repro/kernels/goertzel/goertzel.py",
-               _run_sliding_goertzel),
+    KernelCase("goertzel.sliding_v2", "src/repro/kernels/goertzel/goertzel.py",
+               _run_sliding_goertzel_v2),
+    KernelCase("goertzel.monitor", "src/repro/kernels/goertzel/goertzel.py",
+               _run_sliding_monitor),
     KernelCase("ballast.gemm", "src/repro/kernels/ballast/ballast.py",
                _run_ballast),
     KernelCase("flash.fwd", "src/repro/kernels/flash/flash.py", _run_flash),

@@ -54,17 +54,30 @@ def _build_sliding_bin_power():
 
 
 def _build_detector_step():
-    """Control-plane online detector: one segment step of the carry API."""
+    """Control-plane online detector: one segment step of the carry API
+    (lane-major v2 kernel, prefix state streamed through [KP, win])."""
     import jax.numpy as jnp
-    from repro.kernels.goertzel.ops import _phase_tables, _sliding_seg
+    from repro.kernels.goertzel.ops import _phase_tables_v2, _sliding_seg_v2
     _, dt, freqs, win = _monitor_shapes()
     cosp, sinp, rot = (jnp.asarray(t) for t in
-                       _phase_tables(freqs, dt, win))
-    K = cosp.shape[1]
+                       _phase_tables_v2(freqs, dt, win))
     seg = jnp.zeros((win,), jnp.float32)
-    zeros = jnp.zeros((win, K), jnp.float32)
-    return (_sliding_seg, (seg, zeros, zeros, cosp, sinp, rot,
-                           jnp.float32(0.0)), dict(win=win))
+    zeros = jnp.zeros_like(cosp)
+    return (_sliding_seg_v2, (seg, zeros, zeros, cosp, sinp, rot,
+                              jnp.float32(0.0)),
+            dict(win=win, k=len(freqs), interpret=True))
+
+
+def _build_monitor_fused():
+    """The fused v2 monitor (backstop/detector fast path): worst bin +
+    escalation class reduced in VMEM, blocked escalation scan on top."""
+    import jax.numpy as jnp
+    from repro.kernels.goertzel.ops import _sliding_monitor_full
+    x, dt, freqs, win = _monitor_shapes()
+    return (_sliding_monitor_full,
+            (x, jnp.float32(1e6), jnp.float32(8e5)),
+            dict(dt=dt, freqs=freqs, win=win, sustain_n=50, cool_n=80,
+                 max_level=3, block_s=0, interpret=True, use_pallas=True))
 
 
 def _sim_inputs(B: int = 2, spec=None):
@@ -191,7 +204,9 @@ ENTRY_POINTS: List[EntryPoint] = [
     EntryPoint("kernels.sliding_bin_power", _build_sliding_bin_power,
                "segmented sliding-Goertzel monitor (backstop hot path)"),
     EntryPoint("control.detector_step", _build_detector_step,
-               "online monitor segment step (carry API)"),
+               "online monitor segment step (carry API, v2 kernel)"),
+    EntryPoint("kernels.monitor_fused", _build_monitor_fused,
+               "fused worst-bin + escalation monitor (v2 kernel)"),
     EntryPoint("serve.fingerprint", _build_serve_fingerprint,
                "grid-critical spectral fingerprint (serve features)"),
     EntryPoint("serve.warmstart_mlp", _build_warmstart_mlp,
@@ -220,7 +235,11 @@ def _tracked_jit_fns() -> Dict[str, object]:
         "engine._validate_vmapped": engine._validate_vmapped,
         "engine._design_eval": engine._design_eval,
         "ops._sliding_bin_power_full": ops._sliding_bin_power_full,
-        "ops._sliding_seg": ops._sliding_seg,
+        "ops._sliding_seg_v2": ops._sliding_seg_v2,
+        "ops._monitor_seg_v2": ops._monitor_seg_v2,
+        "ops._monitor_tail": ops._monitor_tail,
+        "ops._sliding_monitor_full": ops._sliding_monitor_full,
+        "ops._amps_at": ops._amps_at,
         "warmstart._predict_normalized": warmstart._predict_normalized,
     }
 
@@ -243,7 +262,24 @@ def _gate_engine(seed: int) -> None:
                           seeds=seed, sample_chips=64)
 
 
+def _gate_monitor_fused(seed: int) -> None:
+    import numpy as np
+    from repro.kernels.goertzel.ops import (monitor_carry_init,
+                                            sliding_monitor_fused)
+    freqs = (0.5, 1.0, 2.0, 9.0)
+    x = np.random.default_rng(seed).normal(5e8, 1e5, 30_000)
+    x = x.astype(np.float32)
+    sliding_monitor_fused(x, 0.001, freqs, win=2000, threshold=1e6,
+                          sustain_n=50, cool_n=80, interpret=True)
+    carry = monitor_carry_init(0.001, freqs, win=2000)
+    for lo in range(0, 6000, 3000):
+        _, _, _, carry = sliding_monitor_fused(
+            x[lo:lo + 3000], 0.001, freqs, win=2000, threshold=1e6,
+            sustain_n=50, cool_n=80, interpret=True, carry=carry)
+
+
 RECOMPILE_PAIRS: List[Tuple[str, Callable[[int], None]]] = [
     ("monitor.sliding_bin_power", _gate_monitor),
+    ("monitor.sliding_monitor_fused", _gate_monitor_fused),
     ("engine.simulate_batch", _gate_engine),
 ]

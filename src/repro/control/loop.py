@@ -165,13 +165,19 @@ def watch_trace(w: np.ndarray, dt: float, *, spec, n_chips: int,
         mean = float(trace_mean(w))
     source = ReplaySource(w, dt, tick_s=tick_s, tick_sizes=tick_sizes,
                           sensor=sensor)
-    detector = OnlineGoertzelDetector(dt, freqs, window_s=window_s,
-                                      mean=mean)
     cfg = ControllerConfig(breach_w=float(breach_w),
                            trigger_frac=trigger_frac,
                            release_frac=release_frac, lead_s=lead_s,
                            sustain_ticks=sustain_ticks,
                            release_ticks=release_ticks)
+    # fused detector path: the kernel's shared escalation machine mirrors
+    # the controller's trigger/release band (per-sample telemetry riding
+    # along in the frames; the controller still decides from amps+slopes)
+    detector = OnlineGoertzelDetector(dt, freqs, window_s=window_s,
+                                      mean=mean, threshold_w=cfg.trigger_w,
+                                      release_w=cfg.release_w,
+                                      sustain_s=sustain_ticks * tick_s,
+                                      cooldown_s=release_ticks * tick_s)
     controller = GridController(cfg, freqs, detector.win)
     ladder = InterventionLadder(spec=spec, n_chips=n_chips, dt=dt,
                                 release_amp_w=cfg.release_w, hw=hw,

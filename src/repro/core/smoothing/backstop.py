@@ -13,19 +13,20 @@ bin's amplitude stays above threshold:
 De-escalation happens after the bin amplitude stays below threshold for
 ``cooldown_s``.
 
-The spectral monitor runs on the streaming Pallas sliding-Goertzel
-kernel by default (compiled on TPU backends, interpret mode elsewhere
-so CPU CI and the batched engine's vmap path keep working).
-``use_pallas=False`` selects the pure-jnp monitor; there
-``fused_scan=True`` (the default) fuses the sliding-Goertzel recurrence
-and the escalation state machine into ONE ``lax.scan`` over
-window-sized segments — the same hop-and-overlap per-segment prefix
-sums as the kernel, with the escalation decision consumed inside each
-scan step, so the per-window amplitude matrix (``[n, K]``) is never
-materialized: peak monitor memory is O(win * K) however long the trace
-runs.  ``fused_scan=False`` keeps the cumsum oracle
-(``sliding_bin_power_jnp``) + separate escalation scan as the
-analysis-side reference.  Every path removes the trace mean before
+The spectral monitor runs on the *fused* lane-major sliding-Goertzel
+Pallas kernel by default (``kernels/goertzel/ops.sliding_monitor_fused``;
+compiled on TPU backends, interpret mode elsewhere so CPU CI and the
+batched engine's vmap path keep working): per-bin amplitudes are
+reduced to the worst bin and its escalation class *inside* the kernel,
+so the ``[n, K]`` amplitude matrix never leaves VMEM, and the class
+stream runs through the blocked closed-form
+``core.telemetry.escalation_scan`` instead of a per-sample scan.
+``use_pallas=False`` selects the structurally identical jnp
+``lax.scan`` mirror of the same fused monitor (``fused_scan=True``, the
+default — bitwise equal to the interpret-mode kernel and the
+differentiable path), or, with ``fused_scan=False``, the cumsum oracle
+(``sliding_bin_power_jnp``) + separate per-sample escalation scan as
+the analysis-side reference.  Every path removes the trace mean before
 accumulating — without that, MW-scale DC offsets bury the ~1e5 W
 oscillations this monitor exists to catch (see kernels/goertzel/ref.py).
 
@@ -60,16 +61,12 @@ import numpy as np
 
 from repro.core.smoothing.base import np_apply, register_mitigation
 from repro.core.smoothing.relax import sigmoid_gate
-from repro.core.telemetry import escalation_init, escalation_step, warmup_scale
-from repro.kernels.goertzel.ops import sliding_bin_power
+from repro.core.telemetry import escalation_init, escalation_step
+from repro.kernels.goertzel.ops import interpret_default, sliding_monitor_fused
 from repro.kernels.goertzel.ref import sliding_bin_power_jnp
 
-
-@functools.lru_cache(maxsize=None)
-def _interpret_default() -> bool:
-    """Compile the sliding kernel only on real TPU backends; everywhere
-    else (CPU CI, tests, the vmapped engine) it runs in interpret mode."""
-    return jax.default_backend() != "tpu"
+# historical name; the kernel-backend switch now lives next to the kernels
+_interpret_default = interpret_default
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,65 +114,6 @@ class TelemetryBackstop:
             self._esc_init(), (worst, jnp.arange(n, dtype=jnp.int32)))
         return worst, levels, detect
 
-    def _fused_monitor(self, w, dt: float, *, win: int, sustain_n: int,
-                       cool_n: int):
-        """Sliding-Goertzel monitor + escalation in ONE ``lax.scan`` over
-        window-sized segments.
-
-        Same math as the Pallas kernel (``sliding_goertzel_pallas``):
-        modulated prefix sums restarted every segment (the numerics fix —
-        partial sums stay at oscillation scale), the previous segment's
-        prefix state carried across scan steps, host-precomputed float64
-        ``[win, K]`` phase tables.  Each step reduces its ``[win, K]``
-        amplitude block to the worst bin and feeds it straight into the
-        escalation state machine, so the full ``[n, K]`` amplitude
-        matrix never exists — the carry is O(win * K) however long the
-        trace runs.  Returns ``(worst [n], levels [n], detect)``.
-        """
-        n = w.shape[-1]
-        xc = w - jnp.mean(w)
-        S = -(-n // win)
-        pad_n = S * win - n
-        if pad_n:
-            xc = jnp.concatenate([xc, jnp.zeros((pad_n,), jnp.float32)])
-        xseg = xc.reshape(S, win)
-        omega = 2.0 * np.pi * np.asarray(self.critical_hz, np.float64) * dt
-        p = np.arange(win, dtype=np.float64)[:, None]
-        cosp = jnp.asarray(np.cos(omega[None, :] * p), jnp.float32)
-        sinp = jnp.asarray(np.sin(omega[None, :] * p), jnp.float32)
-        rr = jnp.asarray(np.cos(omega * win), jnp.float32)
-        ri = jnp.asarray(np.sin(omega * win), jnp.float32)
-
-        def seg_step(carry, inp):
-            prev_r, prev_i, esc = carry
-            xs, s = inp
-            pr = jnp.cumsum(xs[:, None] * cosp, axis=0)      # [win, K]
-            pi_ = jnp.cumsum(xs[:, None] * (-sinp), axis=0)
-            # suffix of the previous segment = its total minus its prefix,
-            # rotated into this segment's phase frame by e^{j*omega*win}
-            dr = prev_r[-1:] - prev_r
-            di = prev_i[-1:] - prev_i
-            mr = pr + rr[None, :] * dr - ri[None, :] * di
-            mi = pi_ + rr[None, :] * di + ri[None, :] * dr
-            amps = (2.0 / win) * jnp.sqrt(mr * mr + mi * mi)
-            idx = s * win + jnp.arange(win, dtype=jnp.int32)
-            # warm-up ramp: partial windows renormalize to their true
-            # sample count (matches ops.sliding_bin_power)
-            worst = amps.max(axis=1) * warmup_scale(idx, win)
-            esc2, levels = jax.lax.scan(
-                lambda c, wi: self._esc_step(c, wi[0], wi[1], win=win, n=n,
-                                             sustain_n=sustain_n,
-                                             cool_n=cool_n),
-                esc, (worst, idx))
-            return (pr, pi_, esc2), (worst, levels)
-
-        K = len(self.critical_hz)
-        zeros = jnp.zeros((win, K), jnp.float32)
-        (_, _, (_, _, _, detect)), (worsts, levels) = jax.lax.scan(
-            seg_step, (zeros, zeros, self._esc_init()),
-            (xseg, jnp.arange(S, dtype=jnp.int32)))
-        return worsts.reshape(-1)[:n], levels.reshape(-1)[:n], detect
-
     def apply_jax(self, w: jnp.ndarray, dt: float) -> Tuple[jnp.ndarray, Dict]:
         w = jnp.asarray(w, jnp.float32)
         n = w.shape[-1]
@@ -183,12 +121,14 @@ class TelemetryBackstop:
         sustain_n = max(int(self.sustain_s / dt), 1)
         cool_n = max(int(self.cooldown_s / dt), 1)
         kw = dict(win=win, sustain_n=sustain_n, cool_n=cool_n)
-        if self.use_pallas:
-            amps = sliding_bin_power(w, float(dt), tuple(self.critical_hz),
-                                     win=win, interpret=_interpret_default())
-            worst, levels, detect = self._escalate(amps.max(axis=1), **kw)
-        elif self.fused_scan:
-            worst, levels, detect = self._fused_monitor(w, float(dt), **kw)
+        if self.use_pallas or self.fused_scan:
+            # fused monitor: worst bin + escalation class in-kernel (or its
+            # bitwise-equal jnp mirror), blocked escalation scan on top
+            worst, levels, detect, _peaks = sliding_monitor_fused(
+                w, float(dt), tuple(self.critical_hz), win=win,
+                threshold=self.amp_threshold_w, sustain_n=sustain_n,
+                cool_n=cool_n, interpret=_interpret_default(),
+                use_pallas=self.use_pallas)
         else:
             amps = sliding_bin_power_jnp(w, dt, self.critical_hz, win)
             worst, levels, detect = self._escalate(amps.max(axis=1), **kw)

@@ -15,6 +15,7 @@ gating math and cannot drift.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -63,13 +64,53 @@ def escalation_step(carry, amp, idx, *, threshold, win: int, n: int,
     inside the backstop's ``lax.scan`` and eagerly in the control plane's
     per-tick loop.
     """
-    level, above, below, detect = carry
+    cls = escalation_classify(amp, idx, threshold=threshold, win=win, n=n,
+                              release=release)
+    return escalation_class_step(carry, cls, idx, sustain_n=sustain_n,
+                                 cool_n=cool_n, max_level=max_level)
+
+
+#: escalation sample classes: the amp -> decision reduction the fused
+#: monitor kernel emits instead of amplitudes.  CLS_PAD is an identity
+#: transition (used to pad partial blocks in ``escalation_scan``).
+CLS_CLEAR, CLS_BAND, CLS_HIT, CLS_PAD = 0, 1, 2, 3
+
+
+def escalation_classify(amp, idx, *, threshold, win: int, n,
+                        release=None):
+    """Reduce an amplitude sample to its escalation class (int8).
+
+    ``CLS_HIT`` (2): above trigger and live; ``CLS_CLEAR`` (0): at/below
+    release or not live (warm-up ``idx < win - 1`` / pad ``idx >= n``);
+    ``CLS_BAND`` (1): in the hysteresis band.  This is the *only* place
+    amplitudes enter the escalation machine — the state transition
+    itself (``escalation_class_step`` / ``escalation_scan``) consumes
+    classes, so the fused monitor kernel can classify in VMEM and never
+    materialize per-sample amplitudes.  Requires ``release <= threshold``
+    (hit and clear must be exclusive; the default ``release=None`` means
+    ``release == threshold``).
+    """
     live = (idx >= win - 1) & (idx < n)
     hit = (amp > threshold) & live
     rel = threshold if release is None else release
     clear = ~((amp > rel) & live)
-    above = jnp.where(hit, above + 1, 0)
-    below = jnp.where(clear, below + 1, 0)
+    band = jnp.logical_and(~hit, ~clear)
+    return (2 * hit.astype(jnp.int32)
+            + band.astype(jnp.int32)).astype(jnp.int8)
+
+
+def escalation_class_step(carry, cls, idx, *, sustain_n: int, cool_n: int,
+                          max_level: int = 3):
+    """One escalation transition from a sample *class* (see
+    ``escalation_classify``).  ``CLS_PAD`` is the identity transition.
+    ``escalation_step`` delegates here, so the amplitude-facing and the
+    class-facing machines cannot drift."""
+    level, above, below, detect = carry
+    hit = cls == CLS_HIT
+    clear = cls == CLS_CLEAR
+    on = cls != CLS_PAD
+    above = jnp.where(hit, above + 1, jnp.where(on, 0, above))
+    below = jnp.where(clear, below + 1, jnp.where(on, 0, below))
     esc = hit & (above >= sustain_n) & (level < max_level)
     detect = jnp.where(esc & (detect < 0), idx, detect)
     level = jnp.where(esc, level + 1, level)
@@ -78,6 +119,98 @@ def escalation_step(carry, amp, idx, *, threshold, win: int, n: int,
     level = jnp.where(deesc, level - 1, level)
     below = jnp.where(deesc, 0, below)
     return (level, above, below, detect), level
+
+
+@functools.partial(jax.jit, static_argnames=("sustain_n", "cool_n",
+                                             "max_level", "block"))
+def escalation_scan(cls, idx0, carry, *, sustain_n: int, cool_n: int,
+                    max_level: int = 3, block: int = 512):
+    """Run the escalation machine over a class stream in O(n/block)
+    sequential steps — bit-identical to folding ``escalation_class_step``
+    sample by sample (property-tested in tests/test_control.py).
+
+    The machine's per-sample recurrence is the monitor's real serial
+    bottleneck (a trace-length ``lax.scan`` costs ~100x the Goertzel
+    kernel at 1e6 samples).  But between class *changes* the transition
+    has a closed form: within a homogeneous run the escalation
+    candidates sit at ``j1 = max(1, period - counter)`` and every
+    ``period`` samples after, of which ``room`` (head-room to
+    ``max_level``, or down to 0) are taken.  The scan therefore walks
+    fixed ``block``-sample blocks: an all-one-class block applies the
+    closed form as a vector expression; a mixed block (a class boundary
+    — rare at telemetry rates) falls back to an unrolled inner scan.
+    The trailing partial block is padded with ``CLS_PAD`` (identity);
+    a homogeneous block with a trailing pad run still takes the closed
+    form over its live prefix, so short online chunks (the detector's
+    per-tick calls) stay on the fast path.
+
+    ``cls``: int8 classes from ``escalation_classify``; ``idx0``: global
+    sample index of ``cls[0]`` (int32) — ``detect`` latches global
+    indices, so chunked calls stay bit-identical to one offline call.
+    Returns ``(carry', levels [len(cls)])``.
+    """
+    n = cls.shape[0]
+    nb = max(-(-n // block), 1)
+    pad = nb * block - n
+    if pad:
+        cls = jnp.concatenate(
+            [cls, jnp.full((pad,), CLS_PAD, cls.dtype)])
+    blocks = cls.reshape(nb, block)
+    starts = (jnp.asarray(idx0, jnp.int32)
+              + block * jnp.arange(nb, dtype=jnp.int32))
+    j = jnp.arange(1, block + 1, dtype=jnp.int32)
+
+    def run_form(room, counter, period, m):
+        # homogeneous-run closed form over the block's m live samples
+        # (trailing pads are the identity): candidate k sits at sample
+        # j1 + (k-1)*period (1-indexed); `room` of them are taken, the
+        # counter keeps counting past the last taken candidate
+        j1 = jnp.maximum(1, period - counter)
+        cnt = jnp.where((j >= j1) & (j <= m), 1 + (j - j1) // period, 0)
+        e = jnp.minimum(room, jnp.max(cnt))
+        taken = jnp.minimum(cnt, room)
+        new_counter = jnp.where(e > 0, m - (j1 + (e - 1) * period),
+                                counter + m)
+        return j1, e, taken, new_counter
+
+    def fast(carry, cb, g, m):
+        level, above, below, detect = carry
+        c0 = cb[0]
+        j1h, eh, takh, ah = run_form(max_level - level, above, sustain_n, m)
+        _, ec, takc, bc = run_form(level, below, cool_n, m)
+        is_hit = c0 == CLS_HIT
+        is_clear = c0 == CLS_CLEAR
+        levels = jnp.where(is_hit, level + takh,
+                           jnp.where(is_clear, level - takc, level))
+        level2 = jnp.where(is_hit, level + eh,
+                           jnp.where(is_clear, level - ec, level))
+        above2 = jnp.where(is_hit, ah, 0)
+        below2 = jnp.where(is_clear, bc, 0)
+        detect2 = jnp.where(is_hit & (eh > 0) & (detect < 0),
+                            g + j1h - 1, detect)
+        return (level2, above2, below2, detect2), levels
+
+    def slow(carry, cb, g, m):
+        del m
+        idx = g + jnp.arange(block, dtype=jnp.int32)
+        return jax.lax.scan(
+            lambda c, xi: escalation_class_step(
+                c, xi[0], xi[1], sustain_n=sustain_n, cool_n=cool_n,
+                max_level=max_level),
+            carry, (cb, idx), unroll=min(block, 16))
+
+    def body(carry, inp):
+        cb, g = inp
+        j0 = jnp.arange(block, dtype=jnp.int32)
+        is_pad = cb == CLS_PAD
+        m = jnp.sum((~is_pad).astype(jnp.int32))   # live prefix length ...
+        trailing = jnp.all(is_pad == (j0 >= m))    # ... if pads all trail
+        homog = (trailing & (m > 0)
+                 & jnp.all(jnp.where(j0 < m, cb == cb[0], True)))
+        return jax.lax.cond(homog, fast, slow, carry, cb, g, m)
+
+    carry, levels = jax.lax.scan(body, carry, (blocks, starts))
+    return carry, levels.reshape(-1)[:n]
 
 
 @dataclasses.dataclass(frozen=True)

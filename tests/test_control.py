@@ -21,7 +21,8 @@ from repro import control
 from repro.core.spec import example_specs
 from repro.core.telemetry import escalation_init, escalation_step
 from repro.kernels.goertzel.ops import (sliding_bin_power,
-                                        sliding_carry_init, trace_mean)
+                                        sliding_carry_init,
+                                        sliding_monitor_fused, trace_mean)
 
 DT = 0.002
 FREQS = (0.5, 1.0, 2.0, 9.0)
@@ -70,7 +71,8 @@ class TestOnlineOfflineParity:
         sizes = [900, 37, 2048, 1500, 1, 2000]   # remainder: default tick
         src = control.ReplaySource(x, DT, tick_s=0.5, tick_sizes=sizes)
         det = control.OnlineGoertzelDetector(DT, FREQS, window_s=win * DT,
-                                             mean=float(trace_mean(x)))
+                                             mean=float(trace_mean(x)),
+                                             fused=False)
         assert det.win == win
         outs = []
         while (chunk := src.next_tick()) is not None:
@@ -80,6 +82,40 @@ class TestOnlineOfflineParity:
                                            interpret=True))
         assert on.shape == off.shape
         assert (on == off).all()
+
+    def test_fused_detector_parity(self):
+        """The default (fused) detector path: per-sample worst-bin
+        amplitudes streamed through the fused monitor kernel are
+        bit-identical to one offline ``sliding_monitor_fused`` call,
+        the escalation level matches, and the O(K)-recombined per-bin
+        ``frame.amps`` match the offline amplitudes at every tick end."""
+        x = _noisy_ramp(seed=5)
+        win = 2000
+        thr, rel = 2.5e7, 2.0e7
+        sizes = [900, 37, 2048, 1500, 1, 2000]
+        src = control.ReplaySource(x, DT, tick_s=0.5, tick_sizes=sizes)
+        det = control.OnlineGoertzelDetector(
+            DT, FREQS, window_s=win * DT, mean=float(trace_mean(x)),
+            threshold_w=thr, release_w=rel, sustain_s=0.5, cooldown_s=1.0)
+        assert det.fused
+        worsts, frames = [], []
+        while (chunk := src.next_tick()) is not None:
+            f = det.step(chunk)
+            worsts.append(f.tick_worst)
+            frames.append(f)
+        on = np.concatenate(worsts)
+        woff, loff, _, _ = sliding_monitor_fused(
+            x, DT, FREQS, win=win, threshold=thr, release=rel,
+            sustain_n=det.sustain_n, cool_n=det.cool_n, interpret=True)
+        assert on.shape == (len(x),)
+        assert (on == np.asarray(woff)).all()
+        assert frames[-1].level == int(np.asarray(loff)[-1])
+        assert max(f.level for f in frames) == int(np.asarray(loff).max())
+        off_amps = np.asarray(sliding_bin_power(x, DT, FREQS, win=win,
+                                                interpret=True))
+        for f in frames:
+            np.testing.assert_allclose(f.amps, off_amps[f.sample_idx],
+                                       rtol=1e-6)
 
     def test_carry_resumes_mid_window(self):
         """Chunked ticks never re-prime: the first output after a tick
@@ -139,6 +175,54 @@ class TestSharedEscalation:
         a = self._run(amps, **kw)
         b = self._run(amps, release=1.0, **kw)
         assert a == b
+
+    def test_escalation_scan_matches_per_sample_step(self):
+        """Property test: the blocked closed-form ``escalation_scan`` is
+        bit-identical to folding ``escalation_class_step`` sample by
+        sample — over run-structured class streams that exercise the
+        homogeneous closed form, mixed-block fallback, CLS_PAD tail
+        padding, and chunked carry hand-off at arbitrary boundaries."""
+        from repro.core.telemetry import (escalation_class_step,
+                                          escalation_scan)
+        rng = np.random.default_rng(7)
+        for trial in range(4):
+            sustain = int(rng.integers(1, 9))
+            cool = int(rng.integers(1, 9))
+            n = int(rng.integers(50, 1500))
+            cls = []
+            while len(cls) < n:
+                cls.extend([int(rng.integers(0, 3))]
+                           * int(rng.integers(1, 400)))
+            cls = np.asarray(cls[:n], np.int8)
+            # per-sample reference
+            c_ref = escalation_init()
+            ref = []
+            for i in range(n):
+                c_ref, lvl = escalation_class_step(
+                    c_ref, jnp.int8(cls[i]), jnp.int32(i),
+                    sustain_n=sustain, cool_n=cool)
+                ref.append(int(lvl))
+            # one-shot blocked scan (block smaller than n: both paths run)
+            c1, levels = escalation_scan(jnp.asarray(cls), jnp.int32(0),
+                                         escalation_init(),
+                                         sustain_n=sustain, cool_n=cool,
+                                         block=128)
+            assert np.asarray(levels).tolist() == ref
+            assert [int(v) for v in c1] == [int(v) for v in c_ref]
+            # chunked: same stream split at arbitrary boundaries
+            cuts = sorted(rng.integers(0, n, size=3).tolist())
+            c2 = escalation_init()
+            got = []
+            pos = 0
+            for end in cuts + [n]:
+                c2, lv = escalation_scan(jnp.asarray(cls[pos:end]),
+                                         jnp.int32(pos), c2,
+                                         sustain_n=sustain, cool_n=cool,
+                                         block=128)
+                got.extend(np.asarray(lv).tolist())
+                pos = end
+            assert got == ref
+            assert [int(v) for v in c2] == [int(v) for v in c_ref]
 
 
 # ---------------------------------------------------------------------------

@@ -222,6 +222,149 @@ def test_sliding_pallas_vmaps():
 
 
 # ---------------------------------------------------------------------------
+# sliding Goertzel v2: streamed carry + fused monitor
+# ---------------------------------------------------------------------------
+
+from repro.core.telemetry import (escalation_init, escalation_step,
+                                  warmup_scale)
+from repro.kernels.goertzel.goertzel import sliding_goertzel_pallas
+from repro.kernels.goertzel.ops import (_phase_tables, monitor_carry_init,
+                                        sliding_carry_init,
+                                        sliding_monitor_fused, trace_mean)
+
+#: uneven tick sizes: sub-window, window-crossing, 1-sample and partial ticks
+_TICKS = [7, 250, 499, 500, 3, 711]
+
+
+def _chunks(n, sizes):
+    out, pos = [], 0
+    for s in sizes:
+        if pos >= n:
+            break
+        out.append((pos, min(pos + s, n)))
+        pos += s
+    if pos < n:
+        out.append((pos, n))
+    return out
+
+
+def test_sliding_carry_bitwise_matches_offline():
+    """Chunked carry calls concatenate *bitwise* to one offline call —
+    both run the same v2 kernel program with the same streamed prefix
+    state, so the parity is by construction, not by tolerance."""
+    dt, win = 0.01, 500
+    n = 4 * win + 123
+    freqs = (0.39, 1.0, 2.2)
+    x = np.asarray(_mw_trace(n, dt), np.float32)
+    offline = np.asarray(sliding_bin_power(jnp.asarray(x), dt, freqs,
+                                           win=win, interpret=True))
+    carry = sliding_carry_init(dt, freqs, win=win,
+                               mean=float(trace_mean(jnp.asarray(x))))
+    outs = []
+    for lo, hi in _chunks(n, _TICKS):
+        amps, carry = sliding_bin_power(x[lo:hi], dt, freqs, win=win,
+                                        interpret=True, carry=carry)
+        outs.append(amps)
+    np.testing.assert_array_equal(np.concatenate(outs, axis=0), offline)
+
+
+def test_sliding_v1_matches_v2_layouts():
+    """The retained v1 (bin-minor) A/B baseline kernel agrees with the
+    lane-major v2 production path."""
+    dt, win = 0.01, 500
+    n = 3 * win
+    freqs = (0.39, 1.0, 2.2)
+    x = np.asarray(_mw_trace(n, dt), np.float32)
+    v2 = np.asarray(sliding_bin_power(jnp.asarray(x), dt, freqs, win=win,
+                                      interpret=True))
+    cosp, sinp, rot = (jnp.asarray(t) for t in _phase_tables(freqs, dt, win))
+    xc = jnp.asarray(x) - jnp.mean(jnp.asarray(x))
+    raw = sliding_goertzel_pallas(xc.reshape(-1, win), cosp, sinp, rot,
+                                  interpret=True)
+    scale = warmup_scale(jnp.arange(n, dtype=jnp.float32), win)
+    v1 = np.asarray(raw.reshape(n, len(freqs)) * scale[:, None])
+    np.testing.assert_allclose(v1, v2, rtol=2e-6, atol=1e-2)
+
+
+def test_monitor_fused_pallas_matches_jnp_mirror_bitwise():
+    """Interpret-mode fused kernel == jitted jnp lax.scan mirror, bitwise
+    (worst stream, escalation levels, detect index, window peaks)."""
+    dt, win = 0.01, 500
+    n = 2048
+    freqs = (0.39, 1.0, 2.2)
+    x = jnp.asarray(_mw_trace(n, dt), jnp.float32)
+    kw = dict(win=win, threshold=6e4, release=5e4, sustain_n=50, cool_n=80,
+              interpret=True)
+    wp, lp, dp, pp = sliding_monitor_fused(x, dt, freqs, use_pallas=True,
+                                           **kw)
+    wj, lj, dj, pj = sliding_monitor_fused(x, dt, freqs, use_pallas=False,
+                                           **kw)
+    np.testing.assert_array_equal(np.asarray(wp), np.asarray(wj))
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(lj))
+    assert int(dp) == int(dj)
+    np.testing.assert_array_equal(np.asarray(pp), np.asarray(pj))
+    assert int(np.asarray(lp).max()) >= 1      # escalation actually fired
+    assert int(dp) >= win - 1                  # and not off warm-up rows
+
+
+def test_monitor_fused_matches_two_pass_escalation_step():
+    """Fused in-kernel classification + blocked scan == the two-pass
+    reference (materialize all amplitudes, fold ``escalation_step``
+    sample by sample) — the shared-machine parity the fusion preserves."""
+    dt, win = 0.01, 500
+    n = 2048
+    freqs = (0.39, 1.0, 2.2)
+    x = jnp.asarray(_mw_trace(n, dt), jnp.float32)
+    worst, levels, detect, _ = sliding_monitor_fused(
+        x, dt, freqs, win=win, threshold=6e4, release=5e4,
+        sustain_n=50, cool_n=80, interpret=True)
+    amps = np.asarray(sliding_bin_power(x, dt, freqs, win=win,
+                                        interpret=True))
+    worst_ref = amps.max(axis=1)
+    np.testing.assert_array_equal(np.asarray(worst), worst_ref)
+    carry = escalation_init()
+    ref_levels = []
+    for i in range(n):
+        carry, lvl = escalation_step(carry, jnp.float32(worst_ref[i]),
+                                     jnp.int32(i), threshold=6e4,
+                                     release=5e4, win=win, n=n,
+                                     sustain_n=50, cool_n=80)
+        ref_levels.append(int(lvl))
+    np.testing.assert_array_equal(np.asarray(levels),
+                                  np.asarray(ref_levels, np.int32))
+    assert int(detect) == int(carry[3])
+
+
+def test_monitor_fused_carry_bitwise_matches_offline():
+    """Chunked fused monitor == offline fused monitor bitwise (worst and
+    level streams, detect index), and the O(K) recombined ``amps_last``
+    matches the materialized amplitudes at each chunk's last sample."""
+    dt, win = 0.01, 500
+    n = 2048
+    freqs = (0.39, 1.0, 2.2)
+    x = np.asarray(_mw_trace(n, dt), np.float32)
+    kw = dict(win=win, threshold=6e4, release=5e4, sustain_n=50, cool_n=80,
+              interpret=True)
+    w_off, l_off, d_off, _ = sliding_monitor_fused(jnp.asarray(x), dt,
+                                                   freqs, **kw)
+    amps_off = np.asarray(sliding_bin_power(jnp.asarray(x), dt, freqs,
+                                            win=win, interpret=True))
+    carry = monitor_carry_init(dt, freqs, win=win,
+                               mean=float(trace_mean(jnp.asarray(x))))
+    ws, ls = [], []
+    for lo, hi in _chunks(n, _TICKS):
+        w, lv, amps_last, carry = sliding_monitor_fused(
+            x[lo:hi], dt, freqs, carry=carry, **kw)
+        ws.append(w)
+        ls.append(lv)
+        np.testing.assert_allclose(np.asarray(amps_last), amps_off[hi - 1],
+                                   rtol=1e-6, atol=1e-3)
+    np.testing.assert_array_equal(np.concatenate(ws), np.asarray(w_off))
+    np.testing.assert_array_equal(np.concatenate(ls), np.asarray(l_off))
+    assert int(carry.esc[3]) == int(d_off)
+
+
+# ---------------------------------------------------------------------------
 # flash attention (perf iteration #2)
 # ---------------------------------------------------------------------------
 
