@@ -27,6 +27,13 @@ RPR005  python-branch-on-tracer — ``if``/``while`` on a traced value
 RPR006  mutable-default-in-pytree-dataclass — array/list/dict defaults
         are shared across instances; on a registered pytree they also
         alias leaves across configs in a stacked grid.
+RPR007  process-identity-in-traced-code — ``jax.process_index()`` /
+        ``jax.process_count()`` inside traced code (or stored as a
+        pytree data field) bakes per-process values into what must be a
+        single SPMD program: every process must trace the *same*
+        computation over the global scenario mesh, so process identity
+        is host-side control flow only (pick local rows, gate side
+        effects), never a traced value.
 
 Each rule reports structured ``Finding`` records; the engine runs every
 rule over every file and the CLI applies the checked-in baseline.
@@ -91,6 +98,10 @@ RULE_CATALOG: Dict[str, RuleSpec] = {r.rule: r for r in [
     RuleSpec("RPR006", "mutable-default-in-pytree-dataclass", "error",
              "array/list defaults are shared across instances and alias "
              "leaves across stacked configs"),
+    RuleSpec("RPR007", "process-identity-in-traced-code", "error",
+             "jax.process_index()/process_count() in traced code or pytree "
+             "data fields bakes per-process values into the single SPMD "
+             "program; process identity is host-side only"),
 ]}
 
 
@@ -477,6 +488,82 @@ def rule_rpr006(mod: ModuleContext) -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# RPR007 process-identity-in-traced-code
+# ---------------------------------------------------------------------------
+
+PROCESS_IDENTITY_CALLS = {"jax.process_index", "jax.process_count",
+                          "process_index", "process_count"}
+
+
+def _process_calls(node: ast.AST) -> List[ast.Call]:
+    return [n for n in ast.walk(node)
+            if isinstance(n, ast.Call)
+            and dotted_name(n.func) in PROCESS_IDENTITY_CALLS]
+
+
+def rule_rpr007(mod: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    # (a) calls inside traced code: the value becomes a compile-time
+    # constant that differs per process -> divergent SPMD programs
+    for fn in mod.functions:
+        if fn.is_traced:
+            for node in walk_shallow(fn.node):
+                if (isinstance(node, ast.Call)
+                        and dotted_name(node.func) in PROCESS_IDENTITY_CALLS):
+                    out.append(_finding(
+                        mod, "RPR007", node,
+                        f"{dotted_name(node.func)}() inside traced function "
+                        f"— every process must trace the same program; "
+                        f"compute process identity on host and pass values "
+                        f"in", fn.qualname))
+        # (b) stored into a registered pytree's *data* field: the leaf
+        # rides into jit as a per-process tracer value
+        if fn.registration is not None:
+            data = set(fn.registration.data_fields)
+            for node in walk_shallow(fn.node):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    continue
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self" and tgt.attr in data
+                            and node.value is not None
+                            and _process_calls(node.value)):
+                        out.append(_finding(
+                            mod, "RPR007", node,
+                            f"pytree data field '{tgt.attr}' of "
+                            f"{fn.registration.class_name} assigned from "
+                            f"process identity — per-process leaf values "
+                            f"desync the SPMD program; keep it host-side "
+                            f"(or a meta field)", fn.qualname))
+    # (c) class-body defaults on dataclasses / registered pytrees
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not (is_dataclass_def(node) or node.name in mod.registrations):
+            continue
+        reg = mod.registrations.get(node.name)
+        data = set(reg.data_fields) if reg is not None else None
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and stmt.value is not None
+                    and _process_calls(stmt.value)):
+                continue
+            field = (stmt.target.id if isinstance(stmt.target, ast.Name)
+                     else "<field>")
+            if data is not None and field not in data:
+                continue              # meta/static field: host-side, fine
+            out.append(_finding(
+                mod, "RPR007", stmt,
+                f"field '{field}' defaults to process identity — stacked "
+                f"configs would carry per-process values into the single "
+                f"SPMD program", node.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 
@@ -487,6 +574,7 @@ RULES: Dict[str, Callable[[ModuleContext], List[Finding]]] = {
     "RPR004": rule_rpr004,
     "RPR005": rule_rpr005,
     "RPR006": rule_rpr006,
+    "RPR007": rule_rpr007,
 }
 
 

@@ -1,1 +1,3 @@
-from repro.ckpt.checkpoint import CheckpointManager, save_pytree, restore_pytree
+from repro.ckpt.checkpoint import (CheckpointManager, load_pytree_numpy,
+                                   restore_pytree, save_pytree)
+from repro.ckpt.resume import ResumeError, SweepCheckpoint

@@ -47,7 +47,8 @@ def save_pytree(directory: str, tree, step: int, extra: Optional[Dict] = None):
         fn = key.replace("/", "__") + ".npy"
         np.save(os.path.join(tmp, fn), arr)
         manifest["leaves"][key] = {"file": fn, "dtype": str(arr.dtype),
-                                   "shape": list(arr.shape)}
+                                   "shape": list(arr.shape),
+                                   "object": bool(arr.dtype == object)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(directory):
@@ -72,12 +73,29 @@ def restore_pytree(directory: str, template, shardings=None):
     for (keypath, leaf), sh in zip(flat, sh_flat):
         key = _path_key(keypath)
         meta = manifest["leaves"][key]
-        arr = np.load(os.path.join(directory, meta["file"]))
-        if sh is not None:
+        arr = np.load(os.path.join(directory, meta["file"]),
+                      allow_pickle=meta.get("object", False))
+        if arr.dtype == object:
+            leaves.append(arr)  # host-only payload (sweep-resume columns)
+        elif sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:
             leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), manifest
+
+
+def load_pytree_numpy(directory: str):
+    """Load every leaf of a saved pytree as host numpy, keyed by tree
+    path (no template, no device placement) — the sweep-resume reader:
+    restored metric columns scatter straight into the columnar record
+    store.  Returns ``(leaves, manifest)``."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for key, meta in manifest["leaves"].items():
+        leaves[key] = np.load(os.path.join(directory, meta["file"]),
+                              allow_pickle=meta.get("object", False))
+    return leaves, manifest
 
 
 class CheckpointManager:

@@ -58,6 +58,7 @@ import numpy as np
 from repro.core.hardware import DEFAULT_HW, Hardware
 from repro.core.optim import adam_init, adam_update, clip_by_global_norm
 from repro.core.phases import IterationTimeline
+from repro.parallel.collectives import gather_rows, host_allgather
 from repro.parallel.sharding import ScenarioShardPlan, scenario_plan
 from repro.core.smoothing.base import (Mitigation, apply_mitigation,
                                        energy_overhead_jax, materialize_aux)
@@ -523,12 +524,16 @@ def simulate_batch(
                 u_rows.append(i)
             u_idx.append(uniq[k])
         sel = np.asarray(u_rows)
-        chip_u, dcraw_u = _synth_vmapped(
-            jnp.asarray(np.stack([level_rows[i] for i in u_rows]),
-                        jnp.float32),
-            shifts[sel], chips_f[sel],
-            None if n_valid_arr is None else n_valid_arr[sel],
-            cfg=cfg, hw=hw)
+        synth_in = (jnp.asarray(np.stack([level_rows[i] for i in u_rows]),
+                                jnp.float32),
+                    shifts[sel], chips_f[sel],
+                    None if n_valid_arr is None else n_valid_arr[sel])
+        if shard is not None and shard.n_processes > 1:
+            # global arrays only compose with global arrays in one SPMD
+            # program: commit the unique-row prefix to the scenario mesh
+            # too (pad rows are duplicates no ``u_idx`` ever references)
+            synth_in, _ = shard.shard_batch(synth_in, len(u_rows))
+        chip_u, dcraw_u = _synth_vmapped(*synth_in, cfg=cfg, hw=hw)
         row_args = (jnp.asarray(u_idx, jnp.int32), shifts, chips_f, dev,
                     rack, dev_on, rack_on, keys_arr, n_valid_arr)
         if shard is not None:
@@ -544,11 +549,14 @@ def simulate_batch(
         res = _simulate_vmapped(*args, limits, cfg=cfg, hw=hw, spec=family,
                                 spectra=spectra)
     if host_arrays:
-        res = jax.tree.map(
-            np.asarray if out_B == B else lambda a: np.asarray(a)[:B], res)
-    elif out_B != B:
+        # single-process this is the plain np.asarray(+slice) host pull;
+        # multi-process it is one replicate-all collective first
+        res = host_allgather(res, shard, take=None if out_B == B else B)
+    elif out_B != B and (shard is None or shard.n_processes <= 1):
         # keep waveforms on device (callers like Study slice them straight
-        # into the analysis jit without a host round-trip)
+        # into the analysis jit without a host round-trip).  Multi-process
+        # keeps the shard padding too — an eager slice would re-replicate
+        # the array; downstream gathers never touch the pad rows.
         res = jax.tree.map(lambda a: a[:B], res)
     return BatchResult(
         t=np.arange(n) * cfg.dt,
@@ -640,7 +648,8 @@ def stream_batches(
         dedup: bool = True,
         chip_outputs: bool = True,
         shard_devices: bool = False,
-        plan: Optional[ScenarioShardPlan] = None):
+        plan: Optional[ScenarioShardPlan] = None,
+        skip_rows: int = 0):
     """Iterate a scenario batch in fixed-size chunks of compiled work,
     yielding one metrics-only ``StreamChunk`` per chunk.
 
@@ -669,6 +678,12 @@ def stream_batches(
     bit-identical to a one-shot ``simulate_batch`` over the same rows:
     chunking, tail padding, analysis-batch padding and sharding only
     ever add rows that are sliced away.
+
+    ``skip_rows`` drops every chunk whose rows are entirely below it
+    without dispatching any work — the resume fast-path (``ckpt/resume``
+    restores those chunks from disk).  It must land on a chunk boundary;
+    because per-row values are chunk-composition independent, the
+    surviving chunks are bit-identical to the same chunks of a full run.
     """
     cfg = wave_cfg or WaveformConfig()
     (tls, chips, seed_list, dev_list, rack_list, level_rows,
@@ -712,12 +727,18 @@ def stream_batches(
         for i in range(C):
             groups.setdefault(lens[lo + i], []).append(i)
         gres = []
+        mult = (shard.n_shards
+                if shard is not None and shard.n_processes > 1 else 1)
         for L, g in sorted(groups.items()):
             # pow2 padding buys bounded compile counts across chunks; a
             # single-chunk (one-shot) run has one fixed shape either way,
             # so analyze at exact size and skip the wasted lanes
-            sel = np.asarray(_pow2_pad(g) if n_chunks > 1 else g)
-            mit = res.dc_mitigated[sel][:, :L]
+            sel = list(_pow2_pad(g) if n_chunks > 1 else g)
+            if len(sel) % mult:
+                # multi-process analysis stays sharded: pad the gather to
+                # a shard multiple (pow2 sizes usually already are)
+                sel += [sel[-1]] * (mult - len(sel) % mult)
+            mit = gather_rows(res.dc_mitigated, sel, shard, length=L)
             per_spec = []
             for si, sp in enumerate(spec_list):
                 do_bands = bands and si == 0
@@ -734,27 +755,32 @@ def stream_batches(
         lo, hi, res, gres = pending
         C = hi - lo
         S = len(spec_list)
-        host = lambda a: np.asarray(a)[:C]
+        # one host pull for all per-row metric fields; multi-process this
+        # is the cross-process merge (replicate-all, then np.asarray)
+        direct = host_allgather(
+            {"eo": res.energy_overhead, "sw": res.swing,
+             "swm": res.swing_mitigated,
+             "raw": res.dc_raw if keep_waveforms else None,
+             "mit": res.dc_mitigated if keep_waveforms else None},
+            shard, take=C)
         chunk = StreamChunk(
             start=lo, stop=hi,
             n=res.dc_mitigated.shape[1],
             n_valid=None if res.n_valid is None else res.n_valid[:C],
-            energy_overhead=host(res.energy_overhead),
-            swing={k: host(v) for k, v in res.swing.items()},
-            swing_mitigated={k: host(v)
-                             for k, v in res.swing_mitigated.items()},
+            energy_overhead=direct["eo"],
+            swing=direct["sw"],
+            swing_mitigated=direct["swm"],
             bands_mitigated=None,
             spec_ok=[None] * S, spec_flags=[None] * S,
             spec_metrics=[None] * S,
-            dc_raw=host(res.dc_raw) if keep_waveforms else None,
-            dc_mitigated=host(res.dc_mitigated) if keep_waveforms else None)
+            dc_raw=direct["raw"], dc_mitigated=direct["mit"])
         bands_cols: Dict[str, np.ndarray] = {}
         for g, per_spec in gres:
             G = len(g)
             for si, a in enumerate(per_spec):
                 if a is None:
                     continue
-                a = jax.tree.map(lambda v: np.asarray(v)[:G], a)
+                a = host_allgather(a, shard, take=G)
                 if "bands_mitigated" in a:
                     for k, v in a["bands_mitigated"].items():
                         bands_cols.setdefault(
@@ -776,9 +802,16 @@ def stream_batches(
             chunk.bands_mitigated = bands_cols
         return chunk
 
+    if skip_rows % chunk_size and skip_rows < B:
+        raise ValueError(
+            f"skip_rows={skip_rows} is not a chunk boundary of "
+            f"chunk_size={chunk_size}")
     pending = None
     for lo in range(0, B, chunk_size):
-        cur = dispatch(lo, min(lo + chunk_size, B))
+        hi = min(lo + chunk_size, B)
+        if hi <= skip_rows:
+            continue
+        cur = dispatch(lo, hi)
         if pending is not None:
             yield materialize(pending)
         pending = cur

@@ -75,6 +75,7 @@ from repro.core.spectrum import critical_band_report
 from repro.core.waveform import (WaveformConfig, aggregate, chip_waveform,
                                  phase_levels)
 from repro.core.stratosim import SimResult
+from repro.ckpt.resume import SweepCheckpoint
 from repro.parallel.sharding import ScenarioShardPlan
 
 PADDING_MODES = ("auto", "pad", "bucket")
@@ -174,6 +175,13 @@ def _as_seq(x) -> list:
 # cross-query coalescing)
 # ---------------------------------------------------------------------------
 
+def _is_primary() -> bool:
+    """Process 0 owns side effects (progress callbacks, checkpoint
+    writes); single-process runs are always primary.  Host-side only —
+    never trace process identity (repro-lint RPR007)."""
+    return jax.process_index() == 0
+
+
 def _structure_groups(rows) -> List[List[int]]:
     """Row indices grouped by (device, rack) pytree structure.  A None
     stage is a wildcard: baseline rows batch with the first concrete
@@ -206,7 +214,8 @@ def run_rows(workloads: Mapping[str, IterationTimeline],
              shard_devices: bool = False,
              plan: Optional[ScenarioShardPlan] = None,
              on_chunk: Optional[Callable[[int, int, float], None]] = None,
-             levels: Optional[Dict[str, np.ndarray]] = None
+             levels: Optional[Dict[str, np.ndarray]] = None,
+             resume: Optional[str] = None
              ) -> "StudyResult":
     """Run an explicit list of pipeline rows through the streaming chunked
     executor and return the columnar ``StudyResult``.
@@ -227,6 +236,22 @@ def run_rows(workloads: Mapping[str, IterationTimeline],
     lengths into one padded call stream while ``"bucket"`` streams each
     length separately (``"auto"`` pads iff lengths mix).  ``stream``
     picks the chunk size as in ``Study.run``.
+
+    ``resume=dir`` makes the stream restartable: after each chunk the
+    primary process checkpoints that chunk's records into ``dir``
+    (``ckpt/resume.SweepCheckpoint``), and a rerun with the same (or an
+    append-extended) row list restores the finished chunks and only
+    computes the rest — bit-identical to an uninterrupted run.  A
+    mismatched grid, chunk size, or corrupt checkpoint raises
+    ``ResumeError`` instead of merging wrong rows.  Requires streaming
+    (``stream=``) and is exclusive with ``keep_waveforms``.
+
+    ``on_chunk`` progress is **global** and primary-only: ``done`` /
+    ``total`` count pipeline rows of the whole grid (every process runs
+    every chunk of the global scenario axis, so the count is identical
+    on all of them), and under a multi-process plan only process 0
+    emits — worker processes stay silent.  Rows restored from a resume
+    dir are reported in one leading callback per call stream.
     """
     cfg = wave_cfg or WaveformConfig()
     if padding not in PADDING_MODES:
@@ -257,20 +282,50 @@ def run_rows(workloads: Mapping[str, IterationTimeline],
         if len(keys) != len(rows):
             raise ValueError(f"keys: got {len(keys)}, expected {len(rows)}")
 
+    primary = _is_primary()
+    ckpt = None
+    if resume is not None:
+        if chunk_size is None:
+            raise ValueError(
+                "resume= requires streaming (pass stream=True or stream=N): "
+                "chunk boundaries are the checkpoint points")
+        if keep_waveforms:
+            raise ValueError(
+                "resume= does not support keep_waveforms=True — waveforms "
+                "are not checkpointed, so a resumed result would miss them")
+        ckpt = SweepCheckpoint(resume)
+        ckpt.validate_or_init(
+            workloads=workloads, rows=rows, specs=specs, keys=keys,
+            cfg=cfg, hw=hw, mode=mode, sample_chips=sample_chips,
+            chunk_size=chunk_size, write=primary)
+
+    emit = on_chunk if (on_chunk is not None and primary) else None
     cols = _empty_columns(len(rows) * len(specs))
     waveforms = [None] * len(rows) if keep_waveforms else None
     total, done = len(rows), 0
     t0 = time.perf_counter()
-    for sg_rows in _structure_groups(rows):
+    for gi, sg_rows in enumerate(_structure_groups(rows)):
         if mode == "pad":
-            calls = [sg_rows]
+            calls = [(f"g{gi}-pad", sg_rows)]
         else:
             by_len: Dict[int, List[int]] = {}
             for r in sg_rows:
                 by_len.setdefault(row_len[r], []).append(r)
-            calls = [idx for _, idx in sorted(by_len.items())]
-        for idx in calls:
+            calls = [(f"g{gi}-L{L}", idx)
+                     for L, idx in sorted(by_len.items())]
+        for call_key, idx in calls:
             lens = {row_len[r] for r in idx}
+            cs_eff = max(1, min(chunk_size or len(idx), len(idx)))
+            skip = 0
+            if ckpt is not None:
+                skip = ckpt.restore_call(call_key, idx, cs_eff, cols,
+                                         len(specs))
+                if skip:
+                    done += skip
+                    if emit is not None:
+                        emit(done, total, time.perf_counter() - t0)
+                if skip >= len(idx):
+                    continue
             chunks = stream_batches(
                 [workloads[rows[r][0]] for r in idx],
                 [rows[r][1] for r in idx], cfg,
@@ -282,16 +337,19 @@ def run_rows(workloads: Mapping[str, IterationTimeline],
                 sample_chips=sample_chips,
                 levels=[levels[rows[r][0]] for r in idx],
                 pad_to=max(lens) if len(lens) > 1 else None,
-                chunk_size=chunk_size or len(idx),
+                chunk_size=cs_eff,
                 bands=True, keep_waveforms=keep_waveforms,
                 dedup=True, shard_devices=shard_devices,
-                plan=plan)
+                plan=plan, skip_rows=skip)
             for ch in chunks:
                 _fill_chunk(cols, waveforms, rows, row_len, idx, ch,
                             specs=specs, workloads=workloads, dt=cfg.dt)
+                if ckpt is not None and primary:
+                    ckpt.save_chunk(call_key, idx, ch.start, ch.stop,
+                                    cols, len(specs))
                 done += len(ch)
-                if on_chunk is not None:
-                    on_chunk(done, total, time.perf_counter() - t0)
+                if emit is not None:
+                    emit(done, total, time.perf_counter() - t0)
     return StudyResult(columns=cols, waveforms=waveforms)
 
 
@@ -328,11 +386,19 @@ def _fill_chunk(cols: Dict[str, np.ndarray], waveforms, rows, row_len,
                 report = ch.report(si, j)
                 cols["spec_ok"][p] = report.ok
                 cols["violations"][p] = report.violations
-                cols["metrics"][p] = report.metrics
+                # spec metrics go into numeric side columns
+                # ("metrics:<name>", NaN = not measured for this record)
+                # instead of a per-record dict: at 10^6 records the dict
+                # overhead alone is ~300 MB of host memory
+                for mk, mv in report.metrics.items():
+                    mc = cols.get("metrics:" + mk)
+                    if mc is None:
+                        mc = cols["metrics:" + mk] = np.full(
+                            len(cols["index"]), np.nan)
+                    mc[p] = mv
             else:
                 cols["spec_ok"][p] = None
                 cols["violations"][p] = ()
-                cols["metrics"][p] = {}
         if waveforms is not None:
             waveforms[r] = {
                 "t": np.arange(L) * dt,
@@ -441,7 +507,8 @@ class Study:
 
     def run(self, *, padding: Optional[str] = None,
             stream: Union[None, bool, int] = None,
-            on_chunk: Optional[Callable[[int, int, float], None]] = None
+            on_chunk: Optional[Callable[[int, int, float], None]] = None,
+            resume: Optional[str] = None
             ) -> "StudyResult":
         """Run the whole grid through the streaming chunked executor.
 
@@ -468,7 +535,14 @@ class Study:
         every chunk with the number of pipeline scenarios finished, the
         grid total, and the wall-clock seconds since ``run`` started —
         the progress hook long sweeps (``sweep_bench``, the serve CLI)
-        surface to operators.
+        surface to operators.  Progress is global (done/total over the
+        whole grid) and, under a multi-process plan, emitted only on
+        process 0.
+
+        ``resume=dir`` checkpoints every finished chunk into ``dir`` and
+        restores them on rerun — kill-and-restart (or append-extending
+        the grid) completes bit-identically to an uninterrupted run; see
+        ``run_rows``.  Requires ``stream=``.
 
         The body is the module-level ``run_rows`` over this study's
         cartesian row list — callers with an explicit (possibly
@@ -485,7 +559,7 @@ class Study:
             sample_chips=self.sample_chips,
             keep_waveforms=self.keep_waveforms,
             shard_devices=self.shard_devices, plan=self.plan,
-            on_chunk=on_chunk)
+            on_chunk=on_chunk, resume=resume)
 
     def optimize(self, *, method: str = "hybrid",
                  seed: Optional[int] = None,
@@ -579,7 +653,7 @@ _COLUMN_DTYPES = (
     ("mean_mw", np.float64), ("swing_mw", np.float64),
     ("swing_mitigated_mw", np.float64), ("energy_overhead", np.float64),
     ("paper_band_frac", np.float64), ("designed", np.bool_),
-    ("spec_ok", object), ("violations", object), ("metrics", object),
+    ("spec_ok", object), ("violations", object),
 )
 
 
@@ -639,7 +713,16 @@ class StudyResult:
     def _row(self, i: int) -> Dict:
         if self._rows is not None:
             return self._rows[i]
-        return {k: _to_py(col[i]) for k, col in self._cols.items()}
+        rec = {k: _to_py(col[i]) for k, col in self._cols.items()
+               if not k.startswith("metrics:")}
+        # spec metrics are stored as numeric side columns (NaN = this
+        # record's spec did not measure that key); the per-record dict
+        # materializes here, not in the store
+        rec["metrics"] = {k[8:]: _to_py(col[i])
+                          for k, col in self._cols.items()
+                          if k.startswith("metrics:")
+                          and not np.isnan(col[i])}
+        return rec
 
     @property
     def records(self) -> List[Dict]:
@@ -659,6 +742,13 @@ class StudyResult:
             return [r.get(name) for r in self._rows]
         col = self._cols.get(name)
         if col is None:
+            if name == "metrics":
+                m = {k[8:]: c for k, c in self._cols.items()
+                     if k.startswith("metrics:")}
+                if m:
+                    return [{mk: _to_py(c[i]) for mk, c in m.items()
+                             if not np.isnan(c[i])}
+                            for i in range(len(self))]
             return [None] * len(self)
         return col
 

@@ -1,4 +1,15 @@
-"""Distributed-optimization collectives: int8 error-feedback compression.
+"""Cross-process collectives: the scenario-mesh result merge and int8
+error-feedback gradient compression.
+
+``host_allgather`` is the merge step of the multi-host scenario driver
+(``parallel/distributed.py``): after a chunk's compiled pipeline ran over
+the global scenario mesh, every process holds only its shard of the
+per-row metric arrays — a single jitted identity with fully-replicated
+``out_shardings`` all-gathers them (one collective for the whole tree),
+after which ``np.asarray`` is legal on every process and the columnar
+``StudyResult`` fill is process-independent.  On a single process (or
+with no plan) it degenerates to the plain ``np.asarray`` host pull the
+engine always did, so the code path is shared.
 
 ``compressed_allreduce_mean`` quantizes gradients to int8 with per-block
 scales before the data-parallel mean, carrying the quantization residual as
@@ -12,13 +23,76 @@ validate the quantization algebra; the dry-run validates the lowering).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 F32 = jnp.float32
 BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# scenario-mesh result merge (multi-host driver)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _replicate_fn(mesh, take: Optional[int]):
+    """Jitted slice-then-replicate for one mesh (cached so every chunk of
+    a stream reuses one executable per shape).  ``take`` slices the
+    leading axis *inside* the same program, so shard-padding rows never
+    cross the wire."""
+    rep = NamedSharding(mesh, P())
+    if take is None:
+        return jax.jit(lambda t: t, out_shardings=rep)
+    return jax.jit(lambda t: jax.tree.map(lambda a: a[:take], t),
+                   out_shardings=rep)
+
+
+def host_allgather(tree, plan=None, *, take: Optional[int] = None):
+    """Pull a (possibly scenario-sharded) result tree to host numpy on
+    every process.
+
+    ``plan`` is the ``ScenarioShardPlan`` the batch ran under (or None).
+    Single-process: a plain ``np.asarray`` map — bit-identical to the
+    engine's historical host pull.  Multi-process: one jitted
+    replicate-all collective over the whole tree, then ``np.asarray`` on
+    the now fully-addressable leaves.  ``take`` keeps only the first
+    ``take`` rows (dropping shard/tail padding) in the same step.
+    """
+    if plan is None or plan.n_processes <= 1:
+        f = (np.asarray if take is None
+             else (lambda a: np.asarray(a)[:take]))
+        return jax.tree.map(f, tree)
+    gathered = _replicate_fn(plan.mesh, take)(tree)
+    return jax.tree.map(np.asarray, gathered)
+
+
+@functools.lru_cache(maxsize=None)
+def _gather_rows_fn(mesh, axis: str, length: Optional[int]):
+    """Jitted row gather that keeps the result on the scenario mesh:
+    ``x[idx, :length]`` with sharded output, so per-(length, spec)
+    analysis batches stay partitioned across processes instead of every
+    process redundantly analyzing the whole chunk."""
+    sh = NamedSharding(mesh, P(axis))
+    if length is None:
+        return jax.jit(lambda x, idx: x[idx], out_shardings=sh)
+    return jax.jit(lambda x, idx: x[idx, :length], out_shardings=sh)
+
+
+def gather_rows(x, idx, plan, *, length: Optional[int] = None):
+    """``x[idx][:, :length]`` committed back onto ``plan``'s scenario
+    mesh (multi-process), or the plain eager gather (single-process —
+    unchanged numerics either way: a gather moves data, never computes).
+    ``idx`` length must be a shard multiple in the multi-process case."""
+    if plan is None or plan.n_processes <= 1:
+        out = x[np.asarray(idx)]
+        return out if length is None else out[:, :length]
+    return _gather_rows_fn(plan.mesh, plan.axis, length)(
+        x, jnp.asarray(np.asarray(idx), jnp.int32))
 
 
 def _quantize_int8(x) -> Tuple[jax.Array, jax.Array]:

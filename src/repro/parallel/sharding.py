@@ -91,15 +91,36 @@ class ScenarioShardPlan:
         """Pad every batched leaf to a shard multiple (repeating the last
         row — callers slice results back to ``[:B]``) and commit it to
         the scenario mesh.  Returns ``(tree, padded_B)``.  No-op on a
-        one-device mesh."""
+        one-device mesh.
+
+        Under ``jax.distributed`` (the mesh spans processes) each process
+        holds the *same* host batch; the multi-host branch pads it
+        host-side, takes this process's ``local_rows`` slice, and
+        assembles the global array via
+        ``jax.make_array_from_process_local_data`` — every process then
+        calls the same compiled pipeline on the same global arrays (one
+        SPMD program), each owning 1/n_processes of the rows."""
         if self.n_shards <= 1:
             return tree, B
         pad = self.pad_rows(B)
+        sh = self.sharding
+        if self.n_processes > 1:
+            padded = B + pad
+            rows = self.local_rows(padded)
+
+            def put(a):
+                h = np.asarray(a)
+                if pad:
+                    h = np.concatenate(
+                        [h, np.repeat(h[-1:], pad, axis=0)], axis=0)
+                return jax.make_array_from_process_local_data(
+                    sh, np.ascontiguousarray(h[rows]), (padded,) + h.shape[1:])
+
+            return jax.tree.map(put, tree), padded
         if pad:
             tree = jax.tree.map(
                 lambda a: jnp.concatenate(
                     [a, jnp.repeat(a[-1:], pad, axis=0)], axis=0), tree)
-        sh = self.sharding
         return jax.tree.map(lambda a: jax.device_put(a, sh), tree), B + pad
 
 

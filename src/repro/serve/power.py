@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import threading
 from collections import OrderedDict
@@ -132,7 +133,8 @@ class PowerComplianceService:
                  design_method: str = "hybrid",
                  warmstart=None,
                  stream_chunk: int = 256,
-                 memo_size: int = 32):
+                 memo_size: int = 32,
+                 resume_dir: Optional[str] = None):
         self.wave_cfg = wave_cfg or WaveformConfig(dt=0.002, steps=10,
                                                    jitter_s=0.002)
         self.hw = hw
@@ -152,6 +154,11 @@ class PowerComplianceService:
                              "predictor (object or checkpoint directory)")
         self.stream_chunk = int(stream_chunk)
         self.memo_size = int(memo_size)
+        # service-level resume: each union execution checkpoints its
+        # streaming chunks under a query-set-keyed subdirectory, so a
+        # killed long-catalog query finishes from where it died when the
+        # same query (set) is re-asked after restart
+        self.resume_dir = resume_dir
         self.last_result: Optional[StudyResult] = None
         # all mutable state below is guarded by _lock; the heavy work
         # (synthesis, Study execution, design) runs OUTSIDE the lock
@@ -422,10 +429,22 @@ class PowerComplianceService:
         # per-length calls inside ONE run_rows still share dispatch and
         # the compiled (length, family, structure) executables
         mode = queries[0][4] if len(queries) == 1 else "bucket"
+        resume = None
+        if self.resume_dir is not None:
+            # one subdir per coalesced query set: same queries -> same
+            # dir (resume kicks in); anything else gets its own sweep
+            from repro.ckpt.resume import digest
+            # repr, not hash(): str hashes are per-process randomized and
+            # the dir name must survive a service restart (the inner
+            # rows_chain fingerprint still catches any true mismatch)
+            qsig = digest([(repr(q[0]), int(q[1]),
+                            q[2] if isinstance(q[2], str) else repr(q[2]),
+                            q[3], q[4]) for q in queries])
+            resume = os.path.join(self.resume_dir, qsig[:32])
         result = run_rows(workloads, rows, specs, wave_cfg=cfg, hw=hw,
                           keys=keys, padding=mode,
                           stream=self.stream_chunk,
-                          on_chunk=on_chunk)
+                          on_chunk=on_chunk, resume=resume)
         self.last_result = result
 
         answers = []

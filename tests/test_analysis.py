@@ -217,6 +217,60 @@ def test_rpr006_mutable_default_fires_factory_does_not():
     assert sorted(f.line for f in hits(found, "RPR006")) == [7, 8]
 
 
+def test_rpr007_process_identity_in_traced_code_fires():
+    found = lint("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            pid = jax.process_index()          # line 6: traced constant
+            return x + pid
+
+        def shard_rows_jax(x):
+            return x * jax.process_count()     # line 10: *_jax is traced
+    """, rules=["RPR007"])
+    assert sorted(f.line for f in hits(found, "RPR007")) == [6, 10]
+    assert "same program" in hits(found, "RPR007")[0].message
+
+
+def test_rpr007_host_side_process_identity_passes():
+    found = lint("""
+        import jax
+
+        def local_rows(n):
+            # host-side slicing off process identity is the sanctioned use
+            p = jax.process_index()
+            per = n // jax.process_count()
+            return slice(p * per, (p + 1) * per)
+
+        def is_primary():
+            return jax.process_index() == 0
+    """, rules=["RPR007"])
+    assert hits(found, "RPR007") == []
+
+
+def test_rpr007_pytree_data_field_fires_meta_field_does_not():
+    found = lint("""
+        import dataclasses
+        import jax
+        from repro.core.smoothing.base import register_mitigation
+
+        @dataclasses.dataclass
+        class M:
+            alpha: float = 0.5
+            pid: int = jax.process_index()       # line 9: data-field leaf
+            n_procs: int = jax.process_count()   # meta field: host-side
+
+            def tune(self):
+                self.alpha = jax.process_index() * 0.1   # line 13
+
+        register_mitigation(M, data_fields=("alpha", "pid"),
+                            meta_fields=("n_procs",))
+    """, rules=["RPR007"])
+    got = hits(found, "RPR007")
+    assert sorted(f.line for f in got) == [9, 13]
+
+
 def test_syntax_error_reports_rpr000():
     found = lint("def broken(:\n")
     assert [f.rule for f in found] == ["RPR000"]

@@ -1,0 +1,119 @@
+"""Multi-host scenario-mesh driver: 2-process bit-parity against
+single-process, primary-only global progress, launch helpers, and the
+cross-process merge collectives.
+
+The heavy test launches real ``jax.distributed`` worker subprocesses
+(CPU + gloo, the subprocess-isolation pattern of test_streaming.py) and
+asserts the merged ``StudyResult`` records equal the single-process
+run's bit-for-bit — the acceptance-critical parity of PR 10.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.parallel import distributed
+from repro.parallel.collectives import gather_rows, host_allgather
+from repro.parallel.sharding import scenario_plan
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers (no distributed runtime needed)
+# ---------------------------------------------------------------------------
+
+def test_initialize_is_noop_without_contract(monkeypatch):
+    for var in (distributed.ENV_COORD, distributed.ENV_NPROCS,
+                distributed.ENV_PID):
+        monkeypatch.delenv(var, raising=False)
+    assert distributed.initialize() is False
+    assert distributed.is_primary()          # single-process is primary
+
+
+def test_worker_env_contract():
+    env = distributed.worker_env({"PYTHONPATH": "/elsewhere"},
+                                 coordinator="localhost:12345",
+                                 num_processes=2, process_id=1)
+    assert env[distributed.ENV_COORD] == "localhost:12345"
+    assert env[distributed.ENV_NPROCS] == "2"
+    assert env[distributed.ENV_PID] == "1"
+    src = env["PYTHONPATH"].split(os.pathsep)[0]
+    assert os.path.isdir(os.path.join(src, "repro"))
+    assert "/elsewhere" in env["PYTHONPATH"]
+
+
+def test_free_port_is_bindable():
+    import socket
+    port = distributed.free_port()
+    with socket.socket() as s:
+        s.bind(("localhost", port))
+
+
+def test_launch_workers_surfaces_worker_failure():
+    with pytest.raises(RuntimeError, match=r"(?s)worker .* exited .*boom"):
+        distributed.launch_workers(
+            [sys.executable, "-c", "import sys; sys.exit('boom')"],
+            num_processes=2, timeout=60)
+
+
+# ---------------------------------------------------------------------------
+# collectives: single-process branches are the engine's host pulls
+# ---------------------------------------------------------------------------
+
+def test_host_allgather_single_process_is_plain_asarray():
+    tree = {"a": np.arange(6.0), "b": {"c": np.ones((4, 2))}, "n": None}
+    out = host_allgather(tree, None)
+    assert np.array_equal(out["a"], tree["a"])
+    out2 = host_allgather(tree, scenario_plan(), take=3)
+    assert np.array_equal(out2["a"], tree["a"][:3])
+    assert np.array_equal(out2["b"]["c"], tree["b"]["c"][:3])
+    assert out2["n"] is None
+
+
+def test_gather_rows_single_process_matches_numpy():
+    x = np.arange(24.0).reshape(6, 4)
+    got = gather_rows(x, [4, 0, 2], None, length=3)
+    assert np.array_equal(got, x[[4, 0, 2]][:, :3])
+    got2 = gather_rows(x, [1, 1], scenario_plan())
+    assert np.array_equal(got2, x[[1, 1]])
+
+
+# ---------------------------------------------------------------------------
+# 2-process parity + primary-only progress (subprocess-simulated)
+# ---------------------------------------------------------------------------
+
+WORKER = """
+import json, sys
+from repro.parallel import distributed as D
+
+assert D.initialize(), "REPRO_DIST_* contract missing"
+study = D._smoke_study()
+study.plan = D.distributed_plan()
+calls = []
+res = study.run(stream=5, on_chunk=lambda d, t, e: calls.append((d, t)))
+if D.is_primary():
+    assert calls, "primary saw no on_chunk emissions"
+    done, total = calls[-1]
+    assert done == total == study.n_rows, (calls, study.n_rows)
+    assert all(t == study.n_rows for _, t in calls), calls
+    res.to_json(sys.argv[1])
+else:
+    assert calls == [], f"non-primary emitted progress: {calls}"
+print("DIST_WORKER_OK", D.process_index(), len(res), flush=True)
+"""
+
+
+def test_two_process_run_bit_identical_and_progress_global(tmp_path):
+    ref = distributed._smoke_study().run(stream=5)
+    script = tmp_path / "worker.py"
+    script.write_text(WORKER)
+    out = tmp_path / "records.json"
+    done = distributed.launch_workers(
+        [sys.executable, str(script), str(out)], num_processes=2,
+        timeout=600)
+    for r in done:
+        assert "DIST_WORKER_OK" in r.stdout, r.stdout
+    got = json.loads(out.read_text())
+    assert got == ref.to_records(), (
+        "2-process StudyResult differs from single-process")

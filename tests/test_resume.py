@@ -1,0 +1,192 @@
+"""Resumable checkpointed streaming: kill-and-resume bit-parity,
+append-extension without recompute, and the loud corruption paths
+(truncated checkpoint, fingerprint mismatch, chunk-size mismatch).
+
+The reference results come from uninterrupted runs of the same Study;
+every resumed/extended run must equal them record-for-record — the PR-5
+invariant (per-row values are chunk-composition independent) is what
+makes restoring some chunks from disk and computing the rest exact.
+"""
+import glob
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.ckpt import ResumeError, load_pytree_numpy, save_pytree
+from repro.ckpt.resume import SweepCheckpoint, record_positions, rows_chain
+
+STREAM = 4
+
+
+def _study(extra_workload=False, seeds=(0, 1)):
+    wl = {"w": core.synthetic_timeline(1.0, 0.3),
+          "w2": core.synthetic_timeline(2.0, 0.25, moe_notch=True)}
+    if extra_workload:
+        wl["w3"] = core.synthetic_timeline(1.5, 0.2)
+    gpu = lambda m: core.GpuPowerSmoothing(
+        mpf_frac=m, ramp_up_w_per_s=2000, ramp_down_w_per_s=2000,
+        stop_delay_s=1.0)
+    return core.Study(
+        wl, fleets=[128],
+        configs={"none": None, "a": (gpu(0.8), None), "b": (gpu(0.65), None)},
+        specs=core.example_specs(job_mw=0.05)["moderate"],
+        wave_cfg=core.WaveformConfig(dt=0.002, steps=3, jitter_s=0.002),
+        key=0, seeds=list(seeds))
+
+
+@pytest.fixture(scope="module")
+def ref():
+    return _study().run(stream=STREAM).to_records()
+
+
+@pytest.fixture(scope="module")
+def ref_ext():
+    return _study(extra_workload=True).run(stream=STREAM).to_records()
+
+
+class Kill(Exception):
+    """Stand-in for SIGKILL at a chunk boundary (the subprocess-level
+    kill is exercised by ``sweep_bench --resume-smoke`` in CI)."""
+
+
+def test_fresh_run_with_resume_dir_matches_plain(tmp_path, ref):
+    d = str(tmp_path / "ck")
+    got = _study().run(stream=STREAM, resume=d)
+    assert got.to_records() == ref
+    assert os.path.exists(os.path.join(d, "sweep.json"))
+    assert glob.glob(os.path.join(d, "chunks", "*", "chunk_*"))
+
+
+def test_kill_mid_stream_then_resume_is_bit_identical(tmp_path, ref):
+    d = str(tmp_path / "ck")
+
+    def die_after_two(done, total, elapsed):
+        if done >= 2 * STREAM:
+            raise Kill
+
+    with pytest.raises(Kill):
+        _study().run(stream=STREAM, resume=d, on_chunk=die_after_two)
+    survivors = glob.glob(os.path.join(d, "chunks", "*", "chunk_*"))
+    assert survivors, "kill before any checkpoint was written"
+
+    calls = []
+    got = _study().run(stream=STREAM, resume=d,
+                       on_chunk=lambda dn, t, e: calls.append((dn, t)))
+    assert got.to_records() == ref
+    # first emission reports the restored prefix in one global jump
+    assert calls[0][0] >= 2 * STREAM and calls[0][1] == calls[-1][0]
+
+
+def test_complete_restore_recomputes_nothing(tmp_path, ref):
+    d = str(tmp_path / "ck")
+    _study().run(stream=STREAM, resume=d)
+    saved = {p: os.path.getmtime(p) for p in
+             glob.glob(os.path.join(d, "chunks", "*", "chunk_*"))}
+    calls = []
+    got = _study().run(stream=STREAM, resume=d,
+                       on_chunk=lambda dn, t, e: calls.append((dn, t)))
+    assert got.to_records() == ref
+    # one emission per call stream, covering everything; no chunk rewritten
+    assert calls == [(12, 12)]
+    assert {p: os.path.getmtime(p) for p in saved} == saved
+
+
+def test_extension_computes_only_new_rows(tmp_path, ref_ext):
+    d = str(tmp_path / "ck")
+    _study().run(stream=STREAM, resume=d)
+    n_old_chunks = len(glob.glob(os.path.join(d, "chunks", "*", "chunk_*")))
+    calls = []
+    got = _study(extra_workload=True).run(
+        stream=STREAM, resume=d,
+        on_chunk=lambda dn, t, e: calls.append((dn, t)))
+    assert got.to_records() == ref_ext
+    # the old 12 rows arrive as one restored prefix; only w3's 6 rows run
+    assert calls[0] == (12, 18)
+    assert len(calls) == 1 + (6 + STREAM - 1) // STREAM
+    assert len(glob.glob(os.path.join(d, "chunks", "*", "chunk_*"))) \
+        > n_old_chunks
+
+
+def test_truncated_checkpoint_fails_loudly(tmp_path):
+    d = str(tmp_path / "ck")
+    _study().run(stream=STREAM, resume=d)
+    victim = sorted(glob.glob(
+        os.path.join(d, "chunks", "*", "chunk_*", "*.npy")))[0]
+    with open(victim, "r+b") as fh:
+        fh.truncate(8)
+    with pytest.raises(ResumeError, match="corrupt chunk checkpoint"):
+        _study().run(stream=STREAM, resume=d)
+
+
+def test_grid_fingerprint_mismatch_fails_loudly(tmp_path):
+    d = str(tmp_path / "ck")
+    _study().run(stream=STREAM, resume=d)
+    with pytest.raises(ResumeError, match="fingerprint mismatch"):
+        _study(seeds=(5, 6)).run(stream=STREAM, resume=d)
+    # shrinking the grid is not an extension either
+    with pytest.raises(ResumeError, match="extended, not shrunk"):
+        _study(seeds=(0,)).run(stream=STREAM, resume=d)
+
+
+def test_chunk_size_mismatch_fails_loudly(tmp_path):
+    d = str(tmp_path / "ck")
+    _study().run(stream=STREAM, resume=d)
+    with pytest.raises(ResumeError, match=f"stream={STREAM}"):
+        _study().run(stream=STREAM + 2, resume=d)
+
+
+def test_resume_requires_streaming_and_no_waveforms(tmp_path):
+    d = str(tmp_path / "ck")
+    with pytest.raises(ValueError, match="requires streaming"):
+        _study().run(resume=d)
+    s = _study()
+    s.keep_waveforms = True
+    with pytest.raises(ValueError, match="keep_waveforms"):
+        s.run(stream=STREAM, resume=d)
+
+
+def test_unreadable_sweep_manifest_fails_loudly(tmp_path):
+    d = str(tmp_path / "ck")
+    _study().run(stream=STREAM, resume=d)
+    with open(os.path.join(d, "sweep.json"), "w") as fh:
+        fh.write("{not json")
+    with pytest.raises(ResumeError, match="unreadable sweep manifest"):
+        _study().run(stream=STREAM, resume=d)
+
+
+# ---------------------------------------------------------------------------
+# unit level: fingerprints, positions, object-dtype checkpoint leaves
+# ---------------------------------------------------------------------------
+
+def test_rows_chain_prefix_semantics():
+    wl = {"w": core.synthetic_timeline(1.0, 0.3)}
+    cfgs = core.MitigationConfig("none")
+    rows = [("w", 128, cfgs, s) for s in range(5)]
+    full = rows_chain(wl, rows, None, at=[3, 5])
+    pre = rows_chain(wl, rows[:3], None, at=[3])
+    assert full[3] == pre[3]
+    assert full[5] != full[3]
+    other = rows_chain(wl, rows[:2] + [("w", 256, cfgs, 2)] + rows[3:],
+                       None, at=[3])
+    assert other[3] != full[3]
+
+
+def test_record_positions_interleave():
+    assert list(record_positions(np.asarray([2, 5]), 3)) \
+        == [6, 7, 8, 15, 16, 17]
+
+
+def test_object_dtype_checkpoint_roundtrip(tmp_path):
+    cols = np.empty(3, dtype=object)
+    cols[0], cols[1], cols[2] = {"a": 1.5}, ("x", "y"), None
+    tree = {"cols": {"metrics": cols}, "rows": np.arange(3)}
+    d = str(tmp_path / "step")
+    save_pytree(d, tree, step=0)
+    leaves, manifest = load_pytree_numpy(d)
+    assert manifest["leaves"]["cols/metrics"]["object"] is True
+    got = leaves["cols/metrics"]
+    assert got[0] == {"a": 1.5} and got[1] == ("x", "y") and got[2] is None
+    assert np.array_equal(leaves["rows"], np.arange(3))
